@@ -1,0 +1,48 @@
+"""Framework-level kernel microbenchmarks (interpret-mode wall times are NOT
+TPU perf — the derived column is the correctness gap vs the jnp oracle; the
+TPU roofline lives in EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels import ops, ref
+from repro.kernels.pairwise_l2 import pairwise_l2
+from repro.kernels.flash_attention import flash_attention
+
+
+def run(quick: bool = False):
+    k = jax.random.PRNGKey(0)
+    # pairwise_l2 at the paper's real scale: 100 clients × w_fc2 (2240)
+    x = jax.random.normal(k, (100, 2240))
+    c = jax.random.normal(jax.random.PRNGKey(1), (10, 2240))
+    out, us = time_fn(lambda: pairwise_l2(x, c).block_until_ready(),
+                      repeats=3)
+    err = float(jnp.max(jnp.abs(out - ref.pairwise_l2_ref(x, c))))
+    emit("kernels/pairwise_l2_100x10x2240", us, f"maxerr={err:.2e}")
+
+    s = 128 if quick else 256
+    q = jax.random.normal(k, (1, 4, s, 64))
+    kk = jax.random.normal(jax.random.PRNGKey(2), (1, 4, s, 64))
+    v = jax.random.normal(jax.random.PRNGKey(3), (1, 4, s, 64))
+    out, us = time_fn(lambda: flash_attention(q, kk, v, bq=128, bk=128)
+                      .block_until_ready(), repeats=2)
+    err = float(jnp.max(jnp.abs(out - ref.flash_attention_ref(q, kk, v))))
+    emit(f"kernels/flash_attn_s{s}", us, f"maxerr={err:.2e}")
+
+    B, S, H, P, N = 1, 256, 4, 32, 16
+    xs = jax.random.normal(k, (B, S, H, P)) * 0.5
+    a = -jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(4), (B, S, H)))
+    bm = jax.random.normal(jax.random.PRNGKey(5), (B, S, 1, N)) * 0.3
+    cm = jax.random.normal(jax.random.PRNGKey(6), (B, S, 1, N)) * 0.3
+    (y, h), us = time_fn(lambda: jax.block_until_ready(
+        ops.ssd(xs, a, bm, cm, chunk=64, use_pallas=True)), repeats=2)
+    y_r, _ = ops.ssd(xs, a, bm, cm, use_pallas=False)
+    err = float(jnp.max(jnp.abs(y - y_r)))
+    emit(f"kernels/ssd_scan_s{S}", us, f"maxerr={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Shared benchmark utilities. Every benchmark prints CSV rows:
+``name,us_per_call,derived`` where ``derived`` is the paper-facing quantity
+(a delay in ms, an ARI, a round count, ...)."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+@contextmanager
+def timed():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+    box["us"] = box["s"] * 1e6
+
+
+def time_fn(fn, *args, repeats: int = 5, warmup: int = 1, **kw):
+    for _ in range(warmup):
+        fn(*args, **kw)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6

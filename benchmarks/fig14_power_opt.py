@@ -1,0 +1,38 @@
+"""Fig. 14 / Appendix E: delay vs shared transmit power + Algorithm 6's
+binary-search optimum."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core.wireless import sample_fleet, fleet_arrays, dbm_to_watt
+from repro.core.sao import solve_sao
+from repro.core.power import optimal_transmit_power
+
+B = 20.0
+
+
+def run(quick: bool = False):
+    # a tight-energy regime makes the delay-vs-power curve non-monotone
+    fleet = sample_fleet(100, seed=0, e_cons_range=(35e-3, 35e-3)) \
+        .select(np.arange(10))
+    grid = [10, 14, 18, 21, 23] if quick else list(range(10, 24))
+    best = (1e9, None)
+    for p_dbm in grid:
+        arr = fleet_arrays(fleet.with_power(dbm_to_watt(p_dbm)))
+        T, us = time_fn(lambda: float(solve_sao(arr, B).T), repeats=1,
+                        warmup=0)
+        emit(f"fig14/grid_T_ms_at_{p_dbm}dBm", us, f"{T*1e3:.2f}")
+        best = min(best, (T, p_dbm))
+
+    res, us = time_fn(lambda: optimal_transmit_power(fleet, B), repeats=1,
+                      warmup=0)
+    emit("fig14/alg6_p_star_dbm", us, f"{res.p_star_dbm:.2f}")
+    emit("fig14/alg6_T_star_ms", us, f"{res.T_star*1e3:.2f}")
+    emit("fig14/grid_best_p_dbm", us, f"{best[1]}")
+    emit("fig14/alg6_within_grid_best", us,
+         str(res.T_star <= best[0] * 1.05))
+
+
+if __name__ == "__main__":
+    run()

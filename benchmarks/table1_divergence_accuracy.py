@@ -1,0 +1,75 @@
+"""Table I: the divergence→accuracy link that motivates Algorithm 4.
+
+Fix the global model and the selections in all clusters but one; from the
+probe cluster, try each member device in turn and measure the next-round
+accuracy ON THAT CLUSTER'S MAJORITY CLASS. The paper's claim: the device
+with the largest weight divergence yields the highest accuracy.
+"""
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import FLConfig
+from repro.configs.paper_cnn import CNN_CONFIGS
+from repro.core import FLExperiment, sample_fleet
+from repro.data import make_dataset, partition_bias
+
+
+def run(quick: bool = False):
+    dataset = "fashion"
+    clients = 30
+    ds = make_dataset(dataset, 2500, seed=7)
+    test = make_dataset(dataset, 800, seed=90_001)
+    fed = partition_bias(ds, clients, 96, 0.8, seed=3)
+    fleet = sample_fleet(clients, seed=0)
+    fl = FLConfig(num_devices=clients, devices_per_round=10, local_iters=20,
+                  num_clusters=10, learning_rate=0.08)
+    exp = FLExperiment(CNN_CONFIGS[dataset], fed, test.images, test.labels,
+                       fleet, fl, seed=0)
+    # warm up: a few kmeans_random rounds (paper protocol)
+    exp.run("kmeans_random", rounds=2 if quick else 5)
+
+    # probe cluster = the largest one
+    probe = int(np.argmax([len(c) for c in exp.clusters]))
+    members = exp.clusters[probe]
+    majority = np.bincount(fed.majority[members]).argmax()
+    others = [c for i, c in enumerate(exp.clusters) if i != probe and len(c)]
+    rng = np.random.default_rng(0)
+    fixed = np.array([rng.choice(c) for c in others])
+    div = exp.divergences()
+
+    t0 = time.time()
+    snapshot = (exp.global_params, exp.client_params)
+    results = []
+    for dev in members:
+        exp.global_params, exp.client_params = snapshot
+        idx = np.concatenate([fixed, [dev]])
+        new_params = exp.train_clients(idx)
+        exp.aggregate(new_params, idx)
+        _, per_class = exp.evaluate()
+        results.append((float(div[dev]), float(per_class[majority])))
+    us = (time.time() - t0) * 1e6 / max(len(members), 1)
+
+    results_sorted = sorted(results)
+    best_by_div = max(results)[1]              # accuracy of highest-divergence
+    accs = [a for _, a in results]
+    rank_of_best = int(np.argsort([a for _, a in results])[-1])
+    emit("table1/cluster_size", us, str(len(members)))
+    emit("table1/acc_of_max_divergence_device", us, f"{best_by_div:.3f}")
+    emit("table1/max_acc_over_devices", us, f"{max(accs):.3f}")
+    emit("table1/mean_acc_over_devices", us, f"{np.mean(accs):.3f}")
+    # Spearman-ish check: correlation divergence vs accuracy
+    if len(results) > 2:
+        d = np.array([x for x, _ in results])
+        a = np.array(accs)
+        corr = np.corrcoef(np.argsort(np.argsort(d)),
+                           np.argsort(np.argsort(a)))[0, 1]
+        emit("table1/rank_correlation", us, f"{corr:.3f}")
+
+
+if __name__ == "__main__":
+    run()

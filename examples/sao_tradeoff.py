@@ -1,0 +1,46 @@
+"""Resource-allocation study: delay vs power / energy-budget trade-offs and
+the Appendix-E transmit-power optimizer (Figures 6, 7, 14 interactively).
+
+Run:  PYTHONPATH=src python examples/sao_tradeoff.py
+"""
+import numpy as np
+
+from repro.core import sample_fleet, fleet_arrays, solve_sao
+from repro.core.baselines import equal_bandwidth
+from repro.core.power import optimal_transmit_power
+from repro.core.wireless import dbm_to_watt
+
+B = 20.0
+
+
+def main():
+    fleet10 = sample_fleet(100, seed=0, e_cons_range=(35e-3, 35e-3)) \
+        .select(np.arange(10))
+
+    print("=== delay vs transmit power (e_cons = 35 mJ) ===")
+    print(f"{'p[dBm]':>7s} {'SAO T[ms]':>10s} {'equal T[ms]':>11s}")
+    for p in range(10, 24, 2):
+        arr = fleet_arrays(fleet10.with_power(dbm_to_watt(p)))
+        t_sao = float(solve_sao(arr, B).T) * 1e3
+        t_eq = float(equal_bandwidth(arr, B).T) * 1e3
+        print(f"{p:7d} {t_sao:10.1f} {t_eq:11.1f}")
+
+    print("\n=== Algorithm 6: optimal shared transmit power ===")
+    res = optimal_transmit_power(fleet10, B)
+    print(f"p* = {res.p_star_dbm:.2f} dBm -> T* = {res.T_star*1e3:.1f} ms "
+          f"({len(res.history)} probes)")
+
+    print("\n=== delay vs per-device energy budget (p = 23 dBm) ===")
+    print(f"{'e[mJ]':>6s} {'SAO T[ms]':>10s} {'paper-SAO':>10s} "
+          f"{'box-fix':>8s}")
+    for e in [30, 35, 40, 45, 50]:
+        fl = sample_fleet(100, seed=0, e_cons_range=(e * 1e-3, e * 1e-3)) \
+            .select(np.arange(10))
+        arr = fleet_arrays(fl)
+        t_p = float(solve_sao(arr, B).T) * 1e3
+        t_b = float(solve_sao(arr, B, box_correct=True).T) * 1e3
+        print(f"{e:6d} {min(t_p, t_b):10.1f} {t_p:10.1f} {t_b:8.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Batched serving demo: generate from reduced variants of three assigned
+families (dense GQA, Mamba2/SSD, encoder-decoder) through the ServeEngine —
+prefill + cached decode, greedy and sampled.
+
+Run:  PYTHONPATH=src python examples/serve_demo.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models import init_model
+from repro.serve import ServeEngine
+
+
+def demo(arch: str, batch: int = 4, prompt_len: int = 8, gen: int = 16):
+    cfg = get_smoke_config(arch)
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, max_len=prompt_len + gen + 1)
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                                 0, cfg.vocab_size)
+    kw = {}
+    if cfg.is_encoder_decoder:
+        kw["src_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (batch, 16, cfg.d_model)) * 0.1
+    t0 = time.time()
+    out = eng.generate(prompts, num_tokens=gen, **kw)
+    dt = time.time() - t0
+    print(f"{arch:22s} batch={batch} generated {gen} tokens "
+          f"({batch*gen/dt:.1f} tok/s on CPU)")
+    print(f"  first row: {out[0].tolist()}")
+    # sampled variant
+    out2 = eng.generate(prompts, num_tokens=gen, sampler="temperature",
+                        key=jax.random.PRNGKey(3), temp=1.0, **kw)
+    diverse = (out != out2).mean()
+    print(f"  temperature sampling differs on {diverse*100:.0f}% of tokens")
+
+
+if __name__ == "__main__":
+    for arch in ["tinyllama-1.1b", "mamba2-130m", "seamless-m4t-medium"]:
+        demo(arch)

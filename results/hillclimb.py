@@ -1,0 +1,194 @@
+"""Perf hillclimb driver (§Perf): run the three chosen (arch × shape) pairs
+through lever sequences, appending annotated records to
+results/hillclimb.jsonl.
+
+  PYTHONPATH=src python results/hillclimb.py [--pair A|B|C|seamless] [--iter N]
+"""
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+from repro.launch.fl_round import lower_fl_round  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+from repro.roofline.analysis import analyze_compiled  # noqa: E402
+from repro.configs.base import InputShape  # noqa: E402
+
+OUT = "results/hillclimb.jsonl"
+
+# iteration plans: (tag, hypothesis, run_one kwargs)
+PAIRS = {
+    "A": ("jamba-1.5-large-398b", "train_4k", [
+        ("A0-baseline", "paper-faithful baseline: dense MoE, fp32 moments, "
+         "no act constraints", {}),
+        ("A1-dispatch-moe",
+         "dense MoE evaluates all 16 experts (top-2 used) -> ~8x excess "
+         "FLOPs on MoE layers and huge [T,E,F] intermediates; sort-based "
+         "capacity dispatch should cut total FLOPs ~2-3x (MoE layers "
+         "dominate) and slash peak memory",
+         {"moe_impl": "dispatch"}),
+        ("A2-bf16-moments",
+         "Adam m,v are 3.2TB fp32 global (12.5GB/dev) -> bf16 moments "
+         "halve optimizer state: peak -6GB/dev",
+         {"moe_impl": "dispatch", "moment_dtype": "bfloat16"}),
+        ("A3-act-constraints",
+         "GSPMD picks replicated layouts for some [T,D] activations "
+         "(involuntary-remat warnings); explicit batch-sharded constraints "
+         "on block outputs should drop peak further",
+         {"moe_impl": "dispatch", "moment_dtype": "bfloat16",
+          "act_constraints": True}),
+    ]),
+    "B": ("qwen2-72b", "train_4k", [
+        ("B0-baseline", "paper-faithful baseline", {}),
+        ("B1-act-constraints",
+         "334GB/dev peak with only 2.8GB of state -> activations/logits "
+         "are replicated somewhere; constraining activations to "
+         "batch-sharded and logits to (batch, vocab-model) layouts should "
+         "cut peak several-fold and reduce all-gather bytes",
+         {"act_constraints": True}),
+        ("B2-bf16-moments",
+         "moments 576GB fp32 global = 2.25GB/dev -> bf16 halves",
+         {"act_constraints": True, "moment_dtype": "bfloat16"}),
+        ("B3-qchunk2048",
+         "q_chunk 512 -> 2048 quarters the lax.map trip count; HLO loop "
+         "overhead and per-block collective launches shrink; VMEM tile "
+         "grows but stays < v5e VMEM",
+         {"act_constraints": True, "moment_dtype": "bfloat16",
+          "q_chunk": 2048}),
+    ]),
+    "Afix": ("jamba-1.5-large-398b", "train_4k", [
+        ("A2b-dense-bf16-moments",
+         "A1 refuted: global argsort/gather/scatter in the dispatch path "
+         "cannot be GSPMD-partitioned (sorts are global) -> collectives "
+         "exploded 28->319s. Branch from the DENSE einsum (which shards "
+         "cleanly on the expert axis) and attack the memory bottleneck "
+         "instead: bf16 moments cut optimizer state 3.2TB->1.6TB "
+         "(-6.2GB/dev)",
+         {"moment_dtype": "bfloat16"}),
+        ("A3b-dense-bf16-act",
+         "add batch-sharded activation constraints: stop involuntary "
+         "replication of [T,D] intermediates flagged by SPMD warnings",
+         {"moment_dtype": "bfloat16", "act_constraints": True}),
+    ]),
+    "M": ("mixtral-8x22b", "train_4k", [
+        ("M0-baseline", "most collective-bound pair in the baseline table "
+         "(85.6s collective vs 50.6s memory vs 23.9s compute)", {}),
+        ("M1-fused-gate-moe",
+         "mixtral E=8 % 16 != 0 -> FFN-dim sharding; the down-proj psum "
+         "then carries per-expert partials [T,E,D] = 8x the necessary "
+         "bytes. Applying router gates BEFORE the (e,f) contraction "
+         "reduces the cross-shard reduction to [T,D]: predict the "
+         "collective term down ~3-5x (fwd+bwd both shrink)",
+         {"moe_impl": "dense_fused"}),
+        ("M2-fused+act",
+         "add batch-sharded activation constraints to remove involuntary "
+         "reshard collectives around attention reshapes",
+         {"moe_impl": "dense_fused", "act_constraints": True}),
+        ("M3-fused+act+bf16m",
+         "moments 2x141B fp32 = 1.13TB global; bf16 halves -> peak "
+         "-2.2GB/dev (memory-side cleanup once collectives are down)",
+         {"moe_impl": "dense_fused", "act_constraints": True,
+          "moment_dtype": "bfloat16"}),
+    ]),
+    "seamless": ("seamless-m4t-medium", "train_4k", [
+        ("S0-baseline", "vocab 256206 % 16 != 0 -> lm_head replicated -> "
+         "[B,S,V] logits replicated (67GB fp32)", {}),
+        ("S1-pad-vocab",
+         "pad physical vocab to a multiple of 128 (256256): logits shard "
+         "16-way over model -> peak should drop ~10x on the logits path",
+         {"pad_vocab": 128}),
+        ("S2-pad+act",
+         "add activation constraints on top",
+         {"pad_vocab": 128, "act_constraints": True}),
+    ]),
+}
+
+
+def run_pair(pair: str, only_iter=None):
+    arch, shape, iters = PAIRS[pair]
+    for i, (tag, hyp, kw) in enumerate(iters):
+        if only_iter is not None and i != only_iter:
+            continue
+        print(f"### {tag}: {hyp[:90]}", flush=True)
+        t0 = time.time()
+        d = dryrun.run_one(arch, shape, "single", verbose=False, twin=True,
+                           **kw)
+        d["tag"] = tag
+        d["hypothesis"] = hyp
+        d["wall_s"] = round(time.time() - t0, 1)
+        with open(OUT, "a") as f:
+            f.write(json.dumps(d, default=str) + "\n")
+        print(json.dumps({k: d[k] for k in
+                          ("tag", "compute_s", "memory_s", "collective_s",
+                           "bottleneck", "useful_ratio",
+                           "peak_memory_per_device", "compile_s")},
+                         indent=1, default=str), flush=True)
+
+
+def run_fl_pair(only_iter=None):
+    """Pair C: the paper's FL round (selection + aggregation) sharded over
+    the single-pod mesh with tinyllama-1.1b clients."""
+    from repro.configs.base import INPUT_SHAPES
+    cfg = get_config("tinyllama-1.1b")
+    mesh = make_production_mesh(multi_pod=False)
+    shape = InputShape("fl_round_128c", 0, 128, "decode")  # 128 clients
+    iters = [
+        ("C0-baseline",
+         "full lm_head (65.5M dims) K-means features: the assignment "
+         "matmul is 128x65.5Mx10 = 168 GFLOP and feats materialize 33GB "
+         "fp32; divergence reductions stream all client weights", 0),
+        ("C1-feature-slice-4096",
+         "the paper's own w_fc2 insight at LM scale: cluster on a 4096-dim "
+         "slice of lm_head -> assignment FLOPs down 16000x, feats "
+         "materialization 16000x smaller; divergence (all layers) now "
+         "dominates, collective mix should shift to the aggregation "
+         "reduce", 4096),
+    ]
+    for i, (tag, hyp, fslice) in enumerate(iters):
+        if only_iter is not None and i != only_iter:
+            continue
+        print(f"### {tag}", flush=True)
+        t0 = time.time()
+        lowered = lower_fl_round(cfg, mesh, num_clients=128,
+                                 feature_slice=fslice)
+        compiled = lowered.compile()
+        rep = analyze_compiled(compiled, arch="fl_round/tinyllama-1.1b",
+                               shape=shape, mesh_name="single", chips=256,
+                               cfg=cfg, include_backward=False)
+        d = rep.to_dict()
+        # MODEL_FLOPS isn't meaningful for the scheduler step; override with
+        # the useful work: divergence+aggregation ≈ 4 flops/param/client
+        n = cfg.num_params()
+        d["model_flops_global"] = 4.0 * n * 128
+        d["tag"] = tag
+        d["hypothesis"] = hyp
+        d["wall_s"] = round(time.time() - t0, 1)
+        try:
+            ma = compiled.memory_analysis()
+            d["peak_memory_per_device"] = float(
+                ma.temp_size_in_bytes + ma.argument_size_in_bytes
+                + ma.output_size_in_bytes - ma.alias_size_in_bytes)
+        except Exception:
+            pass
+        with open(OUT, "a") as f:
+            f.write(json.dumps(d, default=str) + "\n")
+        print(json.dumps({k: d[k] for k in
+                          ("tag", "compute_s", "memory_s", "collective_s",
+                           "bottleneck", "peak_memory_per_device")},
+                         indent=1, default=str), flush=True)
+        del lowered, compiled
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="A", choices=list(PAIRS) + ["C"])
+    ap.add_argument("--iter", type=int, default=None)
+    args = ap.parse_args()
+    if args.pair == "C":
+        run_fl_pair(args.iter)
+    else:
+        run_pair(args.pair, args.iter)

@@ -1,0 +1,32 @@
+"""Emit the §Inventory table for EXPERIMENTS.md (module/LOC census)."""
+import os
+import subprocess
+
+ROOTS = ["src/repro", "tests", "benchmarks", "examples", "results"]
+
+
+def loc(path):
+    out = 0
+    for dirpath, _, files in os.walk(path):
+        for f in files:
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f)) as fh:
+                    out += sum(1 for _ in fh)
+    return out
+
+
+if __name__ == "__main__":
+    total = 0
+    print("| package | python LOC |")
+    print("|---|---|")
+    for sub in sorted(os.listdir("src/repro")):
+        p = os.path.join("src/repro", sub)
+        if os.path.isdir(p):
+            n = loc(p)
+            total += n
+            print(f"| src/repro/{sub} | {n} |")
+    for r in ["tests", "benchmarks", "examples", "results"]:
+        n = loc(r)
+        total += n
+        print(f"| {r} | {n} |")
+    print(f"| **total** | **{total}** |")

@@ -1,0 +1,64 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONL artifacts."""
+import json
+import sys
+
+
+def load(path):
+    try:
+        return [json.loads(l) for l in open(path)]
+    except FileNotFoundError:
+        return []
+
+
+def merge(scan_rows, twin_rows):
+    """Twin rows carry roofline terms; scan rows carry memory. Twin files
+    already merge both (run_one with twin=True), so prefer them."""
+    by_key = {}
+    for r in scan_rows:
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    for r in twin_rows:
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    return by_key
+
+
+def fmt_mem(r):
+    pm = r.get("peak_memory_per_device")
+    return f"{pm/1e9:.1f}" if pm else "?"
+
+
+def dryrun_table(rows):
+    out = ["| arch | shape | mesh | compile[s] | peak mem/dev [GB] | "
+           "fits 16GB |", "|---|---|---|---|---|---|"]
+    for r in rows:
+        pm = r.get("peak_memory_per_device") or 0
+        fits = "yes" if pm and pm <= 16e9 else ("NO" if pm else "?")
+        out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                   f"{r['compile_s']} | {fmt_mem(r)} | {fits} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows):
+    out = ["| arch | shape | compute[s] | memory[s] | collective[s] | "
+           "bottleneck | useful | peak mem [GB] |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if "twin_compile_s" not in r:
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | {fmt_mem(r)} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    scan_s = load("results/dryrun_scan_single.jsonl")
+    scan_m = load("results/dryrun_scan_multi.jsonl")
+    twin = load("results/dryrun_twin_single.jsonl")
+    merged = merge(scan_s, twin)
+    print("## single-pod (16x16 = 256 chips)\n")
+    print(dryrun_table(list(merged.values())))
+    print("\n## multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(scan_m))
+    print("\n## roofline (single-pod, from unrolled twins)\n")
+    print(roofline_table(list(merged.values())))

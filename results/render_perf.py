@@ -1,0 +1,50 @@
+"""Render the §Perf hillclimb log from results/hillclimb.jsonl into
+markdown (hypothesis → change → before → after → verdict)."""
+import json
+from collections import defaultdict
+
+
+def main():
+    rows = [json.loads(l) for l in open("results/hillclimb.jsonl")]
+    by_pair = defaultdict(list)
+    for r in rows:
+        by_pair[r["tag"][0]].append(r)
+
+    names = {"A": "Pair A — jamba-1.5-large-398b × train_4k (worst roofline)",
+             "M": "Pair M — mixtral-8x22b × train_4k (most collective-bound)",
+             "B": "Bonus — qwen2-72b × train_4k (worst dense)",
+             "S": "Bonus — seamless-m4t-medium × train_4k (vocab divisibility)",
+             "C": "Pair C — FL round × tinyllama-1.1b (the paper's technique)"}
+
+    for key in ["A", "M", "C", "B", "S"]:
+        seq = by_pair.get(key)
+        if not seq:
+            continue
+        print(f"\n### {names.get(key, key)}\n")
+        print("| iter | compute[s] | memory[s] | collective[s] | bottleneck "
+              "| useful | peak/dev [GB] |")
+        print("|---|---|---|---|---|---|---|")
+        base = seq[0]
+        for r in seq:
+            pm = r.get("peak_memory_per_device")
+            pm = f"{pm/1e9:.1f}" if pm else "?"
+            print(f"| {r['tag']} | {r['compute_s']:.3g} | "
+                  f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | "
+                  f"{r['bottleneck']} | {r.get('useful_ratio', 0):.2f} | "
+                  f"{pm} |")
+        print()
+        for prev, r in zip(seq, seq[1:]):
+            dom_key = {"compute": "compute_s", "memory": "memory_s",
+                       "collective": "collective_s"}[prev["bottleneck"]]
+            before, after = prev[dom_key], r[dom_key]
+            verdict = ("CONFIRMED" if after < before * 0.95 else
+                       ("NEUTRAL" if after < before * 1.05 else "REFUTED"))
+            delta = (1 - after / before) * 100 if before else 0
+            print(f"- **{r['tag']}** — hypothesis: {r['hypothesis']}  \n"
+                  f"  dominant term ({prev['bottleneck']}): "
+                  f"{before:.3g}s → {after:.3g}s "
+                  f"({delta:+.1f}% reduction) → **{verdict}**")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Architecture registry: ``--arch <id>`` resolution.
+
+Every assigned architecture is importable lazily so that importing
+``repro.configs`` stays cheap and never touches jax device state.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    InputShape,
+    INPUT_SHAPES,
+    LONG_CONTEXT_WINDOW,
+    TrainConfig,
+    FLConfig,
+)
+from repro.configs.paper_cnn import CNN_CONFIGS, CNNConfig
+
+_ARCH_MODULES: Dict[str, str] = {
+    "minitron-8b": "repro.configs.minitron_8b",
+    "phi-3-vision-4.2b": "repro.configs.phi_3_vision_4_2b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "seamless-m4t-medium": "repro.configs.seamless_m4t_medium",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch_id]).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ModelConfig:
+    return importlib.import_module(_ARCH_MODULES[arch_id]).smoke_config()
+
+
+def get_input_shape(name: str) -> InputShape:
+    return INPUT_SHAPES[name]

@@ -1,0 +1,153 @@
+"""K-means device clustering — paper §IV-A/B, Algorithms 2-3.
+
+The paper's finding (Fig. 4/8/9): training K-means on the weights of a
+single late layer (``w_fc2``) is both faster (feature dim 2240 vs 113744)
+and *more* discriminative of the client's majority class than using all
+weights. ``extract_features`` implements exactly that layer selection; the
+K-means itself is jitted Lloyd iterations with k-means++ seeding.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.trees import tree_flatten_vector
+
+
+# ---------------------------------------------------------------------------
+# feature extraction (paper: model weights of ONE layer as the feature)
+# ---------------------------------------------------------------------------
+
+
+def extract_features(stacked_params: Dict, layer: str = "auto") -> jnp.ndarray:
+    """Feature matrix [N_clients, F] from a client-stacked param tree.
+
+    layer="auto" picks the paper's choice: ``w_fc2`` for the paper CNN,
+    otherwise the last 2-D projection-like leaf (lm_head / out_proj).
+    layer="all" flattens everything (the slow baseline of Fig. 8).
+    A specific leaf name ("w_c1", "b_fc2", ...) selects that leaf.
+    """
+    if layer == "all":
+        leaves = jax.tree_util.tree_leaves(stacked_params)
+        return jnp.concatenate(
+            [l.reshape(l.shape[0], -1).astype(jnp.float32) for l in leaves], axis=1)
+    if layer == "auto":
+        if isinstance(stacked_params, dict) and "w_fc2" in stacked_params:
+            layer = "w_fc2"
+        elif isinstance(stacked_params, dict) and "lm_head" in stacked_params:
+            layer = "lm_head"
+        else:  # fall back to the largest final leaf
+            flat = jax.tree_util.tree_leaves_with_path(stacked_params)
+            path, leaf = flat[-1]
+            return leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+    leaf = _lookup(stacked_params, layer)
+    return leaf.reshape(leaf.shape[0], -1).astype(jnp.float32)
+
+
+def _lookup(tree, name):
+    if isinstance(tree, dict):
+        if name in tree:
+            return tree[name]
+        for v in tree.values():
+            try:
+                return _lookup(v, name)
+            except KeyError:
+                continue
+    raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
+# K-means (Lloyd + k-means++), jitted
+# ---------------------------------------------------------------------------
+
+
+def _pairwise_sq_dists(x, c):
+    """[N, F] × [C, F] -> [N, C] squared Euclidean distances."""
+    # streaming-friendly expansion; the Pallas pairwise_l2 kernel implements
+    # the fused single-read version for TPU (repro.kernels)
+    xn = jnp.sum(jnp.square(x), axis=1, keepdims=True)
+    cn = jnp.sum(jnp.square(c), axis=1)[None, :]
+    return jnp.maximum(xn + cn - 2.0 * x @ c.T, 0.0)
+
+
+def kmeans_plus_plus_init(key, x, c: int):
+    """k-means++ seeding."""
+    n = x.shape[0]
+    keys = jax.random.split(key, c)
+    idx0 = jax.random.randint(keys[0], (), 0, n)
+    centroids = jnp.zeros((c, x.shape[1]), x.dtype).at[0].set(x[idx0])
+
+    def add_centroid(i, centroids):
+        d = _pairwise_sq_dists(x, centroids)
+        # distance to nearest chosen centroid (unchosen rows are zeros ->
+        # mask them by only taking first i columns via where)
+        col_mask = jnp.arange(centroids.shape[0]) < i
+        d = jnp.where(col_mask[None, :], d, jnp.inf)
+        dmin = jnp.min(d, axis=1)
+        p = dmin / jnp.maximum(jnp.sum(dmin), 1e-12)
+        idx = jax.random.choice(keys[i], n, p=p)
+        return centroids.at[i].set(x[idx])
+
+    return jax.lax.fori_loop(1, c, add_centroid, centroids)
+
+
+@functools.partial(jax.jit, static_argnames=("c", "iters"))
+def kmeans_fit(key, x: jnp.ndarray, c: int, iters: int = 50):
+    """Lloyd's algorithm, eqs (13)-(14). Returns (centroids, labels, inertia)."""
+    x = x.astype(jnp.float32)
+    centroids = kmeans_plus_plus_init(key, x, c)
+
+    def step(_, centroids):
+        d = _pairwise_sq_dists(x, centroids)                 # (13)
+        labels = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+        counts = jnp.sum(onehot, axis=0)
+        sums = onehot.T @ x
+        new = sums / jnp.maximum(counts, 1.0)[:, None]       # (14)
+        # keep old centroid for empty clusters
+        return jnp.where((counts > 0)[:, None], new, centroids)
+
+    centroids = jax.lax.fori_loop(0, iters, step, centroids)
+    d = _pairwise_sq_dists(x, centroids)
+    labels = jnp.argmin(d, axis=1)
+    inertia = jnp.sum(jnp.min(d, axis=1))
+    return centroids, labels, inertia
+
+
+def kmeans_predict(centroids, x):
+    return jnp.argmin(_pairwise_sq_dists(x.astype(jnp.float32), centroids), axis=1)
+
+
+def clusters_from_labels(labels: np.ndarray, c: int):
+    """Algorithm 2 output form: list of index arrays {N_1..N_c}."""
+    labels = np.asarray(labels)
+    return [np.flatnonzero(labels == i) for i in range(c)]
+
+
+# ---------------------------------------------------------------------------
+# Adjusted Rand Index (Fig. 9 metric)
+# ---------------------------------------------------------------------------
+
+
+def adjusted_rand_index(pred: np.ndarray, truth: np.ndarray) -> float:
+    """Standard ARI (Hubert & Arabie 1985) — the paper's eq. (24) metric."""
+    pred = np.asarray(pred)
+    truth = np.asarray(truth)
+    n = len(pred)
+    pv, pi = np.unique(pred, return_inverse=True)
+    tv, ti = np.unique(truth, return_inverse=True)
+    cont = np.zeros((len(pv), len(tv)), np.int64)
+    np.add.at(cont, (pi, ti), 1)
+    comb = lambda x: x * (x - 1) / 2.0
+    sum_ij = comb(cont).sum()
+    a = comb(cont.sum(axis=1)).sum()
+    b = comb(cont.sum(axis=0)).sum()
+    expected = a * b / comb(n)
+    max_index = 0.5 * (a + b)
+    if max_index == expected:
+        return 1.0
+    return float((sum_ij - expected) / (max_index - expected))

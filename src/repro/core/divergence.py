@@ -1,0 +1,29 @@
+"""Weight divergence — paper §IV-C, the selection signal of Algorithm 4.
+
+d_n = ‖w_n − w_global‖₂ over ALL layers (the paper: "we consider the model
+weights of all the layers during calculating the weight divergence").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weight_divergence(stacked_client_params, global_params) -> jnp.ndarray:
+    """[N_clients] Euclidean distances between each client model and the
+    global model. Client params are stacked on a leading axis (mesh-friendly:
+    that axis shards over ``data``)."""
+    def leaf_sq(cl, gl):
+        diff = cl.astype(jnp.float32) - gl.astype(jnp.float32)[None]
+        return jnp.sum(jnp.square(diff).reshape(diff.shape[0], -1), axis=1)
+
+    sq = jax.tree_util.tree_map(leaf_sq, stacked_client_params, global_params)
+    total = sum(jax.tree_util.tree_leaves(sq))
+    return jnp.sqrt(total)
+
+
+def pairwise_divergence_matrix(features: jnp.ndarray) -> jnp.ndarray:
+    """[N, N] Euclidean distance matrix (Fig. 4's visualization)."""
+    sq = jnp.sum(jnp.square(features), axis=1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * features @ features.T
+    return jnp.sqrt(jnp.maximum(d2, 0.0))

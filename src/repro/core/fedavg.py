@@ -1,0 +1,267 @@
+"""Federated-learning loop — paper Algorithm 1 + the Fig. 2 framework.
+
+Per round k:
+  1. device selection (divergence / kmeans_random / random / icas / rra)
+  2. spectrum allocation for the selected set (SAO Alg. 5 or a baseline)
+  3. local updates (L SGD steps each) — vmapped over the selected clients
+  4. weighted aggregation, eq. (4)
+  5. bookkeeping: accuracy, T_k, E_k (eqs. 10-11), weight divergences
+
+Clustering (Algorithm 2) happens once, after an initial all-device round,
+on the K-means features of the paper's chosen layer.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.configs.paper_cnn import CNNConfig
+from repro.core import selection as sel
+from repro.core.clustering import (kmeans_fit, extract_features,
+                                   clusters_from_labels)
+from repro.core.divergence import weight_divergence
+from repro.core.sao import solve_sao
+from repro.core.baselines import equal_bandwidth, fedl_lambda
+from repro.core.wireless import DeviceFleet, fleet_arrays, rate_mbps
+from repro.data.partition import FederatedData
+from repro.models.cnn import init_cnn, cnn_loss, cnn_forward
+from repro.utils.trees import (tree_weighted_mean_stacked, tree_sub,
+                               tree_add, tree_num_params)
+from repro.core.compression import apply_compression, payload_mbit
+from repro.core.algorithms import make_fedprox_local_update, ServerMomentum
+
+
+def make_local_update(cnn_cfg: CNNConfig, lr: float, local_iters: int,
+                      batch_size: int):
+    """One client's local training: L SGD steps on its own shard (Alg. 1
+    lines 6-10, with the paper-endorsed SGD variant of §III-A)."""
+
+    def local_update(params, images, labels, key):
+        def step(p, k):
+            idx = jax.random.randint(k, (batch_size,), 0, images.shape[0])
+            batch = {"images": images[idx], "labels": labels[idx]}
+            g = jax.grad(cnn_loss)(p, batch, cnn_cfg)
+            p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+            return p, None
+
+        keys = jax.random.split(key, local_iters)
+        params, _ = jax.lax.scan(step, params, keys)
+        return params
+
+    return local_update
+
+
+@dataclass
+class FLHistory:
+    accuracy: List[float] = field(default_factory=list)
+    T_k: List[float] = field(default_factory=list)
+    E_k: List[float] = field(default_factory=list)
+    selected: List[np.ndarray] = field(default_factory=list)
+    rounds_to_target: Optional[int] = None
+
+    @property
+    def total_T(self):
+        return float(np.sum(self.T_k))
+
+    @property
+    def total_E(self):
+        return float(np.sum(self.E_k))
+
+
+class FLExperiment:
+    """Host-side driver around jitted client/aggregation steps."""
+
+    def __init__(self, cnn_cfg: CNNConfig, fed: FederatedData,
+                 test_images: np.ndarray, test_labels: np.ndarray,
+                 fleet: DeviceFleet, fl: FLConfig, *, bandwidth_mhz: float = 20.0,
+                 allocator: str = "sao", seed: int = 0,
+                 batch_size: int = 32, box_correct: bool = False,
+                 compression: str = "none", fedprox_mu: float = 0.0,
+                 server_momentum: float = 0.0):
+        self.cnn_cfg = cnn_cfg
+        self.fed = fed
+        self.fleet = fleet
+        self.compression = compression
+        self.fedprox_mu = fedprox_mu
+        self.server_opt = (ServerMomentum(server_momentum)
+                           if server_momentum > 0 else None)
+        self.fl = fl
+        self.B = bandwidth_mhz
+        self.allocator = allocator
+        self.box_correct = box_correct
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+        self.test_images = jnp.asarray(test_images)
+        self.test_labels = jnp.asarray(test_labels)
+
+        self.global_params = init_cnn(cnn_cfg, self._next_key())
+        # all-client stacked copies (updated lazily for selected clients)
+        self.client_params = jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (fed.num_clients,) + l.shape).copy(),
+            self.global_params)
+        self.clusters: Optional[List[np.ndarray]] = None
+        self.cluster_labels: Optional[np.ndarray] = None
+
+        if fedprox_mu > 0:
+            local_update = make_fedprox_local_update(
+                cnn_cfg, fl.learning_rate, fl.local_iters, batch_size,
+                mu=fedprox_mu)
+        else:
+            local_update = make_local_update(cnn_cfg, fl.learning_rate,
+                                             fl.local_iters, batch_size)
+        self._vmapped_update = jax.jit(jax.vmap(local_update,
+                                                in_axes=(None, 0, 0, 0)))
+        self._eval = jax.jit(self._eval_fn)
+        self._images = jnp.asarray(fed.images)
+        self._labels = jnp.asarray(fed.labels)
+        self._sizes = jnp.asarray(fed.sizes)
+        if compression != "none":
+            # uplink payload shrinks -> z_n enters SAO via H_n and t_com
+            n_par = tree_num_params(self.global_params)
+            n_leaves = len(jax.tree_util.tree_leaves(self.global_params))
+            z = payload_mbit(n_par, compression, n_leaves)
+            import dataclasses as _dc
+            self.fleet = _dc.replace(fleet, z=np.full_like(fleet.z, z))
+
+    # ------------------------------------------------------------------
+    def _next_key(self):
+        self.key, sub = jax.random.split(self.key)
+        return sub
+
+    def _eval_fn(self, params):
+        logits = cnn_forward(params, self.test_images, self.cnn_cfg)
+        pred = jnp.argmax(logits, axis=-1)
+        acc = jnp.mean((pred == self.test_labels).astype(jnp.float32))
+        onehot = jax.nn.one_hot(self.test_labels, self.cnn_cfg.num_classes)
+        correct = (pred == self.test_labels).astype(jnp.float32)[:, None] * onehot
+        per_class = jnp.sum(correct, 0) / jnp.maximum(jnp.sum(onehot, 0), 1.0)
+        return acc, per_class
+
+    def evaluate(self):
+        acc, per_class = self._eval(self.global_params)
+        return float(acc), np.asarray(per_class)
+
+    # ------------------------------------------------------------------
+    def train_clients(self, idx: np.ndarray):
+        """Run local updates for ``idx``; returns their new stacked params
+        (after simulated lossy uplink compression, if configured)."""
+        idx = np.asarray(idx)
+        keys = jax.random.split(self._next_key(), len(idx))
+        new_params = self._vmapped_update(
+            self.global_params, self._images[idx], self._labels[idx], keys)
+        if self.compression != "none":
+            deltas = jax.tree_util.tree_map(
+                lambda n, g: n - g[None], new_params, self.global_params)
+            deltas = apply_compression(deltas, self.compression)
+            new_params = jax.tree_util.tree_map(
+                lambda d, g: g[None] + d, deltas, self.global_params)
+        return new_params
+
+    def aggregate(self, stacked_params, idx: np.ndarray):
+        """Eq. (4): D_n-weighted average of the participating local models
+        (+ optional FedAvgM server momentum)."""
+        weights = self._sizes[np.asarray(idx)]
+        agg = tree_weighted_mean_stacked(stacked_params, weights)
+        if self.server_opt is not None:
+            agg = self.server_opt.step(self.global_params, agg)
+        self.global_params = agg
+
+    def store_clients(self, stacked_params, idx: np.ndarray):
+        idx = jnp.asarray(np.asarray(idx))
+        self.client_params = jax.tree_util.tree_map(
+            lambda all_, new: all_.at[idx].set(new),
+            self.client_params, stacked_params)
+
+    # ------------------------------------------------------------------
+    def initial_round(self):
+        """Round 0: all devices train; then K-means clustering (Alg. 2)."""
+        idx = np.arange(self.fed.num_clients)
+        new_params = self.train_clients(idx)
+        self.store_clients(new_params, idx)
+        self.aggregate(new_params, idx)
+        feats = extract_features(self.client_params, self.fl.feature_layer)
+        _, labels, _ = kmeans_fit(self._next_key(), feats, self.fl.num_clusters)
+        self.cluster_labels = np.asarray(labels)
+        self.clusters = clusters_from_labels(labels, self.fl.num_clusters)
+
+    def divergences(self) -> np.ndarray:
+        return np.asarray(weight_divergence(self.client_params,
+                                            self.global_params))
+
+    def select(self, method: str) -> np.ndarray:
+        S = self.fl.devices_per_round
+        if method == "random":
+            return sel.select_random(self.rng, self.fed.num_clients, S)
+        if method == "kmeans_random":
+            return sel.select_kmeans_random(self.rng, self.clusters,
+                                            self.fl.selected_per_cluster)
+        if method == "divergence":
+            return sel.select_divergence(self.divergences(), self.clusters,
+                                         self.fl.selected_per_cluster)
+        if method == "icas":
+            arr = fleet_arrays(self.fleet)
+            rates = np.asarray(rate_mbps(self.B / self.fed.num_clients,
+                                         arr["J"]))
+            return sel.select_icas(self.divergences(), rates, S)
+        if method == "rra":
+            arr = fleet_arrays(self.fleet)
+            e_eq = np.asarray(arr["H"] / rate_mbps(self.B / 45.0, arr["J"]))
+            return sel.select_rra(self.rng, e_eq, np.asarray(arr["e_cons"]),
+                                  target_mean=45)
+        raise ValueError(method)
+
+    def allocate(self, idx: np.ndarray):
+        """Spectrum allocation for the round; returns (T_k, E_k)."""
+        arr = fleet_arrays(self.fleet.select(idx))
+        if self.allocator == "sao":
+            s = solve_sao(arr, self.B, box_correct=self.box_correct)
+            Q = s.b * jnp.log2(1.0 + arr["J"] / s.b)
+            e = arr["G"] * jnp.square(s.f) + arr["H"] / Q
+            return float(s.T), float(jnp.sum(e))
+        if self.allocator == "equal":
+            r = equal_bandwidth(arr, self.B)
+            return float(r.T), float(jnp.sum(r.e))
+        if self.allocator.startswith("fedl"):
+            lam = float(self.allocator.split(":")[1]) if ":" in self.allocator else 1.0
+            r = fedl_lambda(arr, self.B, lam)
+            return float(r.T), float(jnp.sum(r.e))
+        raise ValueError(self.allocator)
+
+    # ------------------------------------------------------------------
+    def run(self, method: Optional[str] = None, rounds: Optional[int] = None,
+            target_accuracy: Optional[float] = None,
+            include_initial_round: bool = True) -> FLHistory:
+        method = method or self.fl.selection
+        rounds = rounds or self.fl.max_rounds
+        target = (self.fl.target_accuracy
+                  if target_accuracy is None else target_accuracy)
+        hist = FLHistory()
+        if include_initial_round or self.clusters is None:
+            self.initial_round()
+            acc, _ = self.evaluate()
+            hist.accuracy.append(acc)
+            T0, E0 = self.allocate(np.arange(self.fed.num_clients))
+            hist.T_k.append(T0)
+            hist.E_k.append(E0)
+            hist.selected.append(np.arange(self.fed.num_clients))
+        for k in range(rounds):
+            idx = self.select(method)
+            T_k, E_k = self.allocate(idx)
+            new_params = self.train_clients(idx)
+            self.store_clients(new_params, idx)
+            self.aggregate(new_params, idx)
+            acc, _ = self.evaluate()
+            hist.accuracy.append(acc)
+            hist.T_k.append(T_k)
+            hist.E_k.append(E_k)
+            hist.selected.append(np.asarray(idx))
+            if target and acc >= target and hist.rounds_to_target is None:
+                hist.rounds_to_target = k + 1
+                break
+        return hist

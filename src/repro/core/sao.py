@@ -1,0 +1,228 @@
+"""SAO — energy-efficient Spectrum Allocation Optimization (paper §V, Alg. 5).
+
+Solves, per global iteration k (problem (19)):
+
+    min_{b, f} T_k
+    s.t.  G_n f_n² + H_n / Q_n(b_n) ≤ e_cons_n          (19a) energy
+          z_n / Q_n(b_n) + U_n / f_n ≤ T_k              (19b) deadline
+          Σ_n b_n ≤ B                                   (19c) total bandwidth
+          f_min ≤ f_n ≤ f_max                           (19d)
+    where Q_n(b) = b·log2(1 + J_n/b)   (monotone ↑, sup = J_n/ln2, Lemma 2).
+
+Solution structure (Theorem 1): at the optimum every device finishes exactly
+at T_k*, every energy budget is tight, and the full band is used. Combining
+(20) and (21) eliminates Q and yields the per-device cubic (23)
+
+    f³ + (H·T/(z·G) − e_cons/G)·f − H·U/(z·G) = 0,
+
+which has a unique positive root (Lemma 3). Algorithm 5 then runs a
+three-level bisection: outer on T_k (feasibility of the bandwidth budget),
+inner per-device on f (cubic) and on b (monotone Q).
+
+Everything is vectorized over devices with `vmap`-free jnp ops and
+fixed-trip-count `lax.fori_loop` bisections, so the whole solver jits and
+is differentiable-free but fast (microseconds for S=10..100).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.wireless import LN2, rate_mbps
+
+
+class SAOSolution(NamedTuple):
+    T: jnp.ndarray            # optimal round latency T_k*  [s]
+    b: jnp.ndarray            # per-device bandwidth [MHz]
+    f: jnp.ndarray            # per-device CPU frequency [GHz]
+    converged: jnp.ndarray    # outer bisection reached the ratio band
+    ratio: jnp.ndarray        # Σb/B at the returned T
+
+
+def _Q(b, J):
+    """Q_n(b) = b log2(1 + J/b) — Lemma 2 (monotone ↑, bounded by J/ln2)."""
+    return rate_mbps(b, J)
+
+
+def _solve_cubic_f(T, arr, n_iters: int) -> jnp.ndarray:
+    """Unique positive root of (23): f³ + X·f − Y = 0 (Lemma 3), bisected.
+
+    X = H·T/(z·G) − e_cons/G  (any sign),  Y = H·U/(z·G) > 0.
+    Root upper bound: f ≤ cbrt(Y) + sqrt(max(−X,0)/3) + 1 (comfortably above
+    the Lemma-3 root interval).
+    """
+    X = arr["H"] * T / (arr["z"] * arr["G"]) - arr["e_cons"] / arr["G"]
+    Y = arr["H"] * arr["U"] / (arr["z"] * arr["G"])
+
+    def M(f):
+        return f * f * f + X * f - Y
+
+    lo = jnp.zeros_like(Y)
+    hi = jnp.cbrt(Y) + jnp.sqrt(jnp.maximum(-X, 0.0) / 3.0) + 1.0
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        pos = M(mid) > 0.0
+        return jnp.where(pos, lo, mid), jnp.where(pos, mid, hi)
+
+    lo, hi = lax.fori_loop(0, n_iters, body, (lo, hi))
+    return 0.5 * (lo + hi)
+
+
+def _solve_b_from_energy(f, arr, b_max, n_iters: int) -> jnp.ndarray:
+    """Solve (21): Q(b) = H / (e_cons − G·f²) for b by bisection (Lemma 2).
+
+    Devices whose residual comm-energy budget is non-positive, or whose
+    required Q exceeds the supremum J/ln2, are clipped to b_max (Alg. 5
+    line 9's clipping threshold).
+    """
+    resid = arr["e_cons"] - arr["G"] * jnp.square(f)      # energy left for comm
+    target = arr["H"] / jnp.maximum(resid, 1e-12)
+    achievable = (resid > 0.0) & (target < arr["J"] / LN2) & \
+                 (_Q(b_max, arr["J"]) >= target)
+
+    lo = jnp.full_like(f, 1e-9)
+    hi = jnp.broadcast_to(b_max, f.shape).astype(f.dtype)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        ge = _Q(mid, arr["J"]) >= target
+        return jnp.where(ge, lo, mid), jnp.where(ge, mid, hi)
+
+    lo, hi = lax.fori_loop(0, n_iters, body, (lo, hi))
+    b = 0.5 * (lo + hi)
+    return jnp.where(achievable, b, b_max)
+
+
+def _solve_b_from_deadline(T, f, arr, b_max, n_iters: int) -> jnp.ndarray:
+    """Solve (20): Q(b) = z / (T − U/f) for b — used for box-clipped devices
+    in the box-corrected variant (their energy multiplier μ* is zero, so the
+    deadline, not the energy budget, pins b)."""
+    slack = T - arr["U"] / f
+    target = arr["z"] / jnp.maximum(slack, 1e-9)
+    achievable = (slack > 0.0) & (target < arr["J"] / LN2) & \
+                 (_Q(b_max, arr["J"]) >= target)
+
+    lo = jnp.full_like(f, 1e-9)
+    hi = jnp.broadcast_to(b_max, f.shape).astype(f.dtype)
+
+    def body(_, carry):
+        lo, hi = carry
+        mid = 0.5 * (lo + hi)
+        ge = _Q(mid, arr["J"]) >= target
+        return jnp.where(ge, lo, mid), jnp.where(ge, mid, hi)
+
+    lo, hi = lax.fori_loop(0, n_iters, body, (lo, hi))
+    return jnp.where(achievable, 0.5 * (lo + hi), b_max)
+
+
+def _inner_allocate(T, arr, b_max, n_iters: int, box_correct: bool):
+    """Lines 5-11 of Algorithm 5: per-device f from the cubic, clip to the
+    box, then b from the tight energy constraint (21).
+
+    ``box_correct`` (beyond-paper, EXPERIMENTS.md §Perf-sched): devices whose
+    f clipped at a box face get b from the deadline equality (20) instead —
+    the correct KKT completion, which stops clipped devices from burning
+    bandwidth to exhaust an energy budget the optimum leaves slack.
+    """
+    f_raw = _solve_cubic_f(T, arr, n_iters)
+    f = jnp.clip(f_raw, arr["f_min"], arr["f_max"])
+    b_energy = _solve_b_from_energy(f, arr, b_max, n_iters)
+    if not box_correct:
+        return b_energy, f
+    b_deadline = _solve_b_from_deadline(T, f, arr, b_max, n_iters)
+    clipped = (f_raw < arr["f_min"]) | (f_raw > arr["f_max"])
+    # Q(b) is monotone ↑, so each of (20)/(21) gives a MINIMAL feasible b;
+    # a clipped device must satisfy both → take the max. (For interior
+    # devices the cubic already makes the two coincide.)
+    b = jnp.where(clipped, jnp.maximum(b_deadline, b_energy), b_energy)
+    return jnp.minimum(b, b_max), f
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_outer", "n_inner", "box_correct"))
+def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, eps0: float = 1e-3,
+              b_max: float = None, n_outer: int = 48,
+              n_inner: int = 48, box_correct: bool = False) -> SAOSolution:
+    """Algorithm 5. ``arr`` = fleet_arrays(fleet.select(S_k)); B in MHz.
+
+    Outer bisection on T_k: Σ_n b_n(T) is monotone ↓ in T (looser deadline →
+    smaller f → more energy headroom for comm → less bandwidth needed), so
+    plain bisection converges to the T* where the band is exactly used.
+    """
+    if b_max is None:
+        b_max = B
+    b_max = jnp.asarray(b_max, jnp.float32)
+    B = jnp.asarray(B, jnp.float32)
+
+    # Line 1: T_min = max_n( ln2·z/J + U/f_max ) — the b→∞, f=f_max limit.
+    T_min0 = jnp.max(LN2 * arr["z"] / arr["J"] + arr["U"] / arr["f_max"])
+    # T_max: generous upper bound — slowest CPU + a 1000th of the band each.
+    n = arr["J"].shape[0]
+    b_floor = jnp.maximum(B / n * 1e-3, 1e-6)
+    T_max0 = jnp.max(arr["z"] / _Q(b_floor, arr["J"]) + arr["U"] / arr["f_min"]) * 2.0
+
+    def cond(carry):
+        i, T_lo, T_hi, done = carry
+        return (i < n_outer) & (~done)
+
+    def body(carry):
+        i, T_lo, T_hi, _ = carry
+        T = 0.5 * (T_lo + T_hi)
+        b, f = _inner_allocate(T, arr, b_max, n_inner, box_correct)
+        ratio = jnp.sum(b) / B
+        done = (ratio <= 1.0) & (ratio >= 1.0 - eps0)
+        # pin both ends to T on convergence so the returned midpoint IS the
+        # T that satisfied the band; otherwise shrink the bracket.
+        T_lo = jnp.where(done, T, jnp.where(ratio > 1.0, T, T_lo))
+        T_hi = jnp.where(done, T, jnp.where(ratio < 1.0 - eps0, T, T_hi))
+        return i + 1, T_lo, T_hi, done
+
+    i, T_lo, T_hi, done = lax.while_loop(
+        cond, body, (0, T_min0, T_max0, jnp.asarray(False)))
+    T = 0.5 * (T_lo + T_hi)
+
+    # final allocation at the converged T (lines 21-22)
+    b, f = _inner_allocate(T, arr, b_max, n_inner, box_correct)
+    # Recalculate f* from the *clipped* b* via the tight energy budget (21):
+    # f = sqrt((e_cons − H/Q(b*)) / G), boxed — then the true delay (20).
+    resid = arr["e_cons"] - arr["H"] / _Q(b, arr["J"])
+    f_star = jnp.sqrt(jnp.maximum(resid, 0.0) / arr["G"])
+    f_star = jnp.clip(f_star, arr["f_min"], arr["f_max"])
+    # keep the better (feasible) of the two candidates per device
+    e_of = lambda ff: arr["G"] * jnp.square(ff) + arr["H"] / _Q(b, arr["J"])
+    f_final = jnp.where(e_of(f_star) <= arr["e_cons"] + 1e-6, f_star, f)
+    t = arr["z"] / _Q(b, arr["J"]) + arr["U"] / f_final
+    T_star = jnp.max(t)
+    ratio = jnp.sum(b) / B
+    # ratio ≤ 1 at the bracket floor means the band constraint is slack at
+    # the optimum (γ* = 0 corner: energy budgets loose, T* = T_min) — that is
+    # a converged optimum too, (22) just isn't tight.
+    return SAOSolution(T=T_star, b=b, f=f_final,
+                       converged=done | (ratio <= 1.0), ratio=ratio)
+
+
+def kkt_residuals(sol: SAOSolution, arr, B):
+    """Theorem-1 optimality residuals (used by property tests & benchmarks).
+
+    Returns dict with:
+      delay_spread : max_n t_n − min_n t_n  (eq. 20 — all-equal delays)
+      energy_slack : e_cons − e_n           (eq. 21 — ≈0 when not box-clipped)
+      band_slack   : B − Σ b_n              (eq. 22 — ≈0)
+    """
+    Q = _Q(sol.b, arr["J"])
+    t = arr["z"] / Q + arr["U"] / sol.f
+    e = arr["G"] * jnp.square(sol.f) + arr["H"] / Q
+    return {
+        "delay_spread": jnp.max(t) - jnp.min(t),
+        "energy_slack": arr["e_cons"] - e,
+        "band_slack": B - jnp.sum(sol.b),
+        "t": t,
+        "e": e,
+    }

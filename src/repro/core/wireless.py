@@ -1,0 +1,181 @@
+"""Wireless system model — paper §III-B, eqs (5)–(11) and §VI parameters.
+
+Unit conventions (chosen so every solver quantity is O(1e-3 .. 1e3) and the
+whole SAO pipeline is float32-safe; see DESIGN.md §5):
+
+  frequency f ......... GHz          bandwidth b ......... MHz
+  model size z ........ Mbit         transmit power p .... W
+  time t .............. seconds      energy e ............ Joules
+  CPU work U = L·C·D .. Gcycles      noise N0 ............ W/Hz
+
+The FDMA rate (7) becomes r[Mbit/s] = b[MHz]·log2(1 + J/b) with
+J = h·p/N0 expressed in MHz.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+LN2 = float(np.log(2.0))
+
+# §VI experiment constants
+PATHLOSS_DB = lambda d_km: 128.1 + 37.6 * np.log10(np.maximum(d_km, 1e-3))
+SHADOW_STD_DB = 8.0
+NOISE_DBM_PER_HZ = -174.0
+CELL_RADIUS_KM = 0.3
+DEFAULT_P_DBM = 23.0
+DEFAULT_B_MHZ = 20.0
+DEFAULT_F_MAX_GHZ = 2.0
+DEFAULT_F_MIN_GHZ = 0.2
+DEFAULT_Z_MBIT = 448 * 8 * 1024 / 1e6        # 448 KB model (MNIST CNN, Table II)
+DEFAULT_ALPHA = 2e-28                         # effective capacitance 2·(α/2)
+DEFAULT_LOCAL_ITERS = 5
+DEFAULT_CYCLES_PER_SAMPLE = 2e4
+DEFAULT_SAMPLES = 500
+
+
+def dbm_to_watt(dbm):
+    return 10.0 ** (np.asarray(dbm) / 10.0) / 1e3
+
+
+def watt_to_dbm(w):
+    return 10.0 * np.log10(np.asarray(w) * 1e3)
+
+
+@dataclass
+class DeviceFleet:
+    """Per-device physical parameters for N devices (host-side numpy)."""
+    h: np.ndarray            # channel gain (linear)
+    p: np.ndarray            # transmit power [W]
+    z: np.ndarray            # model size [Mbit]
+    C: np.ndarray            # cycles per sample
+    D: np.ndarray            # local dataset size [samples]
+    L: int                   # local iterations
+    alpha: np.ndarray        # capacitance coefficient (the paper's α; e_cmp uses α/2)
+    f_min: np.ndarray        # [GHz]
+    f_max: np.ndarray        # [GHz]
+    e_cons: np.ndarray       # per-device energy budget [J]
+    N0: float                # noise PSD [W/Hz]
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.h)
+
+    # --- the paper's composite constants, eqs (15)-(18), scaled units ---
+    def J_mhz(self):
+        """J_n = h p / N0, expressed in MHz (divide Hz by 1e6)."""
+        return self.h * self.p / self.N0 / 1e6
+
+    def U_gcycles(self):
+        """U_n = L·C_n·D_n in Gcycles (eq. 16)."""
+        return self.L * self.C * self.D / 1e9
+
+    def G_joule_per_ghz2(self):
+        """G_n = (α/2)·L·C_n·D_n so that e_cmp = G·f² with f in GHz (eq. 17)."""
+        return 0.5 * self.alpha * self.L * self.C * self.D * 1e18
+
+    def H_joule(self):
+        """H_n = z_n·p_n: e_com = H / (b·log2(1+J/b)) with b in MHz, z in Mbit."""
+        return self.z * self.p
+
+    def select(self, idx) -> "DeviceFleet":
+        idx = np.asarray(idx)
+        return DeviceFleet(
+            h=self.h[idx], p=self.p[idx], z=self.z[idx], C=self.C[idx],
+            D=self.D[idx], L=self.L, alpha=self.alpha[idx],
+            f_min=self.f_min[idx], f_max=self.f_max[idx],
+            e_cons=self.e_cons[idx], N0=self.N0)
+
+    def with_power(self, p_watt) -> "DeviceFleet":
+        return DeviceFleet(
+            h=self.h, p=np.broadcast_to(np.asarray(p_watt, np.float64),
+                                        self.h.shape).copy(),
+            z=self.z, C=self.C, D=self.D, L=self.L, alpha=self.alpha,
+            f_min=self.f_min, f_max=self.f_max, e_cons=self.e_cons, N0=self.N0)
+
+
+def sample_fleet(num_devices: int = 100, seed: int = 0, *,
+                 p_dbm: float = DEFAULT_P_DBM,
+                 z_mbit: float = DEFAULT_Z_MBIT,
+                 e_cons_range=(30e-3, 60e-3),
+                 cycles_range=(1e4, 3e4),
+                 samples_range=(300, 700),
+                 local_iters: int = DEFAULT_LOCAL_ITERS) -> DeviceFleet:
+    """§VI setup: N devices uniform in a 300 m cell, 3GPP path loss + 8 dB
+    lognormal shadowing, -174 dBm/Hz noise."""
+    rng = np.random.default_rng(seed)
+    # uniform over the disc
+    r_km = CELL_RADIUS_KM * np.sqrt(rng.uniform(0.01, 1.0, num_devices))
+    pl_db = PATHLOSS_DB(r_km) + rng.normal(0.0, SHADOW_STD_DB, num_devices)
+    h = 10.0 ** (-pl_db / 10.0)
+    return DeviceFleet(
+        h=h,
+        p=np.full(num_devices, dbm_to_watt(p_dbm)),
+        z=np.full(num_devices, z_mbit),
+        C=rng.uniform(*cycles_range, num_devices),
+        D=rng.integers(samples_range[0], samples_range[1] + 1,
+                       num_devices).astype(np.float64),
+        L=local_iters,
+        alpha=np.full(num_devices, DEFAULT_ALPHA),
+        f_min=np.full(num_devices, DEFAULT_F_MIN_GHZ),
+        f_max=np.full(num_devices, DEFAULT_F_MAX_GHZ),
+        e_cons=rng.uniform(*e_cons_range, num_devices),
+        N0=dbm_to_watt(NOISE_DBM_PER_HZ),
+    )
+
+
+# --- eqs (5)-(9) as jnp functions over scaled quantities -------------------
+
+
+def rate_mbps(b_mhz, J_mhz):
+    """Achievable FDMA rate, eq (7): r = b·log2(1 + J/b) [Mbit/s]."""
+    b = jnp.maximum(b_mhz, 1e-12)
+    return b * jnp.log2(1.0 + J_mhz / b)
+
+
+def t_cmp(U_gcycles, f_ghz):
+    """Computation delay, eq (5): t = L·C·D / f."""
+    return U_gcycles / jnp.maximum(f_ghz, 1e-12)
+
+
+def e_cmp(G, f_ghz):
+    """Computation energy, eq (6): e = (α/2)·L·C·D·f²."""
+    return G * jnp.square(f_ghz)
+
+
+def t_com(z_mbit, b_mhz, J_mhz):
+    """Communication delay, eq (8): t = z / r."""
+    return z_mbit / rate_mbps(b_mhz, J_mhz)
+
+
+def e_com(H, b_mhz, J_mhz):
+    """Communication energy, eq (9): e = p·t_com = H / (b·log2(1+J/b))."""
+    return H / rate_mbps(b_mhz, J_mhz)
+
+
+def round_totals(fleet_arrays, b_mhz, f_ghz):
+    """Per-round totals, eqs (10)-(11): (T_k, E_k, per-device t, per-device e).
+
+    ``fleet_arrays`` is a dict with J, U, G, H, z (jnp arrays).
+    """
+    J, U, G, H, z = (fleet_arrays[k] for k in ("J", "U", "G", "H", "z"))
+    t = t_com(z, b_mhz, J) + t_cmp(U, f_ghz)
+    e = e_com(H, b_mhz, J) + e_cmp(G, f_ghz)
+    return jnp.max(t), jnp.sum(e), t, e
+
+
+def fleet_arrays(fleet: DeviceFleet):
+    """Pack the solver-facing constants (15)-(18) into jnp arrays."""
+    return {
+        "J": jnp.asarray(fleet.J_mhz(), jnp.float32),
+        "U": jnp.asarray(fleet.U_gcycles(), jnp.float32),
+        "G": jnp.asarray(fleet.G_joule_per_ghz2(), jnp.float32),
+        "H": jnp.asarray(fleet.H_joule(), jnp.float32),
+        "z": jnp.asarray(fleet.z, jnp.float32),
+        "e_cons": jnp.asarray(fleet.e_cons, jnp.float32),
+        "f_min": jnp.asarray(fleet.f_min, jnp.float32),
+        "f_max": jnp.asarray(fleet.f_max, jnp.float32),
+    }

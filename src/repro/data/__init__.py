@@ -1,0 +1,2 @@
+from repro.data.synthetic import Dataset, make_dataset, make_token_stream
+from repro.data.partition import FederatedData, partition_bias, partition_dirichlet

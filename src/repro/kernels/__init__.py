@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots, with jnp
+oracles in ref.py and jit'd dispatch wrappers in ops.py.
+
+  pairwise_l2     — K-means assignment / weight-divergence distance matrix
+  flash_attention — blocked online-softmax attention (causal / SWA)
+  ssd_scan        — Mamba2 SSD chunked scan (MXU-dense intra-chunk form)
+"""
+from repro.kernels import ops, ref
+from repro.kernels.pairwise_l2 import pairwise_l2
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ssd_scan import ssd_scan

@@ -1,0 +1,74 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Model code calls these; ``use_pallas`` switches between the kernel (TPU
+target; interpret mode on CPU) and the pure-jnp reference path. The default
+follows the backend: kernels on TPU, references on CPU — interpret mode is
+for validation, not speed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.pairwise_l2 import pairwise_l2 as _pairwise
+from repro.kernels.ssd_scan import ssd_scan as _ssd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pairwise_sq_dists(x, c, *, use_pallas: bool | None = None):
+    """[N, F] × [M, F] -> [N, M] squared L2 (K-means / Fig. 4 hot spot)."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return _pairwise(x, c, interpret=not _on_tpu())
+    return ref.pairwise_l2_ref(x, c)
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              use_pallas: bool | None = None):
+    """GQA-aware attention. q: [B, S, H, D]; k, v: [B, S, K, D]."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    if K != H:
+        rep = H // K
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_pallas:
+        out = _flash(qt, kt, vt, causal=causal, window=window,
+                     interpret=not _on_tpu())
+    else:
+        out = ref.flash_attention_ref(qt, kt, vt, causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)
+
+
+def ssd(x, a, b, c, *, chunk: int = 256, n_groups: int = 1,
+        use_pallas: bool | None = None):
+    """Mamba2 SSD. x: [B, S, H, P]; a: [B, S, H]; b, c: [B, S, G, N].
+
+    Returns (y: [B, S, H, P], state: [B, H, P, N]).
+    """
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    B, S, H, P = x.shape
+    N = b.shape[-1]
+    repg = H // b.shape[2]
+    bh = jnp.repeat(b, repg, axis=2)
+    ch = jnp.repeat(c, repg, axis=2)
+    if use_pallas:
+        xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+        af = a.transpose(0, 2, 1).reshape(B * H, S)
+        bf = bh.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+        cf = ch.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+        y, h = _ssd(xf, af, bf, cf, chunk=chunk, interpret=not _on_tpu())
+        return (y.reshape(B, H, S, P).transpose(0, 2, 1, 3),
+                h.reshape(B, H, P, N))
+    return ref.ssd_ref(x, a, bh, ch)

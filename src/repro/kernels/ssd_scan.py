@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan.
+
+The TPU-idiomatic form of the selective scan (DESIGN.md §5): instead of the
+GPU per-timestep selective-scan kernel, SSD factorizes each chunk into dense
+MXU matmuls (intra-chunk quadratic attention-like block + chunk-state
+outer products) with a tiny sequential state recurrence across chunks.
+
+Grid: (B·H, S/Q) with the chunk axis minor/sequential; the [P, N] SSM state
+lives in VMEM scratch across chunk steps.
+
+Layouts: X [BH, S, P]; A (log-decay, = dt·a < 0) [BH, S]; B, C [BH, S, N]
+(already head-expanded for grouped SSMs). Outputs: Y [BH, S, P] and the
+final state [BH, P, N].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, hout_ref, h_ref, *,
+                Q: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)            # [Q, P]
+    a = a_ref[0].astype(jnp.float32)            # [Q]
+    b = b_ref[0].astype(jnp.float32)            # [Q, N]
+    c = c_ref[0].astype(jnp.float32)            # [Q, N]
+
+    a_cum = jnp.cumsum(a)                        # [Q]
+    # intra-chunk decay matrix L[i, j] = exp(sum_{j<k<=i} a_k), i >= j
+    seg = a_cum[:, None] - a_cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q, Q]
+    y_diag = jax.lax.dot_general(scores * L, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # [Q, P]
+
+    h = h_ref[...]                               # [P, N]
+    # off-diagonal: carried state read out through C with in-chunk decay
+    y_off = jax.lax.dot_general(c, h, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)   # [Q, P]
+    y_off = y_off * jnp.exp(a_cum)[:, None]
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: h' = exp(A_chunk)·h + Σ_q exp(A_chunk − a_cum_q)·x_q⊗b_q
+    decay_states = jnp.exp(a_cum[-1] - a_cum)    # [Q]
+    h_new = h * jnp.exp(a_cum[-1]) + jax.lax.dot_general(
+        x * decay_states[:, None], b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)      # [P, N]
+    h_ref[...] = h_new
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        hout_ref[0] = h_new.astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, a, b, c, *, chunk: int = 256, interpret: bool = True):
+    """x: [BH, S, P]; a: [BH, S]; b, c: [BH, S, N].
+
+    Returns (y: [BH, S, P], final_state: [BH, P, N] fp32). S must not be
+    ragged; the wrapper pads with a=0, x=0 (identity steps).
+    """
+    BH, S, P = x.shape
+    N = b.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+
+    kernel = functools.partial(_ssd_kernel, Q=Q)
+    y, h = pl.pallas_call(
+        kernel,
+        grid=(BH, Sp // Q),
+        in_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q), lambda bh, ci: (bh, ci)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, Q, N), lambda bh, ci: (bh, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, P), lambda bh, ci: (bh, ci, 0)),
+            pl.BlockSpec((1, P, N), lambda bh, ci: (bh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sp, P), x.dtype),
+            jax.ShapeDtypeStruct((BH, P, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)
+    return y[:, :S], h

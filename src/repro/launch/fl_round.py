@@ -1,0 +1,106 @@
+"""The paper's FL round as a SHARDED datacenter workload (dry-run target).
+
+This is the paper's technique mapped onto the mesh (DESIGN.md §2): client
+models live stacked on a client axis sharded over (pod, data); one round =
+
+  1. weight divergence ‖w_n − w_g‖ for every client      (Alg. 4 signal)
+  2. K-means assignment of late-layer features            (Alg. 2/3)
+  3. top-1-divergence-per-cluster selection mask          (Alg. 4)
+  4. D_n-weighted FedAvg aggregation of selected clients  (eq. 4)
+
+Every step is a reduction over `model`-sharded parameter dims crossed with
+the client-sharded axis — the collective pattern the hillclimb's third pair
+studies.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch import shapes as shp
+from repro.sharding import specs as sh
+
+
+def fl_round_step(client_params, global_params, centroids, sizes, *,
+                  num_clusters: int, feature_slice: int = 0):
+    """client_params: leaves [N, ...]; centroids: [c, F] K-means model on
+    the lm_head feature layer. Returns (new_global, divergence, labels).
+
+    ``feature_slice`` > 0 clusters on only the first ``feature_slice``
+    feature dims — the paper's §IV-B insight (one cheap late layer beats
+    all-weights) applied at LM scale (hillclimb lever, §Perf pair C)."""
+    # 1. weight divergence over ALL layers (paper §IV-C)
+    def leaf_sq(cl, gl):
+        d = cl.astype(jnp.float32) - gl.astype(jnp.float32)[None]
+        return jnp.sum(jnp.square(d).reshape(d.shape[0], -1), axis=1)
+
+    sq = jax.tree_util.tree_map(leaf_sq, client_params, global_params)
+    div = jnp.sqrt(sum(jax.tree_util.tree_leaves(sq)))          # [N]
+
+    # 2. K-means assignment on the feature layer (lm_head — the w_fc2
+    #    analogue for LM clients)
+    feat_leaf = client_params.get("lm_head", client_params["embed"])
+    feats = feat_leaf.reshape(div.shape[0], -1)
+    if feature_slice:
+        feats = feats[:, :feature_slice]
+    feats = feats.astype(jnp.float32)
+    fn = jnp.sum(jnp.square(feats), axis=1, keepdims=True)
+    cn = jnp.sum(jnp.square(centroids), axis=1)[None, :]
+    d2 = fn + cn - 2.0 * feats @ centroids.T
+    labels = jnp.argmin(d2, axis=1)                             # [N]
+
+    # 3. top-1 divergence per cluster -> selection mask
+    onehot = jax.nn.one_hot(labels, num_clusters, dtype=jnp.float32)  # [N, c]
+    masked = onehot * div[:, None] - (1.0 - onehot) * 1e30
+    best = jnp.argmax(masked, axis=0)                           # [c]
+    has_member = jnp.max(onehot, axis=0) > 0.0                  # empty-cluster guard
+    sel = jnp.zeros_like(div).at[best].add(
+        has_member.astype(jnp.float32))
+    sel = jnp.minimum(sel, 1.0)
+
+    # 4. eq. (4) weighted aggregation over the selected set
+    w = sel * sizes
+    w = w / jnp.maximum(jnp.sum(w), 1e-9)
+
+    def agg(cl, gl):
+        ww = w.reshape((-1,) + (1,) * (cl.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(cl.astype(jnp.float32) * ww, axis=0).astype(gl.dtype)
+
+    new_global = jax.tree_util.tree_map(agg, client_params, global_params)
+    return new_global, div, labels
+
+
+def lower_fl_round(cfg: ModelConfig, mesh: Mesh, *, num_clients: int = 128,
+                   num_clusters: int = 10, feature_slice: int = 0):
+    """Lower+compile the sharded FL round for ``num_clients`` copies of the
+    client architecture."""
+    p_struct = shp.param_structs(cfg, jnp.bfloat16)
+    p_shard = sh.params_shardings(p_struct, mesh)
+    ba = sh.batch_axes(mesh, num_clients)
+
+    def stack(leaf):
+        return jax.ShapeDtypeStruct((num_clients,) + tuple(leaf.shape),
+                                    leaf.dtype)
+
+    def stack_shard(shard):
+        return NamedSharding(mesh, P(ba if ba else None, *shard.spec))
+
+    c_struct = jax.tree_util.tree_map(stack, p_struct)
+    c_shard = jax.tree_util.tree_map(stack_shard, p_shard)
+
+    feat_dim = feature_slice or cfg.d_model * cfg.vocab_size
+    cent = jax.ShapeDtypeStruct((num_clusters, feat_dim), jnp.float32)
+    sizes = jax.ShapeDtypeStruct((num_clients,), jnp.float32)
+    rep = NamedSharding(mesh, P())
+
+    step = functools.partial(fl_round_step, num_clusters=num_clusters,
+                             feature_slice=feature_slice)
+    jitted = jax.jit(step,
+                     in_shardings=(c_shard, p_shard, rep, rep),
+                     out_shardings=(p_shard, rep, rep))
+    with mesh:
+        return jitted.lower(c_struct, p_struct, cent, sizes)

@@ -1,0 +1,32 @@
+"""Production mesh construction (DESIGN.md §7).
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (smoke tests see 1 CPU device; only dryrun forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 (one v5e pod, 256 chips) or 2×16×16 (two pods, 512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many real devices exist (tests/examples)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = max(1, min(model, n // max(data, 1)))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants used by the roofline (§Roofline)
+TPU_V5E = {
+    "peak_bf16_flops": 197e12,        # per chip
+    "hbm_bandwidth": 819e9,           # bytes/s per chip
+    "ici_bandwidth": 50e9,            # bytes/s per link
+    "hbm_bytes": 16e9,                # 16 GB HBM per chip
+}

@@ -1,0 +1,67 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × input-shape).
+
+``input_specs`` builds exactly what the dry-run lowers against: no device
+allocation, weak-type-correct, shardable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (ModelConfig, InputShape, INPUT_SHAPES,
+                                LONG_CONTEXT_WINDOW, TrainConfig)
+from repro.models.transformer import init_model, init_cache, ENC_MEMORY_LEN
+from repro.sharding import specs as sh
+
+
+def struct(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def decode_window(cfg: ModelConfig, shape: InputShape):
+    """The SWA ring-buffer window used for long_500k on full-attention
+    families (mixtral's native window is kept as-is)."""
+    if shape.name == "long_500k" and cfg.num_heads and cfg.attn_period == 0:
+        return cfg.sliding_window or LONG_CONTEXT_WINDOW
+    return cfg.sliding_window
+
+
+def batch_structs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                  dtype=jnp.bfloat16) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(structs, shardings) for the step-function ``batch`` argument."""
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = NamedSharding(mesh, sh.token_spec(mesh, B))
+    emb_sh3 = NamedSharding(mesh, sh.token_spec(mesh, B, extra_dims=2))
+    if shape.is_decode:
+        structs = {"tokens": struct((B, 1), jnp.int32)}
+        shards = {"tokens": tok_sh}
+        return structs, shards
+    structs = {"tokens": struct((B, S), jnp.int32)}
+    shards = {"tokens": tok_sh}
+    if cfg.family == "vlm":
+        structs["image_embeds"] = struct((B, cfg.num_image_tokens, cfg.d_model),
+                                         dtype)
+        shards["image_embeds"] = emb_sh3
+    if cfg.is_encoder_decoder:
+        structs["src_embeds"] = struct((B, S, cfg.d_model), dtype)
+        shards["src_embeds"] = emb_sh3
+    return structs, shards
+
+
+def param_structs(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_model, cfg, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def cache_structs(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                  dtype=jnp.bfloat16):
+    window = decode_window(cfg, shape)
+    cache = jax.eval_shape(functools.partial(
+        init_cache, cfg, shape.global_batch, shape.seq_len, dtype=dtype,
+        window=window))
+    shards = sh.cache_shardings(cfg, cache, mesh, shape.global_batch)
+    return cache, shards

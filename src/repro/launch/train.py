@@ -1,0 +1,90 @@
+"""Single-host training driver (example-scale): train any --arch smoke/full
+variant on the synthetic token stream.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 200 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import TrainConfig
+from repro.data.synthetic import make_token_stream
+from repro.models.transformer import init_model
+from repro.train.train_step import make_train_step
+from repro.train.metrics import MetricsLogger
+from repro.train.checkpoint import save_checkpoint
+
+
+def batches_from_stream(tokens: np.ndarray, batch: int, seq: int, seed: int):
+    rng = np.random.default_rng(seed)
+    n = len(tokens) - seq - 1
+    while True:
+        idx = rng.integers(0, n, batch)
+        yield {"tokens": jnp.asarray(
+            np.stack([tokens[i:i + seq] for i in idx]))}
+
+
+def make_vlm_audio_extras(cfg, batch, seq):
+    extras = {}
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jnp.zeros(
+            (batch, cfg.num_image_tokens, cfg.d_model), jnp.float32)
+    if cfg.is_encoder_decoder:
+        extras["src_embeds"] = jnp.zeros((batch, seq, cfg.d_model), jnp.float32)
+    return extras
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCH_IDS), required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--moe-impl", default="dense")
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--log-csv", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(args.steps // 10, 1))
+    params = init_model(cfg, jax.random.PRNGKey(args.seed))
+    opt_init, train_step = make_train_step(cfg, tc, moe_impl=args.moe_impl,
+                                           q_chunk=64, kv_chunk=64)
+    opt_state = opt_init(params)
+    step_fn = jax.jit(train_step, donate_argnums=(0, 1))
+
+    stream = make_token_stream(cfg.vocab_size, 200_000, seed=args.seed)
+    gen = batches_from_stream(stream, args.batch, args.seq, args.seed)
+    extras = make_vlm_audio_extras(cfg, args.batch, args.seq)
+
+    logger = MetricsLogger(args.log_csv)
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = {**next(gen), **extras}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if step % max(args.steps // 20, 1) == 0 or step == args.steps - 1:
+            logger.log(step, metrics)
+            print(f"step {step:5d} loss {float(metrics['loss']):.4f} "
+                  f"lr {float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(step+1):.2f}s/step)", flush=True)
+    logger.flush()
+    if args.ckpt:
+        save_checkpoint(args.ckpt, params, step=args.steps)
+        print("checkpoint saved to", args.ckpt)
+    return logger
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.models.transformer import (
+    init_model,
+    forward,
+    init_cache,
+    decode_step,
+    ENC_MEMORY_LEN,
+)
+from repro.models.cnn import init_cnn, cnn_forward, cnn_loss, cnn_accuracy

@@ -1,0 +1,175 @@
+"""Roofline analysis from a compiled dry-run artifact (§Roofline).
+
+Three terms, per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs_global / (chips × peak_FLOP/s)
+    memory     = HLO_bytes_global / (chips × HBM_bw)
+    collective = collective_bytes_global / (chips × link_bw)
+
+``compiled.cost_analysis()`` reports the per-device SPMD program, so global
+= per-device × chips (verified in tests/test_roofline.py on a sharded
+matmul). Collective bytes are parsed from the post-SPMD HLO text — they are
+NOT in cost_analysis.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g.:  %ag = bf16[8,2048,128]{2,1,0} all-gather(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+# tuple-result collectives:  = (bf16[..], bf16[..]) all-reduce(...)
+_TUPLE_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-type output bytes of the per-device HLO module.
+
+    '-start' ops are counted, matching '-done' twins are skipped.
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue                      # avoid double counting async pairs
+        m = _OP_RE.search(line)
+        if m:
+            dtype, dims, op = m.groups()
+            out[op] += _shape_bytes(dtype, dims)
+            counts[op] += 1
+            continue
+        m = _TUPLE_RE.search(line)
+        if m:
+            shapes, op = m.groups()
+            for sm in _SHAPE_RE.finditer(shapes):
+                out[op] += _shape_bytes(*sm.groups())
+            counts[op] += 1
+    out_total = sum(out.values())
+    return {"total": out_total, "counts": counts, **out}
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops_global: float
+    peak_memory_per_device: Optional[float] = None
+    collectives: Dict = field(default_factory=dict)
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / TPU_V5E["peak_bf16_flops"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / TPU_V5E["hbm_bandwidth"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / TPU_V5E["ici_bandwidth"]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs_global — remat/redundancy waste detector."""
+        hlo_global = self.flops_per_device * self.chips
+        return self.model_flops_global / hlo_global if hlo_global else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap roofline estimate of the step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops_global": self.model_flops_global,
+            "peak_memory_per_device": self.peak_memory_per_device,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "collectives": self.collectives,
+        }
+
+
+def model_flops(cfg, shape, *, include_backward: bool) -> float:
+    """MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference), N = active params."""
+    n = cfg.num_params(active_only=cfg.moe is not None)
+    if shape.is_decode:
+        tokens = shape.global_batch                       # one new token each
+    else:
+        tokens = shape.global_batch * shape.seq_len
+    mult = 6.0 if include_backward else 2.0
+    return mult * n * tokens
+
+
+def analyze_compiled(compiled, *, arch: str, shape, mesh_name: str,
+                     chips: int, cfg, include_backward: bool,
+                     hlo_text: Optional[str] = None) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+    peak_mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            peak_mem = float(getattr(ma, "temp_size_in_bytes", 0)
+                             + getattr(ma, "argument_size_in_bytes", 0)
+                             + getattr(ma, "output_size_in_bytes", 0)
+                             - getattr(ma, "alias_size_in_bytes", 0))
+    except Exception:
+        pass
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        collective_bytes_per_device=float(coll["total"]),
+        model_flops_global=model_flops(cfg, shape,
+                                       include_backward=include_backward),
+        peak_memory_per_device=peak_mem,
+        collectives=coll)

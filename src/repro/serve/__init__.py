@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine
+from repro.serve import sampler

@@ -1,0 +1,77 @@
+"""Batched serving engine: prefill + decode with the family-appropriate
+cache (ring-buffer SWA, full KV, SSD state, enc-dec cross-memory).
+
+``generate`` drives jitted single-token steps; prefill is performed by
+feeding the prompt through ``decode_step`` token-by-token (correct for all
+families, including ring buffers — throughput prefill via ``forward`` is a
+dry-run/roofline concern, not a CPU-example concern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import (decode_step, encode_memory, init_cache,
+                                      ENC_MEMORY_LEN)
+from repro.serve import sampler as samplers
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, max_len: int = 512,
+                 window: Optional[int] = None, moe_impl: str = "dense"):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.window = window if window is not None else cfg.sliding_window
+        self.moe_impl = moe_impl
+        self._step = jax.jit(functools.partial(
+            decode_step, cfg, moe_impl=moe_impl))
+
+    def new_cache(self, batch_size: int):
+        return init_cache(self.cfg, batch_size, self.max_len,
+                          window=self.window)
+
+    def prefill(self, cache, prompts: jnp.ndarray):
+        """prompts: [B, S_prompt] — feed through decode steps; returns
+        (cache, last_logits)."""
+        logits = None
+        for t in range(prompts.shape[1]):
+            logits, cache = self._step(self.params,
+                                       {"tokens": prompts[:, t:t + 1]}, cache)
+        return cache, logits
+
+    def generate(self, prompts: jnp.ndarray, num_tokens: int, *,
+                 sampler: str = "greedy", key=None, temp: float = 1.0,
+                 src_embeds: Optional[jnp.ndarray] = None) -> np.ndarray:
+        """Returns [B, num_tokens] generated ids."""
+        B = prompts.shape[0]
+        cache = self.new_cache(B)
+        if self.cfg.is_encoder_decoder:
+            if src_embeds is None:
+                src_embeds = jnp.zeros((B, ENC_MEMORY_LEN, self.cfg.d_model))
+            ck, cv = encode_memory(self.cfg, self.params,
+                                   {"src_embeds": src_embeds})
+            cache = dict(cache)
+            cache["cross_k"], cache["cross_v"] = ck, cv
+        cache, logits = self.prefill(cache, prompts)
+        key = key if key is not None else jax.random.PRNGKey(0)
+        out = []
+        tok = self._sample(logits[:, -1], sampler, key, temp)
+        out.append(tok)
+        for i in range(1, num_tokens):
+            key, sub = jax.random.split(key)
+            logits, cache = self._step(self.params, {"tokens": tok[:, None]},
+                                       cache)
+            tok = self._sample(logits[:, -1], sampler, sub, temp)
+            out.append(tok)
+        return np.stack([np.asarray(t) for t in out], axis=1)
+
+    def _sample(self, logits, sampler, key, temp):
+        if sampler == "greedy":
+            return samplers.greedy(logits)
+        return samplers.temperature(logits, key, temp)

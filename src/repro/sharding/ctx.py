@@ -1,0 +1,43 @@
+"""Opt-in activation sharding constraints (hillclimb lever, §Perf).
+
+GSPMD propagation from params+inputs alone sometimes picks replicated or
+involuntarily-rematerialized layouts for large intermediates (we observed
+67 GB replicated logits when the vocab doesn't divide the model axis, and
+"[SPMD] Involuntary full rematerialization" warnings on attention
+reshapes). Model code calls ``constrain(x, kind)``; outside a configured
+context this is the identity, so tests/examples are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional
+
+import jax
+
+_SPECS: contextvars.ContextVar[Optional[Dict]] = \
+    contextvars.ContextVar("act_sharding_specs", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(specs: Dict):
+    """specs: kind -> PartitionSpec, e.g. {"act": P(("pod","data"), None),
+    "logits": P(("pod","data"), None, "model")}."""
+    token = _SPECS.set(specs)
+    try:
+        yield
+    finally:
+        _SPECS.reset(token)
+
+
+def constrain(x, kind: str):
+    specs = _SPECS.get()
+    if specs is None or kind not in specs:
+        return x
+    spec = specs[kind]
+    ndim_spec = len(spec)
+    if x.ndim < ndim_spec:
+        return x
+    if x.ndim > ndim_spec:
+        spec = jax.sharding.PartitionSpec(*spec, *([None] * (x.ndim - ndim_spec)))
+    return jax.lax.with_sharding_constraint(x, spec)

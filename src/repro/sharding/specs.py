@@ -1,0 +1,201 @@
+"""Parameter / activation / cache partition rules for the production mesh.
+
+Divisibility-aware: every rule falls back gracefully when a dim doesn't
+divide the ``model`` axis (granite's 24 heads and 40 experts over a 16-way
+model axis are the motivating cases — we shard the fused projection dim or
+the expert FFN dim instead of heads/experts).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MODEL_AXIS = "model"
+DATA_AXES = ("pod", "data")          # batch shards over whichever exist
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def batch_axes(mesh: Mesh, batch_size: int):
+    """The tuple of mesh axes the batch dim shards over (must divide)."""
+    axes = [a for a in DATA_AXES if a in mesh.axis_names]
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch_size % total == 0:
+        return tuple(axes)
+    # try fewer axes (e.g. batch=1 -> replicate)
+    for k in range(len(axes) - 1, 0, -1):
+        sub = axes[:k]
+        if batch_size % int(np.prod([mesh.shape[a] for a in sub])) == 0:
+            return tuple(sub)
+    return ()
+
+
+def _div(dim: int, m: int) -> bool:
+    return m > 1 and dim % m == 0
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+
+# leaf-name -> which logical dim (negative, from the right) to shard over
+# `model`, in preference order. Leading stack dims (layer/group) are skipped
+# automatically because rules index from the right.
+_PREFERENCES = {
+    "embed": (-2,),                   # [V, D]   vocab-shard
+    "lm_head": (-1,),                 # [D, V]   vocab-shard
+    "wq": (-1,), "wk": (-1,), "wv": (-1,),
+    "bq": (-1,), "bk": (-1,), "bv": (-1,),
+    "wo": (-2,),
+    "w_gate": (-3, -1), "w_up": (-3, -1),   # moe [.., E, D, F]: E then F
+    "w_down": (-3, -2),                      # moe [.., E, F, D]: E then F
+    "router": (),
+    "in_proj": (-1,),
+    "out_proj": (-2,),
+    "conv_w": (-1,), "conv_b": (-1,),
+    "enc_in_proj": (-1,),
+}
+# dense (non-moe) mlp leaves share names with moe ones but have one fewer
+# dim; the negative indexing handles both: dense w_gate [.., D, F] -> -3 is
+# the layer-stack dim (excluded below), so the -1 fallback fires.
+
+
+def param_spec(path_names, leaf, mesh: Mesh) -> P:
+    m = _axis_size(mesh, MODEL_AXIS)
+    name = path_names[-1]
+    ndim = leaf.ndim
+    # number of leading stack dims ("blocks"/"groups posj"/"encoder"...)
+    n_stack = sum(1 for p in path_names
+                  if p in ("blocks", "encoder", "decoder") or p.startswith("pos"))
+    if "groups" in path_names:
+        n_stack = 1  # groups/posj: one group-stack axis
+    prefs = _PREFERENCES.get(name, ())
+    spec = [None] * ndim
+    if name in _PREFERENCES and not prefs:
+        return P(*spec)                 # explicitly replicated (router, ...)
+    for d in prefs:
+        idx = ndim + d
+        if idx < n_stack or idx < 0:
+            continue
+        if _div(leaf.shape[idx], m):
+            spec[idx] = MODEL_AXIS
+            return P(*spec)
+    # fallback: largest trailing dim divisible by m (2D+ only)
+    if ndim - n_stack >= 2:
+        cands = sorted(range(n_stack, ndim), key=lambda i: -leaf.shape[i])
+        for idx in cands:
+            if _div(leaf.shape[idx], m):
+                spec[idx] = MODEL_AXIS
+                return P(*spec)
+    return P(*spec)
+
+
+def params_shardings(param_tree, mesh: Mesh):
+    """Tree of NamedShardings matching ``param_tree`` (arrays or structs)."""
+    def one(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        return NamedSharding(mesh, param_spec(names, leaf, mesh))
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def opt_state_shardings(opt_state_struct, params_shardings_tree, mesh: Mesh):
+    """Adam moments mirror the param shardings; scalars replicate."""
+    flat_p = jax.tree_util.tree_leaves(params_shardings_tree)
+
+    def match(struct_leaf, idx=[0]):
+        if struct_leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        sh = flat_p[idx[0] % len(flat_p)]
+        return sh
+
+    # m and v have identical structure to params; step is scalar. Walk by
+    # structure: tree_map over the OptState pytree.
+    def one(path, leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        # drop the leading OptState field name (m/v) to match param paths
+        return NamedSharding(mesh, param_spec(names, leaf, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, opt_state_struct)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def token_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    ba = batch_axes(mesh, batch)
+    return P(ba if ba else None, *([None] * extra_dims))
+
+
+def seq_shard_axes(mesh: Mesh, seqlen: int, used_by_batch) -> tuple:
+    """Axes to shard a long sequence/cache dim over (long_500k: batch=1)."""
+    free = [a for a in ("data", "model", "pod") if a in mesh.axis_names
+            and a not in (used_by_batch or ())]
+    out = []
+    prod = 1
+    for a in free:
+        if seqlen % (prod * mesh.shape[a]) == 0:
+            out.append(a)
+            prod *= mesh.shape[a]
+        if prod >= 256:
+            break
+    return tuple(out)
+
+
+def cache_shardings(cfg, cache_struct, mesh: Mesh, batch: int):
+    """NamedShardings for a decode cache pytree (see models.init_cache)."""
+    m = _axis_size(mesh, MODEL_AXIS)
+    ba = batch_axes(mesh, batch)
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        if leaf.ndim == 0 or name in ("pos", "cache_len"):
+            return NamedSharding(mesh, P())
+        if name in ("k", "v", "cross_k", "cross_v"):
+            # [L(, P7), B, C, K, hd]
+            spec = [None] * leaf.ndim
+            bdim = leaf.ndim - 4
+            spec[bdim] = ba if ba else None
+            if _div(leaf.shape[-2], m):
+                spec[-2] = MODEL_AXIS
+            elif not ba and _div(leaf.shape[-3], m):
+                spec[-3] = MODEL_AXIS          # shard cache length
+            elif _div(leaf.shape[-1], m):
+                spec[-1] = MODEL_AXIS
+            # long-context (batch unshardable): also spread C over data
+            if not ba:
+                seq_ax = seq_shard_axes(mesh, leaf.shape[-3],
+                                        (MODEL_AXIS,) if MODEL_AXIS in spec else ())
+                if seq_ax and spec[-3] is None:
+                    spec[-3] = seq_ax if len(seq_ax) > 1 else seq_ax[0]
+            return NamedSharding(mesh, P(*spec))
+        if name == "k_pos":
+            return NamedSharding(mesh, P())
+        if name == "ssm_state":
+            # [L(, P7), B, H, P, N]
+            spec = [None] * leaf.ndim
+            spec[leaf.ndim - 4] = ba if ba else None
+            for d in (-3, -2, -1):
+                if _div(leaf.shape[d], m):
+                    spec[d] = MODEL_AXIS
+                    break
+            return NamedSharding(mesh, P(*spec))
+        if name == "conv_state":
+            # [L(, P7), B, W-1, C]
+            spec = [None] * leaf.ndim
+            spec[leaf.ndim - 3] = ba if ba else None
+            if _div(leaf.shape[-1], m):
+                spec[-1] = MODEL_AXIS
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)

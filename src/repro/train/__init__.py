@@ -1,0 +1,4 @@
+from repro.train.optimizer import make_optimizer, cosine_schedule, clip_by_global_norm
+from repro.train.train_step import make_train_step, make_loss_fn, cross_entropy
+from repro.train.checkpoint import save_checkpoint, load_checkpoint, checkpoint_step
+from repro.train.metrics import MetricsLogger

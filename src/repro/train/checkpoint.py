@@ -1,0 +1,60 @@
+"""Dependency-free pytree checkpointing: one .npz of leaves + a JSON
+manifest holding the key paths (restores exact tree structure and dtypes)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or "bfloat16" in str(arr.dtype):
+            # numpy's savez can't serialize ml_dtypes (bfloat16) — store
+            # as f32 (lossless widening); restore casts back via manifest.
+            arr = arr.astype(np.float32)
+        out[name] = arr
+    return out
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0, extra: dict = None):
+    os.makedirs(path, exist_ok=True)
+    leaves = _flatten_with_names(tree)
+    np.savez(os.path.join(path, "leaves.npz"), **leaves)
+    manifest = {
+        "step": step,
+        "keys": sorted(leaves.keys()),
+        "dtypes": {k: str(v.dtype) for k, v in leaves.items()},
+        "shapes": {k: list(v.shape) for k, v in leaves.items()},
+        "extra": extra or {},
+    }
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str, template: Any):
+    """Restore into the structure of ``template`` (names must match)."""
+    with np.load(os.path.join(path, "leaves.npz")) as data:
+        loaded = {k: data[k] for k in data.files}
+    names = list(_flatten_with_names(template).keys())
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    assert len(names) == len(flat)
+    new_leaves = []
+    for name, leaf in zip(names, flat):
+        arr = loaded[name]
+        assert arr.shape == tuple(leaf.shape), (name, arr.shape, leaf.shape)
+        new_leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def checkpoint_step(path: str) -> int:
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f)["step"]

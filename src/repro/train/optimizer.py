@@ -1,0 +1,102 @@
+"""Optimizers from scratch (no optax in the container): AdamW, SGD,
+momentum-SGD, with cosine LR schedule and global-norm clipping."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.utils.trees import tree_global_norm
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: object          # first moment (or momentum buffer); None-like for sgd
+    v: object          # second moment; unused for sgd/momentum
+
+
+def cosine_schedule(cfg: TrainConfig):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = cfg.learning_rate * (step + 1.0) / max(cfg.warmup_steps, 1)
+        prog = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        cos = 0.5 * cfg.learning_rate * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < cfg.warmup_steps, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = tree_global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def make_optimizer(cfg: TrainConfig) -> Tuple[Callable, Callable]:
+    """Returns (init_fn(params) -> state, update_fn(grads, state, params) ->
+    (new_params, new_state, stats))."""
+    lr_fn = cosine_schedule(cfg)
+
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=mdt), params)
+        if cfg.optimizer == "adamw":
+            return OptState(jnp.zeros((), jnp.int32), zeros(), zeros())
+        if cfg.optimizer == "momentum":
+            return OptState(jnp.zeros((), jnp.int32), zeros(), None)
+        return OptState(jnp.zeros((), jnp.int32), None, None)
+
+    def update(grads, state: OptState, params):
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+        lr = lr_fn(state.step)
+        step = state.step + 1
+
+        if cfg.optimizer == "adamw":
+            t = step.astype(jnp.float32)
+            bc1 = 1.0 - cfg.beta1 ** t
+            bc2 = 1.0 - cfg.beta2 ** t
+
+            def upd(p, g, m, v):
+                g32 = g.astype(jnp.float32)
+                m32 = m.astype(jnp.float32)
+                v32 = v.astype(jnp.float32)
+                m32 = cfg.beta1 * m32 + (1.0 - cfg.beta1) * g32
+                v32 = cfg.beta2 * v32 + (1.0 - cfg.beta2) * jnp.square(g32)
+                u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + cfg.eps)
+                m, v = m32.astype(mdt), v32.astype(mdt)
+                if jnp.issubdtype(p.dtype, jnp.floating):
+                    u = u + cfg.weight_decay * p.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+            out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+            new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                           is_leaf=lambda o: isinstance(o, tuple))
+            new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                           is_leaf=lambda o: isinstance(o, tuple))
+            new_v = jax.tree_util.tree_map(lambda o: o[2], out,
+                                           is_leaf=lambda o: isinstance(o, tuple))
+            return new_p, OptState(step, new_m, new_v), {"lr": lr, "gnorm": gnorm}
+
+        if cfg.optimizer == "momentum":
+            def upd(p, g, m):
+                m = 0.9 * m + g.astype(jnp.float32)
+                return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+            out = jax.tree_util.tree_map(upd, params, grads, state.m)
+            new_p = jax.tree_util.tree_map(lambda o: o[0], out,
+                                           is_leaf=lambda o: isinstance(o, tuple))
+            new_m = jax.tree_util.tree_map(lambda o: o[1], out,
+                                           is_leaf=lambda o: isinstance(o, tuple))
+            return new_p, OptState(step, new_m, None), {"lr": lr, "gnorm": gnorm}
+
+        # plain SGD
+        new_p = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_p, OptState(step, None, None), {"lr": lr, "gnorm": gnorm}
+
+    return init, update

@@ -1,0 +1,74 @@
+"""Train-step factory: next-token cross entropy + optimizer update.
+
+The same step is used by the single-host examples and by the multi-pod
+dry-run (where it is jitted with in/out shardings over the production mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models.transformer import forward
+from repro.train.optimizer import make_optimizer
+
+
+def cross_entropy(logits, targets, mask=None, label_smoothing: float = 0.0):
+    """logits: [B, S, V]; targets: [B, S] int. Mean NLL over valid tokens."""
+    V = logits.shape[-1]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if label_smoothing > 0.0:
+        smooth = -jnp.mean(logp, axis=-1)
+        nll = (1.0 - label_smoothing) * nll + label_smoothing * smooth
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def make_loss_fn(model_cfg: ModelConfig, train_cfg: TrainConfig, *,
+                 moe_impl: str = "dense", q_chunk: int = 512,
+                 kv_chunk: int = 1024, unroll: int = 1):
+    def loss_fn(params, batch: Dict[str, Any]):
+        logits, aux = forward(model_cfg, params, batch, moe_impl=moe_impl,
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              remat=train_cfg.remat, unroll=unroll)
+        tokens = batch["tokens"]
+        targets = batch.get("labels")
+        if targets is None:
+            logits_s = logits[:, :-1]
+            targets = tokens[:, 1:]
+            mask = batch.get("loss_mask")
+            mask = mask[:, 1:] if mask is not None else None
+        else:
+            logits_s = logits
+            mask = batch.get("loss_mask")
+        ce = cross_entropy(logits_s, targets, mask,
+                           train_cfg.label_smoothing)
+        return ce + aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig, *,
+                    moe_impl: str = "dense", q_chunk: int = 512,
+                    kv_chunk: int = 1024, unroll: int = 1):
+    """Returns (init_state_fn(params) -> opt_state, train_step fn).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics)
+    """
+    loss_fn = make_loss_fn(model_cfg, train_cfg, moe_impl=moe_impl,
+                           q_chunk=q_chunk, kv_chunk=kv_chunk, unroll=unroll)
+    opt_init, opt_update = make_optimizer(train_cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        params, opt_state, stats = opt_update(grads, opt_state, params)
+        metrics = {"loss": loss, **parts, **stats}
+        return params, opt_state, metrics
+
+    return opt_init, train_step

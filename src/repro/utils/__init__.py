@@ -1,0 +1,14 @@
+from repro.utils.trees import (
+    tree_flatten_vector,
+    tree_unflatten_vector,
+    tree_global_norm,
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_weighted_mean,
+    tree_zeros_like,
+    tree_num_params,
+    tree_bytes,
+    tree_cast,
+)
+from repro.utils.prng import PRNGSequence

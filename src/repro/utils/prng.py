@@ -1,0 +1,23 @@
+"""Deterministic PRNG key management."""
+from __future__ import annotations
+
+import jax
+
+
+class PRNGSequence:
+    """Stateful convenience wrapper that hands out fresh subkeys.
+
+    Host-side only (init code, data generation); jitted code threads keys
+    explicitly.
+    """
+
+    def __init__(self, seed: int):
+        self._key = jax.random.PRNGKey(seed)
+
+    def __next__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def take(self, n: int):
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return subs

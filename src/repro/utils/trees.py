@@ -1,0 +1,105 @@
+"""Pytree utilities used across the framework.
+
+All helpers are pure functions over JAX pytrees so they can be jitted,
+vmapped over a client axis (federated aggregation), and differentiated
+through where that makes sense.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_flatten_vector(tree, dtype=jnp.float32):
+    """Flatten a pytree of arrays into a single 1-D vector.
+
+    Used for weight-divergence (Alg. 4) and K-means features (Alg. 2),
+    where a client model must be treated as one Euclidean point.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros((0,), dtype=dtype)
+    return jnp.concatenate([jnp.ravel(l).astype(dtype) for l in leaves])
+
+
+def tree_unflatten_vector(tree_def_like, vector):
+    """Inverse of :func:`tree_flatten_vector` given a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree_def_like)
+    out = []
+    idx = 0
+    for leaf in leaves:
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        out.append(jnp.reshape(vector[idx:idx + size], leaf.shape).astype(leaf.dtype))
+        idx += size
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def tree_add(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree_util.tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a, s):
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_weighted_mean(trees, weights):
+    """Weighted average of a list of pytrees — FedAvg aggregation, eq. (4).
+
+    ``w_global = sum_n D_n w_n / sum_n D_n``
+    """
+    weights = jnp.asarray(weights, dtype=jnp.float32)
+    norm = weights / jnp.sum(weights)
+
+    def _avg(*leaves):
+        stacked = jnp.stack([l.astype(jnp.float32) for l in leaves])
+        out = jnp.tensordot(norm, stacked, axes=1)
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(_avg, *trees)
+
+
+def tree_weighted_mean_stacked(stacked_tree, weights):
+    """FedAvg aggregation (eq. 4) over a *stacked* client axis.
+
+    ``stacked_tree`` leaves have a leading client axis N; this is the
+    mesh-friendly form (the client axis is shardable over ``data``).
+    """
+    weights = jnp.asarray(weights, dtype=jnp.float32)
+    norm = weights / jnp.sum(weights)
+
+    def _avg(leaf):
+        w = norm.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return jnp.sum(leaf.astype(jnp.float32) * w, axis=0).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(_avg, stacked_tree)
+
+
+def tree_zeros_like(tree):
+    return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+
+def tree_num_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda l: l.astype(dtype) if jnp.issubdtype(l.dtype, jnp.floating) else l,
+        tree)

@@ -1,0 +1,102 @@
+"""Beyond-paper extensions: compression↔SAO coupling, FedProx, FedAvgM,
+box-corrected SAO."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compression import (apply_compression, compress_int8,
+                                    compress_topk, payload_mbit)
+from repro.core.algorithms import ServerMomentum
+from repro.utils.trees import tree_sub
+
+
+def test_int8_roundtrip_error_bounded():
+    x = {"w": jax.random.normal(jax.random.PRNGKey(0), (100, 50))}
+    y = compress_int8(x)
+    err = float(jnp.max(jnp.abs(x["w"] - y["w"])))
+    scale = float(jnp.max(jnp.abs(x["w"]))) / 127.0
+    assert err <= scale * 0.5 + 1e-6
+
+
+def test_topk_keeps_largest():
+    x = {"w": jnp.asarray([1.0, -5.0, 0.1, 3.0, -0.2])}
+    y = compress_topk(x, 0.4)          # keep 2 of 5
+    got = np.asarray(y["w"])
+    assert got[1] == -5.0 and got[3] == 3.0
+    assert got[0] == 0.0 and got[2] == 0.0 and got[4] == 0.0
+
+
+def test_payload_sizes_ordered():
+    n = 113_744                         # paper MNIST CNN
+    full = payload_mbit(n, "none")
+    q8 = payload_mbit(n, "int8")
+    tk = payload_mbit(n, "topk:0.05")
+    assert full == pytest.approx(32 * n / 1e6)
+    assert q8 < 0.3 * full
+    assert tk < 0.1 * full
+
+
+def test_compression_reduces_sao_delay():
+    """Smaller z_n → lower T_k — but ONLY with the box-corrected allocator.
+
+    Analytic finding (EXPERIMENTS §Perf-sched): when the Alg.-5 cubic pushes
+    f above f_max, the paper's energy-tight bandwidth rule (21) gives
+    t_com = (e_cons − G·f_max²)/p, which is INDEPENDENT of z — the paper-
+    faithful allocator cannot monetize uplink compression in clipped
+    regimes. The KKT box completion restores the coupling.
+    """
+    from repro.core.wireless import sample_fleet, fleet_arrays
+    from repro.core.sao import solve_sao
+    import dataclasses
+    fleet = sample_fleet(100, seed=0).select(np.arange(10))
+    arr_full = fleet_arrays(fleet)
+    z8 = payload_mbit(113_744, "int8")
+    fleet8 = dataclasses.replace(fleet, z=np.full_like(fleet.z, z8))
+    arr8 = fleet_arrays(fleet8)
+
+    t_full_paper = float(solve_sao(arr_full, 20.0).T)
+    t_int8_paper = float(solve_sao(arr8, 20.0).T)
+    t_full_box = float(solve_sao(arr_full, 20.0, box_correct=True).T)
+    t_int8_box = float(solve_sao(arr8, 20.0, box_correct=True).T)
+
+    # the paper-faithful allocator is z-blind here (the finding):
+    assert abs(t_int8_paper - t_full_paper) < 0.05 * t_full_paper
+    # the box-corrected allocator converts compression into latency:
+    assert t_int8_box < 0.5 * t_full_box, (t_full_box, t_int8_box)
+
+
+def test_server_momentum_accelerates_constant_direction():
+    opt = ServerMomentum(beta=0.9, lr=1.0)
+    w = {"a": jnp.zeros(3)}
+    agg = {"a": jnp.full(3, -1.0)}      # constant pseudo-gradient direction
+    deltas = []
+    for _ in range(5):
+        new_w = opt.step(w, {"a": w["a"] - 1.0})
+        deltas.append(float(jnp.mean(w["a"] - new_w["a"])))
+        w = new_w
+    assert deltas[-1] > deltas[0]       # momentum accumulates
+
+
+def test_fedprox_pulls_toward_global():
+    """With huge μ the client barely moves from the global model."""
+    from repro.core.algorithms import make_fedprox_local_update
+    from repro.core.fedavg import make_local_update
+    from repro.configs.paper_cnn import FASHION_CNN
+    from repro.models.cnn import init_cnn
+    from repro.data import make_dataset
+    ds = make_dataset("fashion", 128, seed=0)
+    g = init_cnn(FASHION_CNN, jax.random.PRNGKey(0))
+    imgs, labs = jnp.asarray(ds.images), jnp.asarray(ds.labels)
+    key = jax.random.PRNGKey(1)
+    # lr·mu must stay < 2 for the proximal pull to be stable
+    plain = make_local_update(FASHION_CNN, 0.05, 10, 32)(g, imgs, labs, key)
+    prox = make_fedprox_local_update(FASHION_CNN, 0.05, 10, 32, mu=20.0)(
+        g, imgs, labs, key)
+    d_plain = sum(float(jnp.sum(jnp.square(a - b)))
+                  for a, b in zip(jax.tree_util.tree_leaves(plain),
+                                  jax.tree_util.tree_leaves(g)))
+    d_prox = sum(float(jnp.sum(jnp.square(a - b)))
+                 for a, b in zip(jax.tree_util.tree_leaves(prox),
+                                 jax.tree_util.tree_leaves(g)))
+    assert d_prox < 0.5 * d_plain

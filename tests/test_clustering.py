@@ -1,0 +1,93 @@
+"""K-means device clustering (Alg. 2-3) + ARI metric properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core.clustering import (kmeans_fit, kmeans_predict,
+                                   adjusted_rand_index, extract_features,
+                                   clusters_from_labels)
+
+slow = settings(deadline=None, max_examples=10,
+                suppress_health_check=list(HealthCheck))
+
+
+def _blobs(key, n_per, c, f, spread=0.05):
+    ks = jax.random.split(key, c + 1)
+    centers = jax.random.normal(ks[0], (c, f)) * 3.0
+    pts = jnp.concatenate([
+        centers[i] + spread * jax.random.normal(ks[i + 1], (n_per, f))
+        for i in range(c)])
+    labels = np.repeat(np.arange(c), n_per)
+    return pts, labels
+
+
+@slow
+@given(seed=st.integers(0, 20))
+def test_kmeans_recovers_blobs(seed):
+    x, truth = _blobs(jax.random.PRNGKey(seed), 20, 5, 8)
+    _, labels, _ = kmeans_fit(jax.random.PRNGKey(seed + 1), x, 5)
+    ari = adjusted_rand_index(np.asarray(labels), truth)
+    assert ari > 0.9, ari
+
+
+def test_kmeans_predict_matches_fit_labels():
+    x, _ = _blobs(jax.random.PRNGKey(0), 30, 4, 6)
+    cent, labels, _ = kmeans_fit(jax.random.PRNGKey(1), x, 4)
+    pred = kmeans_predict(cent, x)
+    assert bool(jnp.all(pred == labels))
+
+
+def test_ari_bounds():
+    a = np.array([0, 0, 1, 1, 2, 2])
+    assert adjusted_rand_index(a, a) == pytest.approx(1.0)
+    # label permutation keeps ARI = 1
+    perm = np.array([2, 2, 0, 0, 1, 1])
+    assert adjusted_rand_index(perm, a) == pytest.approx(1.0)
+    rng = np.random.default_rng(0)
+    scores = [adjusted_rand_index(rng.integers(0, 3, 60),
+                                  rng.integers(0, 3, 60)) for _ in range(30)]
+    assert abs(float(np.mean(scores))) < 0.12      # ~0 for random labels
+
+
+def test_extract_features_layer_selection():
+    """Paper §IV-B: the feature is the weights of ONE chosen layer."""
+    from repro.configs.paper_cnn import MNIST_CNN
+    from repro.models.cnn import init_cnn
+    N = 5
+    stacked = jax.vmap(lambda k: init_cnn(MNIST_CNN, k))(
+        jax.random.split(jax.random.PRNGKey(0), N))
+    f_fc2 = extract_features(stacked, "w_fc2")
+    assert f_fc2.shape == (N, 224 * 10)            # Table II: 2240 weights
+    f_all = extract_features(stacked, "all")
+    assert f_all.shape == (N, 113744)              # Table II total
+    f_auto = extract_features(stacked, "auto")
+    np.testing.assert_array_equal(np.asarray(f_auto), np.asarray(f_fc2))
+
+
+def test_clusters_from_labels_partition():
+    labels = np.array([0, 1, 0, 2, 1, 0])
+    cl = clusters_from_labels(labels, 3)
+    assert sorted(np.concatenate(cl).tolist()) == list(range(6))
+    assert [len(c) for c in cl] == [3, 2, 1]
+
+
+def test_kmeans_feature_layer_separates_majority_classes():
+    """The paper's core §IV-A claim, in miniature: clients trained on
+    different majority classes become K-means-separable from w_fc2."""
+    from repro.configs.base import FLConfig
+    from repro.configs.paper_cnn import CNN_CONFIGS
+    from repro.core.fedavg import FLExperiment
+    from repro.core import sample_fleet
+    from repro.data import make_dataset, partition_bias
+    ds = make_dataset("fashion", 1500, seed=0)
+    fed = partition_bias(ds, 20, 64, 0.9, seed=1)
+    fleet = sample_fleet(20, seed=0)
+    fl = FLConfig(num_devices=20, devices_per_round=10, local_iters=30,
+                  num_clusters=10, learning_rate=0.08)
+    exp = FLExperiment(CNN_CONFIGS["fashion"], fed, ds.images[:200],
+                       ds.labels[:200], fleet, fl, seed=0)
+    exp.initial_round()
+    ari = adjusted_rand_index(exp.cluster_labels, fed.majority)
+    assert ari > 0.3, ari

@@ -1,0 +1,82 @@
+"""Synthetic data + non-iid partitioner invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.data import make_dataset, partition_bias, partition_dirichlet
+from repro.data.synthetic import make_token_stream
+
+slow = settings(deadline=None, max_examples=8,
+                suppress_health_check=list(HealthCheck))
+
+
+def test_dataset_deterministic():
+    a = make_dataset("mnist", 100, seed=3)
+    b = make_dataset("mnist", 100, seed=3)
+    np.testing.assert_array_equal(a.images, b.images)
+    np.testing.assert_array_equal(a.labels, b.labels)
+
+
+def test_train_test_share_class_structure():
+    """Different seeds = different samples but SAME class templates."""
+    tr = make_dataset("fashion", 400, seed=0)
+    te = make_dataset("fashion", 400, seed=123)
+    # class-mean images across splits should be highly correlated
+    for k in range(3):
+        m1 = tr.images[tr.labels == k].mean(0).ravel()
+        m2 = te.images[te.labels == k].mean(0).ravel()
+        corr = np.corrcoef(m1, m2)[0, 1]
+        assert corr > 0.5, (k, corr)       # ≈0 if templates differed
+    # negative control: means of DIFFERENT classes correlate less
+    m0 = tr.images[tr.labels == 0].mean(0).ravel()
+    m1o = te.images[te.labels == 1].mean(0).ravel()
+    assert np.corrcoef(m0, m1o)[0, 1] < 0.6
+
+
+def test_shapes_match_paper_table2():
+    assert make_dataset("mnist", 10).images.shape == (10, 28, 28, 1)
+    assert make_dataset("cifar10", 10).images.shape == (10, 32, 32, 3)
+    assert make_dataset("fashion", 10).images.shape == (10, 28, 28, 1)
+
+
+@slow
+@given(sigma=st.sampled_from([0.5, 0.8]))
+def test_bias_partition_majority_fraction(sigma):
+    ds = make_dataset("mnist", 3000, seed=0)
+    fed = partition_bias(ds, 20, 100, sigma, seed=1)
+    for n in range(20):
+        frac = float(np.mean(fed.labels[n] == fed.majority[n]))
+        assert abs(frac - sigma) < 0.12, (n, frac, sigma)
+
+
+def test_bias_partition_H_two_classes():
+    """σ=H: 80% majority + 20% from ONE secondary class."""
+    ds = make_dataset("mnist", 3000, seed=0)
+    fed = partition_bias(ds, 10, 100, "H", seed=1)
+    for n in range(10):
+        classes, counts = np.unique(fed.labels[n], return_counts=True)
+        assert len(classes) == 2
+        assert counts.max() / counts.sum() == pytest.approx(0.8, abs=0.05)
+
+
+def test_majorities_cover_all_classes():
+    ds = make_dataset("mnist", 2000, seed=0)
+    fed = partition_bias(ds, 30, 50, 0.8, seed=2)
+    assert set(fed.majority.tolist()) == set(range(10))
+
+
+def test_dirichlet_partition_shapes():
+    ds = make_dataset("fashion", 1000, seed=0)
+    fed = partition_dirichlet(ds, 8, 64, alpha=0.3, seed=0)
+    assert fed.images.shape == (8, 64, 28, 28, 1)
+    assert fed.labels.shape == (8, 64)
+
+
+def test_token_stream_learnable_structure():
+    toks = make_token_stream(1000, 5000, seed=0)
+    assert toks.min() >= 0 and toks.max() < 1000
+    # Markov structure: conditional entropy < marginal entropy
+    from collections import Counter
+    pairs = Counter(zip(toks[:-1], toks[1:]))
+    uni = Counter(toks)
+    assert len(pairs) < 0.5 * len(uni) ** 2

@@ -1,0 +1,35 @@
+"""End-to-end dry-run CLI guard: one (arch × shape × mesh) combo lowers and
+compiles in a fresh subprocess (the 512-device XLA flag must only ever be
+set there, never in this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo(tmp_path):
+    out = tmp_path / "dryrun.jsonl"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "tinyllama-1.1b", "--shape", "decode_32k",
+         "--mesh", "single", "--no-twin", "--out", str(out)],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=540)
+    assert res.returncode == 0, res.stdout[-2000:] + res.stderr[-2000:]
+    rec = json.loads(out.read_text().splitlines()[0])
+    assert rec["arch"] == "tinyllama-1.1b"
+    assert rec["chips"] == 256
+    assert rec["peak_memory_per_device"] < 16e9      # decode fits v5e HBM
+
+
+def test_this_process_sees_one_device():
+    """The CPU test environment must never inherit the 512-device flag."""
+    import jax
+    assert len(jax.devices()) == 1

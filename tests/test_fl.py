@@ -1,0 +1,143 @@
+"""FL loop integration + aggregation/selection/divergence properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import selection as sel
+from repro.core.divergence import weight_divergence
+from repro.utils.trees import (tree_weighted_mean, tree_weighted_mean_stacked,
+                               tree_flatten_vector)
+
+slow = settings(deadline=None, max_examples=15,
+                suppress_health_check=list(HealthCheck))
+
+
+# ---------------------------------------------------------------------------
+# eq. (4) aggregation
+# ---------------------------------------------------------------------------
+
+
+@slow
+@given(seed=st.integers(0, 30), n=st.integers(2, 8))
+def test_weighted_mean_matches_manual(seed, n):
+    keys = jax.random.split(jax.random.PRNGKey(seed), n)
+    trees = [{"a": jax.random.normal(k, (3, 4)), "b": jax.random.normal(k, (2,))}
+             for k in keys]
+    w = np.abs(np.random.default_rng(seed).uniform(1, 100, n))
+    agg = tree_weighted_mean(trees, w)
+    manual = sum(wi * np.asarray(t["a"]) for wi, t in zip(w, trees)) / w.sum()
+    np.testing.assert_allclose(np.asarray(agg["a"]), manual,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_stacked_equals_list_aggregation():
+    keys = jax.random.split(jax.random.PRNGKey(0), 5)
+    trees = [{"w": jax.random.normal(k, (4, 4))} for k in keys]
+    stacked = {"w": jnp.stack([t["w"] for t in trees])}
+    w = np.array([1.0, 2.0, 3.0, 4.0, 5.0])
+    a = tree_weighted_mean(trees, w)
+    b = tree_weighted_mean_stacked(stacked, w)
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               rtol=1e-5)
+
+
+def test_aggregation_idempotent_on_identical_models():
+    t = {"w": jnp.ones((3, 3)) * 2.5}
+    stacked = {"w": jnp.stack([t["w"]] * 4)}
+    agg = tree_weighted_mean_stacked(stacked, np.array([1, 7, 3, 2.0]))
+    np.testing.assert_allclose(np.asarray(agg["w"]), 2.5, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# weight divergence (Alg. 4 signal)
+# ---------------------------------------------------------------------------
+
+
+def test_weight_divergence_matches_flat_norm():
+    g = {"a": jnp.ones((3, 2)), "b": jnp.zeros((4,))}
+    clients = {"a": jnp.stack([jnp.ones((3, 2)), 3 * jnp.ones((3, 2))]),
+               "b": jnp.stack([jnp.zeros((4,)), 2 * jnp.ones((4,))])}
+    d = weight_divergence(clients, g)
+    assert float(d[0]) == pytest.approx(0.0, abs=1e-6)
+    want = np.sqrt(6 * 4.0 + 4 * 4.0)
+    assert float(d[1]) == pytest.approx(want, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# selection policies
+# ---------------------------------------------------------------------------
+
+
+def test_select_divergence_picks_top_per_cluster():
+    div = np.array([0.1, 5.0, 0.2, 9.0, 0.3, 1.0])
+    clusters = [np.array([0, 1]), np.array([2, 3]), np.array([4, 5])]
+    idx = sel.select_divergence(div, clusters, s=1)
+    assert sorted(idx.tolist()) == [1, 3, 5]
+
+
+def test_select_divergence_top_s():
+    div = np.array([3.0, 2.0, 1.0, 9.0])
+    idx = sel.select_divergence(div, [np.arange(4)], s=2)
+    assert sorted(idx.tolist()) == [0, 3]
+
+
+def test_select_kmeans_random_one_per_cluster():
+    rng = np.random.default_rng(0)
+    clusters = [np.array([0, 1, 2]), np.array([3]), np.array([], np.int64)]
+    idx = sel.select_kmeans_random(rng, clusters, s=1)
+    assert len(idx) == 2
+    assert idx[0] in (0, 1, 2) and idx[1] == 3
+
+
+def test_select_random_no_replacement():
+    rng = np.random.default_rng(1)
+    idx = sel.select_random(rng, 100, 10)
+    assert len(np.unique(idx)) == 10
+
+
+def test_select_icas_prefers_high_importance_and_rate():
+    u = np.array([1.0, 10.0, 1.0, 10.0])
+    r = np.array([1.0, 1.0, 10.0, 10.0])
+    idx = sel.select_icas(u, r, 1)
+    assert idx[0] == 3
+
+
+def test_select_rra_nonempty_varying():
+    rng = np.random.default_rng(2)
+    e_eq = np.abs(rng.uniform(0.001, 0.05, 100))
+    e_b = np.abs(rng.uniform(0.03, 0.06, 100))
+    sizes = {len(sel.select_rra(rng, e_eq, e_b)) for _ in range(10)}
+    assert all(s > 0 for s in sizes)
+    assert len(sizes) > 1                      # set size varies round-to-round
+
+
+# ---------------------------------------------------------------------------
+# mini end-to-end: divergence selection helps on pathological non-iid
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fl_round_mechanics():
+    from repro.configs.base import FLConfig
+    from repro.configs.paper_cnn import CNN_CONFIGS
+    from repro.core import FLExperiment, sample_fleet
+    from repro.data import make_dataset, partition_bias
+    ds = make_dataset("fashion", 1200, seed=0)
+    fed = partition_bias(ds, 20, 64, 0.8, seed=1)
+    fleet = sample_fleet(20, seed=0)
+    fl = FLConfig(num_devices=20, devices_per_round=10, local_iters=10,
+                  num_clusters=10, learning_rate=0.08)
+    exp = FLExperiment(CNN_CONFIGS["fashion"], fed, ds.images[:200],
+                       ds.labels[:200], fleet, fl, seed=0)
+    hist = exp.run("divergence", rounds=3)
+    assert len(hist.accuracy) == 4                 # initial + 3
+    assert len(hist.T_k) == 4
+    assert all(t > 0 for t in hist.T_k)
+    assert all(e > 0 for e in hist.E_k)
+    # clusters partition all clients
+    assert sorted(np.concatenate(exp.clusters).tolist()) == list(range(20))
+    # selected sets have one device per non-empty cluster
+    sel_idx = hist.selected[-1]
+    assert len(sel_idx) == len([c for c in exp.clusters if len(c)])

@@ -1,0 +1,67 @@
+"""The sharded FL-round step (launch/fl_round.py): selection + aggregation
+semantics, independent of any mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.fl_round import fl_round_step
+from repro.models import init_model
+
+
+def _setup(n=8, c=3):
+    cfg = get_smoke_config("tinyllama-1.1b")
+    g = init_model(cfg, jax.random.PRNGKey(0))
+    keys = jax.random.split(jax.random.PRNGKey(1), n)
+    clients = jax.vmap(lambda k: init_model(cfg, k))(keys)
+    feat = clients.get("lm_head", clients["embed"])
+    feat_dim = feat.reshape(n, -1).shape[1]
+    cent = jax.random.normal(jax.random.PRNGKey(2), (c, feat_dim))
+    sizes = jnp.arange(1.0, n + 1.0)
+    return cfg, g, clients, cent, sizes
+
+
+def test_fl_round_selection_is_top_divergence_per_cluster():
+    n, c = 8, 3
+    cfg, g, clients, cent, sizes = _setup(n, c)
+    new_g, div, labels = fl_round_step(clients, g, cent, sizes,
+                                       num_clusters=c)
+    div = np.asarray(div)
+    labels = np.asarray(labels)
+    assert div.shape == (n,) and (div > 0).all()
+    assert set(labels.tolist()) <= set(range(c))
+    # reconstruct the expected winners
+    winners = set()
+    for k in np.unique(labels):
+        members = np.flatnonzero(labels == k)
+        winners.add(members[np.argmax(div[members])])
+    # aggregate must equal the sizes-weighted mean over exactly the winners
+    w = np.zeros(n)
+    w[list(winners)] = np.asarray(sizes)[list(winners)]
+    w = w / w.sum()
+    lead = np.asarray(clients["embed"]).reshape(n, -1)
+    want = (w[:, None] * lead).sum(0)
+    got = np.asarray(new_g["embed"]).reshape(-1)
+    np.testing.assert_allclose(got, want.astype(got.dtype), rtol=2e-2,
+                               atol=1e-3)
+
+
+def test_fl_round_feature_slice_consistency():
+    """feature_slice only changes CLUSTERING, never divergence/aggregation
+    semantics (it is the paper's w_fc2 dimensionality-reduction lever)."""
+    cfg, g, clients, cent, sizes = _setup(8, 3)
+    _, div_full, _ = fl_round_step(clients, g, cent, sizes, num_clusters=3)
+    cent_small = cent[:, :64]
+    _, div_slice, labels = fl_round_step(clients, g, cent_small, sizes,
+                                         num_clusters=3, feature_slice=64)
+    np.testing.assert_allclose(np.asarray(div_full), np.asarray(div_slice),
+                               rtol=1e-6)
+    assert labels.shape == (8,)
+
+
+def test_identical_clients_zero_divergence():
+    cfg, g, clients, cent, sizes = _setup(4, 2)
+    same = jax.tree_util.tree_map(
+        lambda gl: jnp.broadcast_to(gl, (4,) + gl.shape), g)
+    _, div, _ = fl_round_step(same, g, cent, sizes, num_clusters=2)
+    assert float(jnp.max(div)) < 1e-3

@@ -1,0 +1,30 @@
+"""Algorithm 6 (transmit-power optimization) tests."""
+import numpy as np
+
+from repro.core.power import optimal_transmit_power
+from repro.core.wireless import sample_fleet, fleet_arrays, dbm_to_watt
+from repro.core.sao import solve_sao
+
+
+def test_alg6_beats_or_matches_endpoints():
+    fleet = sample_fleet(100, seed=0, e_cons_range=(35e-3, 35e-3)) \
+        .select(np.arange(10))
+    res = optimal_transmit_power(fleet, 20.0, p_min_dbm=10, p_max_dbm=23)
+    t_lo = float(solve_sao(fleet_arrays(fleet.with_power(dbm_to_watt(10))),
+                           20.0).T)
+    t_hi = float(solve_sao(fleet_arrays(fleet.with_power(dbm_to_watt(23))),
+                           20.0).T)
+    assert res.T_star <= min(t_lo, t_hi) * 1.05
+    assert 10.0 <= res.p_star_dbm <= 23.01
+    assert len(res.history) >= 2
+
+
+def test_alg6_near_grid_optimum():
+    fleet = sample_fleet(100, seed=0, e_cons_range=(35e-3, 35e-3)) \
+        .select(np.arange(10))
+    grid = {p: float(solve_sao(
+        fleet_arrays(fleet.with_power(dbm_to_watt(p))), 20.0).T)
+        for p in range(10, 24)}
+    best_T = min(grid.values())
+    res = optimal_transmit_power(fleet, 20.0)
+    assert res.T_star <= best_T * 1.05

@@ -1,0 +1,108 @@
+"""Roofline machinery: HLO collective parsing + cost-analysis semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.analysis import collective_bytes, _shape_bytes
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16", "8,128") == 8 * 128 * 2
+    assert _shape_bytes("f32", "4,4,4") == 64 * 4
+    assert _shape_bytes("pred", "10") == 10
+    assert _shape_bytes("f32", "") == 4          # scalar
+
+
+def test_collective_parser_on_canned_hlo():
+    hlo = """
+  %ag.1 = bf16[8,256]{1,0} all-gather(bf16[8,16]{1,0} %p0), replica_groups={}
+  %ar = f32[128]{0} all-reduce(f32[128]{0} %x), to_apply=%add
+  %rs = f32[16,8]{1,0} reduce-scatter(f32[16,128]{1,0} %y), dimensions={1}
+  %a2a = bf16[4,32]{1,0} all-to-all(bf16[4,32]{1,0} %z), dimensions={0}
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %w), source_target_pairs={{0,1}}
+  %other = f32[10]{0} add(f32[10]{0} %a, f32[10]{0} %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 256 * 2
+    assert out["all-reduce"] == 128 * 4
+    assert out["reduce-scatter"] == 16 * 8 * 4
+    assert out["all-to-all"] == 4 * 32 * 2
+    assert out["collective-permute"] == 2 * 4
+    assert out["total"] == sum(out[k] for k in
+                               ("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_async_start_done_counted_once():
+    hlo = """
+  %ags = (bf16[8,16]{1,0}, bf16[8,256]{1,0}) all-gather-start(bf16[8,16]{1,0} %p0)
+  %agd = bf16[8,256]{1,0} all-gather-done((bf16[8,16]{1,0}, bf16[8,256]{1,0}) %ags)
+"""
+    out = collective_bytes(hlo)
+    # only the -start line is counted (both tuple members)
+    assert out["counts"]["all-gather"] == 1
+
+
+def test_cost_analysis_flops_exact_matmul():
+    """cost_analysis flops == 2·M·N·K for a plain matmul."""
+    M, N, K = 64, 32, 128
+    f = jax.jit(lambda a, b: a @ b)
+    lowered = f.lower(jax.ShapeDtypeStruct((M, K), jnp.float32),
+                      jax.ShapeDtypeStruct((K, N), jnp.float32))
+    cost = lowered.compile().cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    assert cost["flops"] == pytest.approx(2 * M * N * K, rel=0.01)
+
+
+def test_cost_analysis_undercounts_scan_loops():
+    """Documents WHY the dry-run needs the unrolled roofline twin: a scan
+    body is counted once, not × trip count."""
+    M = 64
+    w = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, M), jnp.float32)
+
+    def scanned(ws, x):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    def unrolled(ws, x):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws, unroll=10)[0]
+
+    ws = jax.ShapeDtypeStruct((10, M, M), jnp.float32)
+    cost_s = jax.jit(scanned).lower(ws, x).compile().cost_analysis()
+    cost_u = jax.jit(unrolled).lower(ws, x).compile().cost_analysis()
+    if isinstance(cost_s, list):
+        cost_s, cost_u = cost_s[0], cost_u[0]
+    body = 2 * 8 * M * M
+    assert cost_u["flops"] >= 10 * body * 0.99
+    assert cost_s["flops"] <= 2 * body            # loop counted ~once
+
+
+def test_model_flops_formula():
+    from repro.configs import get_config
+    from repro.configs.base import INPUT_SHAPES
+    from repro.roofline.analysis import model_flops
+    cfg = get_config("tinyllama-1.1b")
+    mf_train = model_flops(cfg, INPUT_SHAPES["train_4k"], include_backward=True)
+    n = cfg.num_params()
+    assert mf_train == pytest.approx(6 * n * 256 * 4096, rel=1e-6)
+    mf_dec = model_flops(cfg, INPUT_SHAPES["decode_32k"], include_backward=False)
+    assert mf_dec == pytest.approx(2 * n * 128, rel=1e-6)
+    # MoE counts ACTIVE params only
+    moe = get_config("mixtral-8x22b")
+    assert moe.num_params(active_only=True) < 0.5 * moe.num_params()
+
+
+def test_roofline_report_bottleneck():
+    from repro.roofline.analysis import RooflineReport
+    r = RooflineReport(arch="x", shape="train_4k", mesh="single", chips=256,
+                       flops_per_device=197e12,            # exactly 1 s
+                       bytes_per_device=819e9 * 2,         # 2 s -> memory
+                       collective_bytes_per_device=50e9 * 0.5,
+                       model_flops_global=197e12 * 256)
+    assert r.bottleneck == "memory"
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(2.0)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.useful_ratio == pytest.approx(1.0)

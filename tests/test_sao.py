@@ -1,0 +1,146 @@
+"""Property-based tests for the SAO solver (paper §V, Theorem 1 invariants)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core.wireless import sample_fleet, fleet_arrays, LN2
+from repro.core.sao import solve_sao, kkt_residuals
+from repro.core.baselines import equal_bandwidth, fedl_lambda
+
+B_MHZ = 20.0
+
+
+def _arr(seed, n=10, e_lo=0.03, e_hi=0.06):
+    fleet = sample_fleet(100, seed=seed, e_cons_range=(e_lo, e_hi))
+    return fleet_arrays(fleet.select(np.arange(n)))
+
+
+slow = settings(deadline=None, max_examples=12,
+                suppress_health_check=list(HealthCheck))
+
+
+@slow
+@given(seed=st.integers(0, 50))
+def test_solution_is_feasible(seed):
+    arr = _arr(seed)
+    sol = solve_sao(arr, B_MHZ)
+    if not bool(sol.converged):
+        # channel draw with a device whose uplink energy exceeds its budget
+        # even at full band — problem (19) itself is infeasible
+        pytest.skip("infeasible instance")
+    r = kkt_residuals(sol, arr, B_MHZ)
+    # (19a) energy within budget (small fp tolerance)
+    assert float(jnp.max(-r["energy_slack"])) < 1e-4
+    # (19c) total bandwidth within budget
+    assert float(jnp.sum(sol.b)) <= B_MHZ * (1.0 + 1e-4)
+    # (19d) frequency box
+    assert bool(jnp.all(sol.f >= arr["f_min"] - 1e-6))
+    assert bool(jnp.all(sol.f <= arr["f_max"] + 1e-6))
+    # (19b): T* is the max of per-device delays by construction
+    assert abs(float(jnp.max(r["t"]) - sol.T)) < 1e-5
+
+
+@slow
+@given(seed=st.integers(0, 50))
+def test_theorem1_interior_devices_have_equal_delay(seed):
+    """Eq. (20): devices NOT clipped at a frequency-box face finish
+    simultaneously at T*."""
+    arr = _arr(seed)
+    sol = solve_sao(arr, B_MHZ)
+    if not bool(sol.converged):
+        pytest.skip("instance infeasible for this channel draw")
+    r = kkt_residuals(sol, arr, B_MHZ)
+    interior = np.asarray((sol.f > arr["f_min"] + 1e-4)
+                          & (sol.f < arr["f_max"] - 1e-4))
+    t = np.asarray(r["t"])
+    if interior.sum() >= 2:
+        spread = t[interior].max() - t[interior].min()
+        assert spread < 0.05 * float(sol.T), (spread, float(sol.T))
+
+
+@slow
+@given(seed=st.integers(0, 50))
+def test_theorem1_energy_tight_for_interior(seed):
+    """Eq. (21): interior devices exhaust their energy budget."""
+    arr = _arr(seed)
+    sol = solve_sao(arr, B_MHZ)
+    if not bool(sol.converged):
+        pytest.skip("infeasible instance")
+    r = kkt_residuals(sol, arr, B_MHZ)
+    interior = np.asarray((sol.f > arr["f_min"] + 1e-4)
+                          & (sol.f < arr["f_max"] - 1e-4))
+    slack = np.asarray(r["energy_slack"])
+    if interior.any():
+        assert slack[interior].max() < 5e-4
+
+
+@slow
+@given(seed=st.integers(0, 30))
+def test_monotone_in_energy_budget(seed):
+    """Relaxing every energy budget can only reduce the optimal delay."""
+    a1 = _arr(seed, e_lo=0.03, e_hi=0.05)
+    a2 = dict(a1)
+    a2["e_cons"] = a1["e_cons"] * 1.5
+    s1 = solve_sao(a1, B_MHZ)
+    s2 = solve_sao(a2, B_MHZ)
+    if not (bool(s1.converged) and bool(s2.converged)):
+        pytest.skip("infeasible instance")
+    assert float(s2.T) <= float(s1.T) * 1.02
+
+
+@slow
+@given(seed=st.integers(0, 30))
+def test_monotone_in_bandwidth(seed):
+    arr = _arr(seed)
+    t1 = float(solve_sao(arr, 15.0).T)
+    t2 = float(solve_sao(arr, 30.0).T)
+    assert t2 <= t1 * 1.02
+
+
+@slow
+@given(seed=st.integers(0, 30))
+def test_sao_beats_equal_bandwidth(seed):
+    """Fig. 5/6/7 headline: SAO ≤ Baseline 1 when both are feasible."""
+    arr = _arr(seed)
+    sol = solve_sao(arr, B_MHZ)
+    eq = equal_bandwidth(arr, B_MHZ)
+    if bool(sol.converged) and bool(jnp.all(eq.feasible)):
+        assert float(sol.T) <= float(eq.T) * 1.02
+
+
+@slow
+@given(seed=st.integers(0, 20))
+def test_box_correct_no_worse(seed):
+    """The beyond-paper KKT-box completion never hurts."""
+    arr = _arr(seed)
+    t_paper = float(solve_sao(arr, B_MHZ).T)
+    t_fix = float(solve_sao(arr, B_MHZ, box_correct=True).T)
+    assert t_fix <= t_paper * 1.02
+
+
+def test_fedl_tradeoff_direction():
+    """Baseline 2: larger λ weights delay more → delay falls, energy rises."""
+    arr = _arr(0)
+    r_lo = fedl_lambda(arr, B_MHZ, 0.2)
+    r_hi = fedl_lambda(arr, B_MHZ, 50.0)
+    assert float(r_hi.T) <= float(r_lo.T) * 1.05
+    assert float(jnp.sum(r_hi.e)) >= float(jnp.sum(r_lo.e)) * 0.95
+
+
+def test_lemma2_Q_monotone_bounded():
+    from repro.core.sao import _Q
+    J = jnp.asarray([5.0, 50.0, 500.0])
+    b = jnp.linspace(0.01, 100.0, 200)[:, None]
+    q = _Q(b, J[None, :])
+    assert bool(jnp.all(jnp.diff(q, axis=0) > -1e-6))       # increasing
+    assert bool(jnp.all(q < J[None, :] / LN2))              # bounded
+
+
+@slow
+@given(seed=st.integers(0, 30), s=st.integers(2, 30))
+def test_scales_with_selected_set(seed, s):
+    arr = _arr(seed, n=s)
+    sol = solve_sao(arr, B_MHZ)
+    assert np.isfinite(float(sol.T))
+    assert sol.b.shape == (s,)

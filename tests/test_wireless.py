@@ -1,0 +1,62 @@
+"""Wireless system model (eqs. 5-11) unit + property tests."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import wireless as w
+
+slow = settings(deadline=None, max_examples=25,
+                suppress_health_check=list(HealthCheck))
+
+
+def test_dbm_conversions():
+    assert w.dbm_to_watt(30.0) == np.float64(1.0)
+    assert abs(w.watt_to_dbm(0.2) - 23.0) < 0.02
+    assert abs(w.dbm_to_watt(w.watt_to_dbm(0.123)) - 0.123) < 1e-9
+
+
+@slow
+@given(b=st.floats(0.01, 100.0), j=st.floats(0.1, 1e5))
+def test_rate_monotone_in_bandwidth(b, j):
+    r1 = float(w.rate_mbps(jnp.asarray(b), jnp.asarray(j)))
+    r2 = float(w.rate_mbps(jnp.asarray(b * 1.1), jnp.asarray(j)))
+    assert r2 >= r1 * 0.999
+
+
+@slow
+@given(f=st.floats(0.1, 3.0))
+def test_compute_energy_quadratic_delay_inverse(f):
+    G, U = 5e-3, 0.05
+    assert abs(float(w.e_cmp(G, 2 * f)) / float(w.e_cmp(G, f)) - 4.0) < 1e-3
+    assert abs(float(w.t_cmp(U, 2 * f)) * 2 - float(w.t_cmp(U, f))) < 1e-6
+
+
+def test_fleet_units_realistic():
+    """§VI scales: delays O(0.01-1 s), energies O(1-100 mJ)."""
+    fleet = w.sample_fleet(100, seed=0)
+    arr = w.fleet_arrays(fleet)
+    b = jnp.full((100,), 0.2)               # 20 MHz / 100 devices
+    f = jnp.full((100,), 1.0)               # 1 GHz
+    T, E, t, e = w.round_totals(arr, b, f)
+    assert 0.01 < float(jnp.median(t)) < 30.0
+    assert 1e-4 < float(jnp.median(e)) < 1.0
+
+
+def test_eq10_eq11_aggregation():
+    fleet = w.sample_fleet(10, seed=1)
+    arr = w.fleet_arrays(fleet)
+    b = jnp.full((10,), 2.0)
+    f = jnp.full((10,), 1.5)
+    T, E, t, e = w.round_totals(arr, b, f)
+    assert float(T) == float(jnp.max(t))            # eq (11)
+    assert abs(float(E) - float(jnp.sum(e))) < 1e-6  # eq (10)
+
+
+def test_select_and_with_power():
+    fleet = w.sample_fleet(50, seed=2)
+    sub = fleet.select(np.arange(5))
+    assert sub.num_devices == 5
+    p2 = sub.with_power(0.1)
+    assert np.allclose(p2.p, 0.1)
+    # J scales linearly with power
+    assert np.allclose(p2.J_mhz() / sub.J_mhz(), 0.1 / sub.p)
