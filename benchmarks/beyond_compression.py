@@ -13,13 +13,10 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNN_CONFIGS
-from repro.core import FLExperiment, sample_fleet, fleet_arrays
+from benchmarks.common import emit, fl_experiment
+from repro.core import sample_fleet, fleet_arrays
 from repro.core.sao import solve_sao
 from repro.core.compression import payload_mbit
-from repro.data import make_dataset, partition_bias
 
 SCHEMES = ["none", "int8", "topk:0.05"]
 
@@ -40,17 +37,15 @@ def run(quick: bool = False):
 
     # --- accuracy cost: short FL runs per scheme ---
     rounds = 6 if quick else 12
-    ds = make_dataset("fashion", 2000, seed=7)
-    test = make_dataset("fashion", 500, seed=90_003)
     for scheme in SCHEMES:
         t0 = time.time()
-        fed = partition_bias(ds, 20, 96, 0.8, seed=3)
-        fl = FLConfig(num_devices=20, devices_per_round=10, local_iters=20,
-                      num_clusters=10, learning_rate=0.08)
-        exp = FLExperiment(CNN_CONFIGS["fashion"], fed, test.images,
-                           test.labels, sample_fleet(20, seed=0), fl,
-                           seed=0, compression=scheme, box_correct=True)
-        hist = exp.run("divergence", rounds=rounds)
+        exp = fl_experiment(clients=20, train_samples=2000, test_samples=500,
+                            test_seed=90_003, partition_seed=3,
+                            compressor=scheme, selection="divergence",
+                            allocator={"name": "sao",
+                                       "params": {"box_correct": True}},
+                            rounds=rounds)
+        hist = exp.run(rounds=rounds)
         us = (time.time() - t0) * 1e6
         emit(f"compression/final_acc_{scheme}", us,
              f"{hist.accuracy[-1]:.3f}")

@@ -1,6 +1,11 @@
 """Shared benchmark utilities. Every benchmark prints CSV rows:
 ``name,us_per_call,derived`` where ``derived`` is the paper-facing quantity
-(a delay in ms, an ARI, a round count, ...)."""
+(a delay in ms, an ARI, a round count, ...).
+
+FL benchmarks declare their setup as an ``ExperimentSpec`` via
+:func:`fl_experiment`, replacing the dataset/partition/fleet/config blocks
+that used to be duplicated across every figure module.
+"""
 from __future__ import annotations
 
 import time
@@ -28,3 +33,30 @@ def time_fn(fn, *args, repeats: int = 5, warmup: int = 1, **kw):
         out = fn(*args, **kw)
     dt = (time.perf_counter() - t0) / repeats
     return out, dt * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Spec-API experiment construction (shared across FL figure modules)
+# ---------------------------------------------------------------------------
+
+# Every FL benchmark uses the paper's §VI protocol numbers unless it
+# overrides them explicitly.
+BENCH_DEFAULTS = dict(dataset="fashion", train_samples=2500, test_samples=600,
+                      samples_per_client=96, sigma=0.8, local_iters=20,
+                      learning_rate=0.08, num_clusters=10, devices_per_round=10,
+                      data_seed=7, seed=0)
+
+
+def fl_spec(**overrides):
+    """An ``ExperimentSpec`` with the benchmark-suite defaults applied."""
+    from repro.api import ExperimentSpec
+
+    return ExperimentSpec(**{**BENCH_DEFAULTS, **overrides})
+
+
+def fl_experiment(*, test_data=None, **overrides):
+    """Build the benchmark experiment for ``overrides``; returns the
+    ``FLExperiment`` (its ``.fed`` / ``.spec`` carry partition + spec)."""
+    from repro.api import build_experiment
+
+    return build_experiment(fl_spec(**overrides), test_data=test_data)

@@ -8,11 +8,7 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNN_CONFIGS
-from repro.core import FLExperiment, sample_fleet
-from repro.data import make_dataset, partition_bias
+from benchmarks.common import emit, fl_experiment
 
 # Favor's improvement scores over FedAvg (paper Table III)
 FAVOR_SCORES = {("mnist", 0.5): 0.228, ("mnist", 0.8): 0.157,
@@ -25,16 +21,11 @@ FAVOR_SCORES = {("mnist", 0.5): 0.228, ("mnist", 0.8): 0.157,
 
 def run_one(dataset, sigma, method, *, clients, rounds, local_iters, seed,
             target):
-    ds = make_dataset(dataset, 2500, seed=7)
-    test = make_dataset(dataset, 600, seed=90_000)
-    fed = partition_bias(ds, clients, 96, sigma, seed=seed + 1)
-    fleet = sample_fleet(clients, seed=seed)
-    fl = FLConfig(num_devices=clients, devices_per_round=10,
-                  local_iters=local_iters, num_clusters=10,
-                  learning_rate=0.08)
-    exp = FLExperiment(CNN_CONFIGS[dataset], fed, test.images, test.labels,
-                       fleet, fl, seed=seed)
-    hist = exp.run(method, rounds=rounds, target_accuracy=target)
+    exp = fl_experiment(dataset=dataset, sigma=sigma, clients=clients,
+                        local_iters=local_iters, seed=seed,
+                        test_seed=90_000, selection=method, rounds=rounds,
+                        target_accuracy=target)
+    hist = exp.run(rounds=rounds, target_accuracy=target)
     rounds_to = hist.rounds_to_target
     if rounds_to is None:
         # first round whose accuracy reaches the target, else cap

@@ -6,34 +6,25 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNN_CONFIGS
-from repro.core import FLExperiment, sample_fleet
-from repro.data import make_dataset, partition_bias
+from benchmarks.common import emit, fl_experiment
 
 
 def run(quick: bool = False):
     dataset = "fashion"
     clients = 30
     rounds = 8 if quick else 20
-    ds = make_dataset(dataset, 2500, seed=7)
-    test = make_dataset(dataset, 600, seed=90_002)
     # S must be a multiple of the cluster count (one-per-cluster selection);
     # S == clients means no selection (the paper's S=100 point)
     sweep = [10, 30] if quick else [10, 20, 30]
 
     for S in sweep:
         t0 = time.time()
-        fed = partition_bias(ds, clients, 96, 0.8, seed=3)
-        fleet = sample_fleet(clients, seed=0)
-        s_per_cluster = max(S // 10, 1)
-        fl = FLConfig(num_devices=clients, devices_per_round=S,
-                      local_iters=20, num_clusters=10,
-                      selected_per_cluster=s_per_cluster, learning_rate=0.08)
-        exp = FLExperiment(CNN_CONFIGS[dataset], fed, test.images,
-                           test.labels, fleet, fl, seed=0)
-        hist = exp.run("divergence", rounds=rounds)
+        exp = fl_experiment(dataset=dataset, clients=clients,
+                            test_seed=90_002, partition_seed=3,
+                            devices_per_round=S,
+                            selected_per_cluster=max(S // 10, 1),
+                            selection="divergence", rounds=rounds)
+        hist = exp.run(rounds=rounds)
         us = (time.time() - t0) * 1e6
         emit(f"fig13/S{S}_final_acc", us, f"{hist.accuracy[-1]:.3f}")
         emit(f"fig13/S{S}_total_T_s", us, f"{hist.total_T:.2f}")

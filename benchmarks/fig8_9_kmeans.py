@@ -9,13 +9,10 @@ from __future__ import annotations
 import jax
 import numpy as np
 
-from benchmarks.common import emit, time_fn
-from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNN_CONFIGS
-from repro.core import FLExperiment, sample_fleet
+from benchmarks.common import BENCH_DEFAULTS, emit, fl_experiment, time_fn
 from repro.core.clustering import (kmeans_fit, extract_features,
                                    adjusted_rand_index)
-from repro.data import make_dataset, partition_bias
+from repro.data import make_dataset
 
 LAYERS = ["w_c1", "b_c1", "w_c2", "b_c2", "w_fc1", "b_fc1", "w_fc2", "b_fc2",
           "all"]
@@ -23,17 +20,16 @@ LAYERS = ["w_c1", "b_c1", "w_c2", "b_c2", "w_fc1", "b_fc1", "w_fc2", "b_fc2",
 
 def _trained_clients(dataset: str, sigma, *, clients: int, local_iters: int,
                      seed: int = 0):
-    ds = make_dataset(dataset, 2500, seed=seed)
-    fed = partition_bias(ds, clients, 96, sigma, seed=seed + 1)
-    fleet = sample_fleet(clients, seed=seed)
-    fl = FLConfig(num_devices=clients, devices_per_round=10,
-                  local_iters=local_iters, num_clusters=10, learning_rate=0.08)
-    exp = FLExperiment(CNN_CONFIGS[dataset], fed, ds.images[:100],
-                       ds.labels[:100], fleet, fl, seed=seed)
+    # eval set is a train slice here: clustering quality needs no held-out
+    # data (same sample count + seed as the spec -> identical dataset)
+    ds = make_dataset(dataset, BENCH_DEFAULTS["train_samples"], seed=seed)
+    exp = fl_experiment(dataset=dataset, sigma=sigma, clients=clients,
+                        local_iters=local_iters, seed=seed, data_seed=seed,
+                        test_data=(ds.images[:100], ds.labels[:100]))
     idx = np.arange(clients)
     new_params = exp.train_clients(idx)
     exp.store_clients(new_params, idx)
-    return exp, fed
+    return exp, exp.fed
 
 
 def run(quick: bool = False):

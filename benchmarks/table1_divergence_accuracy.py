@@ -12,26 +12,18 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNN_CONFIGS
-from repro.core import FLExperiment, sample_fleet
-from repro.data import make_dataset, partition_bias
+from benchmarks.common import emit, fl_experiment
 
 
 def run(quick: bool = False):
     dataset = "fashion"
     clients = 30
-    ds = make_dataset(dataset, 2500, seed=7)
-    test = make_dataset(dataset, 800, seed=90_001)
-    fed = partition_bias(ds, clients, 96, 0.8, seed=3)
-    fleet = sample_fleet(clients, seed=0)
-    fl = FLConfig(num_devices=clients, devices_per_round=10, local_iters=20,
-                  num_clusters=10, learning_rate=0.08)
-    exp = FLExperiment(CNN_CONFIGS[dataset], fed, test.images, test.labels,
-                       fleet, fl, seed=0)
+    exp = fl_experiment(dataset=dataset, clients=clients, test_samples=800,
+                        test_seed=90_001, partition_seed=3,
+                        selection="kmeans_random")
+    fed = exp.fed
     # warm up: a few kmeans_random rounds (paper protocol)
-    exp.run("kmeans_random", rounds=2 if quick else 5)
+    exp.run(rounds=2 if quick else 5)
 
     # probe cluster = the largest one
     probe = int(np.argmax([len(c) for c in exp.clusters]))

@@ -13,10 +13,8 @@ import time
 
 import numpy as np
 
-from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNN_CONFIGS
-from repro.core import FLExperiment, sample_fleet, adjusted_rand_index
-from repro.data import make_dataset, partition_bias
+from repro.api import ExperimentSpec, build_experiment
+from repro.core import adjusted_rand_index
 
 
 def main():
@@ -31,9 +29,15 @@ def main():
     args = ap.parse_args()
     sigma = args.sigma if args.sigma == "H" else float(args.sigma)
 
-    ds = make_dataset(args.dataset, 3000, seed=7)
-    test = make_dataset(args.dataset, 800, seed=90_000)
-    fleet = sample_fleet(args.clients, seed=0)
+    # one declarative spec; the per-method runs are replace()d variants and
+    # share the engine's compiled round functions
+    base = ExperimentSpec(dataset=args.dataset, clients=args.clients,
+                          sigma=sigma, train_samples=3000, test_samples=800,
+                          samples_per_client=96, local_iters=20,
+                          learning_rate=0.08, rounds=args.rounds,
+                          target_accuracy=args.target_acc, allocator="sao",
+                          data_seed=7, test_seed=90_000, partition_seed=1,
+                          fleet_seed=0, seed=0)
 
     print(f"dataset={args.dataset} clients={args.clients} sigma={sigma} "
           f"target={args.target_acc}")
@@ -42,15 +46,9 @@ def main():
 
     for method in args.methods.split(","):
         t0 = time.time()
-        fed = partition_bias(ds, args.clients, 96, sigma, seed=1)
-        fl = FLConfig(num_devices=args.clients, devices_per_round=10,
-                      local_iters=20, num_clusters=10, learning_rate=0.08,
-                      max_rounds=args.rounds)
-        exp = FLExperiment(CNN_CONFIGS[args.dataset], fed, test.images,
-                           test.labels, fleet, fl, allocator="sao", seed=0)
-        hist = exp.run(method, rounds=args.rounds,
-                       target_accuracy=args.target_acc)
-        ari = adjusted_rand_index(exp.cluster_labels, fed.majority)
+        exp = build_experiment(base.replace(selection=method))
+        hist = exp.run(rounds=args.rounds, target_accuracy=args.target_acc)
+        ari = adjusted_rand_index(exp.cluster_labels, exp.fed.majority)
         r2t = hist.rounds_to_target if hist.rounds_to_target else f">{args.rounds}"
         print(f"{method:15s} {hist.accuracy[-1]:9.3f} {str(r2t):>10s} "
               f"{hist.total_T:10.2f} {hist.total_E:10.2f} {ari:6.3f} "

@@ -10,11 +10,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 import jax.numpy as jnp
 
-from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNN_CONFIGS
-from repro.core import (FLExperiment, sample_fleet, fleet_arrays, solve_sao,
+from repro.api import ExperimentSpec, build_experiment
+from repro.core import (sample_fleet, fleet_arrays, solve_sao,
                         kkt_residuals, equal_bandwidth, adjusted_rand_index)
-from repro.data import make_dataset, partition_bias
 
 
 def demo_sao():
@@ -41,16 +39,18 @@ def demo_sao():
 
 def demo_selection():
     print("=== 2. K-means clustering + weight-divergence selection ===")
-    ds = make_dataset("fashion", 1500, seed=0)
-    test = make_dataset("fashion", 400, seed=999)
-    fed = partition_bias(ds, 20, 64, sigma=0.8, seed=1)
-    fleet = sample_fleet(20, seed=0)
-    fl = FLConfig(num_devices=20, devices_per_round=10, local_iters=20,
-                  num_clusters=10, learning_rate=0.08, max_rounds=5)
-    exp = FLExperiment(CNN_CONFIGS["fashion"], fed, test.images, test.labels,
-                       fleet, fl, seed=0)
-    hist = exp.run("divergence", rounds=5)
-    ari = adjusted_rand_index(exp.cluster_labels, fed.majority)
+    # one declarative spec = the whole experiment (JSON-serializable;
+    # strategies are registry names — see repro.api / repro.strategies)
+    spec = ExperimentSpec(dataset="fashion", clients=20, sigma=0.8,
+                          train_samples=1500, test_samples=400,
+                          samples_per_client=64, local_iters=20,
+                          learning_rate=0.08, rounds=5,
+                          selection="divergence", allocator="sao",
+                          data_seed=0, test_seed=999, partition_seed=1,
+                          fleet_seed=0, seed=0)
+    exp = build_experiment(spec)
+    hist = exp.run(rounds=5)
+    ari = adjusted_rand_index(exp.cluster_labels, exp.fed.majority)
     print(f"K-means clusters vs majority classes: ARI = {ari:.3f}")
     print(f"accuracy curve: {np.round(hist.accuracy, 3).tolist()}")
     print(f"per-round latency T_k [s]: {np.round(hist.T_k, 3).tolist()}")

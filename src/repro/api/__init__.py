@@ -1,0 +1,26 @@
+"""Public experiment-construction API.
+
+    from repro.api import (ExperimentSpec, build_experiment,
+                           SELECTORS, ALLOCATORS, AGGREGATORS, COMPRESSORS)
+
+Strategies resolve through per-stage registries (see ``repro.strategies``
+for the built-ins); experiments are declared as a frozen, JSON-serializable
+``ExperimentSpec`` and materialized by ``build_experiment``.
+"""
+from repro.api.registry import (AGGREGATORS, ALLOCATORS, COMPRESSORS,
+                                SELECTORS, Registry, Strategy, StrategyError,
+                                get_registry)
+from repro.api.protocols import (Allocation, Aggregator, Allocator,
+                                 Compressor, SelectionContext, Selector)
+from repro.api.spec import SPEC_VERSION, ExperimentSpec
+from repro.api.build import build_experiment, fl_config_from_spec
+import repro.strategies  # noqa: F401  (register built-in strategies)
+
+__all__ = [
+    "AGGREGATORS", "ALLOCATORS", "COMPRESSORS", "SELECTORS",
+    "Registry", "Strategy", "StrategyError", "get_registry",
+    "Allocation", "Aggregator", "Allocator", "Compressor",
+    "SelectionContext", "Selector",
+    "SPEC_VERSION", "ExperimentSpec",
+    "build_experiment", "fl_config_from_spec",
+]

@@ -1,0 +1,89 @@
+"""Typed contracts between the round loop and its pluggable stages.
+
+The driver (``repro.core.fedavg.FLExperiment``) talks to strategies only
+through these protocols; the math lives in ``repro.core.*`` and the
+registered adapters in ``repro.strategies.*``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import (TYPE_CHECKING, Any, Callable, Dict, NamedTuple, Optional,
+                    Protocol, Sequence, runtime_checkable)
+
+import numpy as np
+
+if TYPE_CHECKING:                      # import-cycle guard: api ↔ core
+    from repro.core.wireless import DeviceFleet
+
+
+@dataclass
+class SelectionContext:
+    """Everything a selection policy may consult for one round.
+
+    ``divergences`` is lazy (a callable) so policies that don't need the
+    ‖w_n − w_g‖ signal (e.g. ``random``) never pay for it.
+    """
+    rng: np.random.Generator
+    num_devices: int
+    devices_per_round: int            # S
+    selected_per_cluster: int         # s (Alg. 3/4)
+    bandwidth_mhz: float              # B
+    fleet: "DeviceFleet"
+    clusters: Optional[Sequence[np.ndarray]]
+    divergences: Callable[[], np.ndarray]
+
+
+class Allocation(NamedTuple):
+    """Outcome of one round's spectrum allocation (eqs. 10-11)."""
+    T: float                          # round delay T_k [s]
+    E: float                          # round energy E_k [J]
+    b: Optional[np.ndarray] = None    # per-device bandwidth [MHz]
+    f: Optional[np.ndarray] = None    # per-device CPU frequency [GHz]
+
+
+@runtime_checkable
+class Selector(Protocol):
+    """Device-selection policy (paper Algorithms 3/4 and baselines)."""
+
+    def select(self, ctx: SelectionContext) -> np.ndarray: ...
+
+
+@runtime_checkable
+class Allocator(Protocol):
+    """Spectrum allocation for a selected set. ``arr`` is the
+    ``fleet_arrays`` dict of the selected devices; ``B`` the band [MHz]."""
+
+    def allocate(self, arr: Dict[str, Any], B: float) -> Allocation: ...
+
+
+@runtime_checkable
+class Aggregator(Protocol):
+    """Server-side model aggregation, eq. (4) and variants. May be
+    stateful (e.g. server momentum); ``reset`` clears that state."""
+
+    def aggregate(self, global_params: Any, stacked_params: Any,
+                  weights: np.ndarray) -> Any: ...
+
+    def reset(self) -> None: ...
+
+    # True → plain D_n-weighted mean; lets the driver fuse aggregation
+    # into the jitted round step shared across experiments.
+    fuses_with_engine: bool
+
+
+@runtime_checkable
+class Compressor(Protocol):
+    """Simulated lossy uplink compression of client updates."""
+
+    identity: bool
+
+    def compress(self, tree: Any) -> Any: ...
+
+    def apply(self, stacked_new: Any, global_params: Any) -> Any:
+        """Compress the stacked client *deltas* against the global model."""
+        ...
+
+    def payload_mbit(self, num_params: int,
+                     num_leaves: int) -> Optional[float]:
+        """Uplink payload z_n [Mbit], or None to keep the fleet's own z."""
+        ...

@@ -1,0 +1,173 @@
+"""Strategy registries — the pluggable heart of the experiment API.
+
+Each swappable stage of the paper's round loop (Fig. 2) has its own
+registry: device selection (Alg. 3/4), spectrum allocation (Alg. 5 vs the
+§VI-A baselines), aggregation (eq. 4 and beyond-paper variants), and uplink
+compression. A strategy is a small class registered under a short name:
+
+    from repro.api import SELECTORS, register
+
+    @SELECTORS.register("my_policy")
+    @dataclass(frozen=True)
+    class MySelector:
+        temperature: float = 1.0
+        def select(self, ctx):            # ctx: api.protocols.SelectionContext
+            ...
+
+Resolution accepts three spellings and normalizes them all:
+
+    SELECTORS.resolve("my_policy")                      # bare name
+    ALLOCATORS.resolve("fedl:2.0")                      # name:arg shorthand
+    ALLOCATORS.resolve({"name": "fedl",
+                        "params": {"lam": 2.0}})        # explicit dict
+    SELECTORS.resolve(MySelector(temperature=0.5))      # an instance, as-is
+
+The ``name:arg`` shorthand calls the class's ``from_string`` hook, which by
+default feeds the argument to the class's single positional parameter —
+enough for ``fedl:2.0`` and ``topk:0.05`` without per-class parsing code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Type
+
+
+class StrategyError(Exception):
+    """Registry lookup / registration failure."""
+
+
+class Strategy:
+    """Optional base for registered strategies (dataclasses recommended).
+
+    Provides the serialization contract: ``params()`` returns the JSON-able
+    constructor kwargs and ``spec()`` the canonical ``{"name", "params"}``
+    dict stored inside an ``ExperimentSpec``.
+    """
+
+    registry_name: str = "?"          # set by Registry.register
+
+    @classmethod
+    def from_string(cls, arg: Optional[str]) -> "Strategy":
+        """Build from the ``name:arg`` shorthand. Default: feed ``arg`` to
+        the first dataclass field (numeric if it parses)."""
+        if arg is None or arg == "":
+            return cls()
+        fields = dataclasses.fields(cls) if dataclasses.is_dataclass(cls) else ()
+        if not fields:
+            raise StrategyError(
+                f"{cls.registry_name!r} takes no ':arg' parameter (got {arg!r})")
+        f0 = fields[0]
+        value: Any = arg
+        if f0.type in ("float", "int", float, int):
+            try:
+                value = int(arg) if f0.type in ("int", int) else float(arg)
+            except ValueError:
+                raise StrategyError(
+                    f"{cls.registry_name}:{arg}: expected a number for "
+                    f"{f0.name!r}") from None
+        return cls(**{f0.name: value})
+
+    def params(self) -> Dict[str, Any]:
+        if dataclasses.is_dataclass(self):
+            return {f.name: getattr(self, f.name)
+                    for f in dataclasses.fields(self) if f.init}
+        return {}
+
+    def spec(self) -> Dict[str, Any]:
+        return {"name": self.registry_name, "params": self.params()}
+
+
+class Registry:
+    """Name → strategy-class mapping for one stage of the round loop."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._classes: Dict[str, Type] = {}
+
+    # -- registration ---------------------------------------------------
+    def register(self, name: str) -> Callable[[Type], Type]:
+        if ":" in name:
+            raise StrategyError(f"{self.kind} name {name!r} may not contain ':'")
+
+        def deco(cls: Type) -> Type:
+            if name in self._classes:
+                raise StrategyError(
+                    f"duplicate {self.kind} {name!r} "
+                    f"(already registered to {self._classes[name].__qualname__})")
+            self._classes[name] = cls
+            cls.registry_name = name
+            return cls
+
+        return deco
+
+    # -- lookup ---------------------------------------------------------
+    def get(self, name: str) -> Type:
+        try:
+            return self._classes[name]
+        except KeyError:
+            raise StrategyError(
+                f"unknown {self.kind} {name!r}; registered: {self.names()}"
+            ) from None
+
+    def names(self) -> List[str]:
+        return sorted(self._classes)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._classes
+
+    def resolve(self, spec: Any, **overrides: Any):
+        """Normalize name / ``name:arg`` / ``{"name", "params"}`` / instance
+        into a strategy instance. ``overrides`` are extra constructor kwargs
+        applied on top of dict params (used by back-compat shims)."""
+        if isinstance(spec, str):
+            name, _, arg = spec.partition(":")
+            cls = self.get(name)
+            if hasattr(cls, "from_string"):
+                inst = cls.from_string(arg or None)
+            elif arg:
+                raise StrategyError(
+                    f"{self.kind} {name!r} has no from_string hook for "
+                    f"the ':{arg}' shorthand")
+            else:
+                inst = cls()
+            if overrides:
+                inst = dataclasses.replace(inst, **overrides) \
+                    if dataclasses.is_dataclass(inst) else cls(**overrides)
+            return inst
+        if isinstance(spec, dict):
+            extra = set(spec) - {"name", "params"}
+            if "name" not in spec or extra:
+                raise StrategyError(
+                    f"{self.kind} dict must have keys {{'name', 'params'}}; "
+                    f"got {sorted(spec)}")
+            cls = self.get(spec["name"])
+            return cls(**{**spec.get("params", {}), **overrides})
+        if isinstance(spec, type):
+            raise StrategyError(
+                f"got the {self.kind} class {spec.__name__}; pass an "
+                f"instance ({spec.__name__}(...)) or its registered name")
+        if hasattr(spec, "registry_name"):       # already an instance
+            return spec
+        raise StrategyError(
+            f"cannot resolve {self.kind} from {type(spec).__name__}: {spec!r}")
+
+    def canonical(self, spec: Any) -> Dict[str, Any]:
+        """The normalized ``{"name", "params"}`` form (ExperimentSpec storage)."""
+        inst = self.resolve(spec)
+        return inst.spec()
+
+
+SELECTORS = Registry("selector")
+ALLOCATORS = Registry("allocator")
+AGGREGATORS = Registry("aggregator")
+COMPRESSORS = Registry("compressor")
+
+_BY_KIND = {r.kind: r for r in (SELECTORS, ALLOCATORS, AGGREGATORS, COMPRESSORS)}
+
+
+def get_registry(kind: str) -> Registry:
+    try:
+        return _BY_KIND[kind]
+    except KeyError:
+        raise StrategyError(
+            f"unknown registry kind {kind!r}; known: {sorted(_BY_KIND)}") from None

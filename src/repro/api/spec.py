@@ -1,0 +1,132 @@
+"""Declarative experiment specification — one frozen, JSON-round-trippable
+value that fully determines an FL experiment (paper Fig. 2 end to end).
+
+    spec = ExperimentSpec(dataset="fashion", clients=30, sigma=0.8,
+                          selection="divergence", allocator="sao")
+    exp = build_experiment(spec)          # repro.api.build
+    hist = exp.run()
+
+Strategy fields accept a bare name (``"sao"``), the compact ``name:arg``
+shorthand (``"fedl:2.0"``, ``"topk:0.05"``) or an explicit
+``{"name", "params"}`` dict; they are normalized to the dict form at
+construction so ``ExperimentSpec.from_json(spec.to_json()) == spec``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Union
+
+from repro.api.registry import get_registry
+
+SPEC_VERSION = 1
+
+StrategyRef = Union[str, Dict[str, Any]]
+
+
+def _canonical(kind: str, ref: Any) -> Dict[str, Any]:
+    import repro.strategies  # noqa: F401  (populate registries)
+    return get_registry(kind).canonical(ref)
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything needed to rebuild one experiment, bit-for-bit."""
+
+    # ---- data / partition (paper §VI setup) --------------------------
+    dataset: str = "mnist"                 # mnist | cifar10 | fashion
+    train_samples: int = 4000
+    test_samples: int = 1000
+    clients: int = 40                      # N
+    samples_per_client: int = 128          # D_n
+    sigma: Union[float, str] = 0.8         # non-iid bias; "H" = half-half
+
+    # ---- model -------------------------------------------------------
+    model: str = "auto"                    # "auto" → paper CNN for dataset;
+                                           # else an arch id (sharded fl_round)
+
+    # ---- wireless fleet ----------------------------------------------
+    bandwidth_mhz: float = 20.0            # B
+
+    # ---- FL hyper-parameters (FLConfig) ------------------------------
+    rounds: int = 30
+    devices_per_round: int = 10            # S
+    selected_per_cluster: int = 1          # s
+    local_iters: int = 20                  # L
+    num_clusters: int = 10                 # c
+    learning_rate: float = 0.05
+    batch_size: int = 32
+    target_accuracy: float = 0.0           # 0 → always run ``rounds``
+    feature_layer: str = "auto"            # K-means feature (Alg. 2)
+    fedprox_mu: float = 0.0                # >0 → FedProx client objective
+
+    # ---- seeds (None → derived from ``seed``) ------------------------
+    seed: int = 0
+    data_seed: Optional[int] = None        # default: seed
+    test_seed: Optional[int] = None        # default: data_seed + 10_000
+    partition_seed: Optional[int] = None   # default: seed + 1
+    fleet_seed: Optional[int] = None       # default: seed
+
+    # ---- pluggable strategies ----------------------------------------
+    selection: StrategyRef = "divergence"
+    allocator: StrategyRef = "sao"
+    aggregator: StrategyRef = "fedavg"
+    compressor: StrategyRef = "none"
+
+    version: int = SPEC_VERSION
+
+    def __post_init__(self):
+        object.__setattr__(self, "selection",
+                           _canonical("selector", self.selection))
+        object.__setattr__(self, "allocator",
+                           _canonical("allocator", self.allocator))
+        object.__setattr__(self, "aggregator",
+                           _canonical("aggregator", self.aggregator))
+        object.__setattr__(self, "compressor",
+                           _canonical("compressor", self.compressor))
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def resolved_data_seed(self) -> int:
+        return self.seed if self.data_seed is None else self.data_seed
+
+    @property
+    def resolved_test_seed(self) -> int:
+        return (self.resolved_data_seed + 10_000
+                if self.test_seed is None else self.test_seed)
+
+    @property
+    def resolved_partition_seed(self) -> int:
+        return self.seed + 1 if self.partition_seed is None else self.partition_seed
+
+    @property
+    def resolved_fleet_seed(self) -> int:
+        return self.seed if self.fleet_seed is None else self.fleet_seed
+
+    def replace(self, **kw) -> "ExperimentSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ---- serialization -----------------------------------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "ExperimentSpec":
+        d = dict(d)
+        version = d.pop("version", SPEC_VERSION)
+        if version > SPEC_VERSION:
+            raise ValueError(f"spec version {version} is newer than "
+                             f"supported {SPEC_VERSION}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown ExperimentSpec fields: {sorted(unknown)}")
+        return cls(version=version, **d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))

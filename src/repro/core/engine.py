@@ -1,0 +1,134 @@
+"""RoundEngine — the jit-compiled compute core of one FL round, split out
+of the host driver so experiments that share hyper-parameters (seed sweeps,
+σ sweeps, selector comparisons) also share XLA executables.
+
+The engine is pure: it owns no model/cluster/rng state, only compiled
+functions keyed by an ``EngineConfig``. The host driver
+(``repro.core.fedavg.FLExperiment``) owns state and strategy objects and
+calls into the engine.
+
+``round_step`` is the fused fast path — local training of the selected
+clients, eq. (4) weighted aggregation, and test-set evaluation in a single
+XLA program — usable whenever the aggregator is the plain weighted mean and
+no lossy uplink compression is configured; the driver otherwise composes
+the unfused pieces with the strategy objects in between.
+"""
+from __future__ import annotations
+
+import functools
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_cnn import CNNConfig
+from repro.core.algorithms import make_fedprox_local_update
+from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
+from repro.utils.trees import tree_weighted_mean_stacked
+
+
+def make_local_update(cnn_cfg: CNNConfig, lr: float, local_iters: int,
+                      batch_size: int):
+    """One client's local training: L SGD steps on its own shard (Alg. 1
+    lines 6-10, with the paper-endorsed SGD variant of §III-A)."""
+
+    def local_update(params, images, labels, key):
+        def step(p, k):
+            idx = jax.random.randint(k, (batch_size,), 0, images.shape[0])
+            batch = {"images": images[idx], "labels": labels[idx]}
+            g = jax.grad(cnn_loss)(p, batch, cnn_cfg)
+            p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
+            return p, None
+
+        keys = jax.random.split(key, local_iters)
+        params, _ = jax.lax.scan(step, params, keys)
+        return params
+
+    return local_update
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """The static (compile-time) hyper-parameters of the round compute."""
+    cnn_cfg: CNNConfig
+    learning_rate: float
+    local_iters: int
+    batch_size: int
+    fedprox_mu: float = 0.0
+
+
+@dataclass
+class RoundResult:
+    """Everything one round produces (paper bookkeeping: eqs. 4, 10-11)."""
+    selected: np.ndarray              # device indices that participated
+    T_k: float                        # round delay [s]
+    E_k: float                        # round energy [J]
+    accuracy: float                   # test accuracy after aggregation
+    per_class: np.ndarray             # per-class test accuracy
+    params: Any = None                # new global model
+    stacked_params: Any = None        # the clients' post-training models
+
+
+class RoundEngine:
+    """Compiled round compute, shared across experiments via ``shared``."""
+
+    # LRU-bounded: sweeps over many distinct configs must not pin every
+    # XLA executable for the process lifetime (live experiments keep their
+    # own engine reference, so eviction only limits future sharing).
+    _CACHE: "OrderedDict[EngineConfig, RoundEngine]" = OrderedDict()
+    _CACHE_MAX = 16
+
+    def __init__(self, cfg: EngineConfig):
+        self.cfg = cfg
+        if cfg.fedprox_mu > 0:
+            local_update = make_fedprox_local_update(
+                cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters,
+                cfg.batch_size, mu=cfg.fedprox_mu)
+        else:
+            local_update = make_local_update(
+                cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters,
+                cfg.batch_size)
+        self._vmapped_update = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
+        self.train_clients = jax.jit(self._vmapped_update)
+        self.evaluate = jax.jit(functools.partial(_eval_fn,
+                                                  cnn_cfg=cfg.cnn_cfg))
+        self.round_step = jax.jit(self._round_step)
+
+    @classmethod
+    def shared(cls, cfg: EngineConfig) -> "RoundEngine":
+        """The process-wide engine for ``cfg`` — experiments with equal
+        static hyper-parameters reuse one set of XLA executables."""
+        eng = cls._CACHE.get(cfg)
+        if eng is None:
+            eng = cls._CACHE[cfg] = cls(cfg)
+            while len(cls._CACHE) > cls._CACHE_MAX:
+                cls._CACHE.popitem(last=False)
+        else:
+            cls._CACHE.move_to_end(cfg)
+        return eng
+
+    def init_params(self, key):
+        return init_cnn(self.cfg.cnn_cfg, key)
+
+    # -- fused fast path -----------------------------------------------
+    def _round_step(self, global_params, images, labels, keys, weights,
+                    test_images, test_labels):
+        """Train the selected clients, aggregate (eq. 4), evaluate."""
+        stacked = self._vmapped_update(global_params, images, labels, keys)
+        new_global = tree_weighted_mean_stacked(stacked, weights)
+        acc, per_class = _eval_fn(new_global, test_images, test_labels,
+                                  cnn_cfg=self.cfg.cnn_cfg)
+        return stacked, new_global, acc, per_class
+
+
+def _eval_fn(params, test_images, test_labels, *, cnn_cfg: CNNConfig):
+    logits = cnn_forward(params, test_images, cnn_cfg)
+    pred = jnp.argmax(logits, axis=-1)
+    acc = jnp.mean((pred == test_labels).astype(jnp.float32))
+    onehot = jax.nn.one_hot(test_labels, cnn_cfg.num_classes)
+    correct = (pred == test_labels).astype(jnp.float32)[:, None] * onehot
+    per_class = jnp.sum(correct, 0) / jnp.maximum(jnp.sum(onehot, 0), 1.0)
+    return acc, per_class

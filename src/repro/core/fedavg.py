@@ -1,60 +1,46 @@
 """Federated-learning loop — paper Algorithm 1 + the Fig. 2 framework.
 
 Per round k:
-  1. device selection (divergence / kmeans_random / random / icas / rra)
-  2. spectrum allocation for the selected set (SAO Alg. 5 or a baseline)
+  1. device selection        — pluggable ``Selector`` (registry: SELECTORS)
+  2. spectrum allocation     — pluggable ``Allocator`` (registry: ALLOCATORS)
   3. local updates (L SGD steps each) — vmapped over the selected clients
-  4. weighted aggregation, eq. (4)
+  4. weighted aggregation    — pluggable ``Aggregator`` (eq. 4 default)
   5. bookkeeping: accuracy, T_k, E_k (eqs. 10-11), weight divergences
 
 Clustering (Algorithm 2) happens once, after an initial all-device round,
 on the K-means features of the paper's chosen layer.
+
+``FLExperiment`` is the thin host driver: it owns experiment state (models,
+clusters, rngs) and strategy objects, and delegates all jitted compute to a
+``RoundEngine`` shared across experiments with equal hyper-parameters
+(``repro.core.engine``). Strategies resolve through the ``repro.api``
+registries — construct experiments declaratively with
+``repro.api.build_experiment(ExperimentSpec(...))``.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Any, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.protocols import Allocation, SelectionContext
+from repro.api.registry import AGGREGATORS, ALLOCATORS, COMPRESSORS, SELECTORS
+import repro.strategies  # noqa: F401  (populate the registries)
 from repro.configs.base import FLConfig
 from repro.configs.paper_cnn import CNNConfig
-from repro.core import selection as sel
 from repro.core.clustering import (kmeans_fit, extract_features,
                                    clusters_from_labels)
 from repro.core.divergence import weight_divergence
-from repro.core.sao import solve_sao
-from repro.core.baselines import equal_bandwidth, fedl_lambda
-from repro.core.wireless import DeviceFleet, fleet_arrays, rate_mbps
+from repro.core.engine import (EngineConfig, RoundEngine, RoundResult,
+                               make_local_update)
+from repro.core.wireless import DeviceFleet, fleet_arrays
 from repro.data.partition import FederatedData
-from repro.models.cnn import init_cnn, cnn_loss, cnn_forward
-from repro.utils.trees import (tree_weighted_mean_stacked, tree_sub,
-                               tree_add, tree_num_params)
-from repro.core.compression import apply_compression, payload_mbit
-from repro.core.algorithms import make_fedprox_local_update, ServerMomentum
+from repro.utils.trees import tree_num_params
 
-
-def make_local_update(cnn_cfg: CNNConfig, lr: float, local_iters: int,
-                      batch_size: int):
-    """One client's local training: L SGD steps on its own shard (Alg. 1
-    lines 6-10, with the paper-endorsed SGD variant of §III-A)."""
-
-    def local_update(params, images, labels, key):
-        def step(p, k):
-            idx = jax.random.randint(k, (batch_size,), 0, images.shape[0])
-            batch = {"images": images[idx], "labels": labels[idx]}
-            g = jax.grad(cnn_loss)(p, batch, cnn_cfg)
-            p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
-            return p, None
-
-        keys = jax.random.split(key, local_iters)
-        params, _ = jax.lax.scan(step, params, keys)
-        return params
-
-    return local_update
+__all__ = ["FLExperiment", "FLHistory", "RoundResult", "make_local_update"]
 
 
 @dataclass
@@ -73,34 +59,64 @@ class FLHistory:
     def total_E(self):
         return float(np.sum(self.E_k))
 
+    def append(self, res: RoundResult):
+        self.accuracy.append(res.accuracy)
+        self.T_k.append(res.T_k)
+        self.E_k.append(res.E_k)
+        self.selected.append(np.asarray(res.selected))
+
 
 class FLExperiment:
-    """Host-side driver around jitted client/aggregation steps."""
+    """Host-side driver composing a shared ``RoundEngine`` with registered
+    selection/allocation/aggregation/compression strategies.
+
+    Strategy arguments accept instances, ``{"name", "params"}`` dicts, or
+    compact strings (``"sao"``, ``"fedl:2.0"``, ``"topk:0.05"``) — all
+    resolved through the ``repro.api`` registries.
+    """
 
     def __init__(self, cnn_cfg: CNNConfig, fed: FederatedData,
                  test_images: np.ndarray, test_labels: np.ndarray,
                  fleet: DeviceFleet, fl: FLConfig, *, bandwidth_mhz: float = 20.0,
-                 allocator: str = "sao", seed: int = 0,
+                 allocator: Any = "sao", seed: int = 0,
                  batch_size: int = 32, box_correct: bool = False,
-                 compression: str = "none", fedprox_mu: float = 0.0,
-                 server_momentum: float = 0.0):
+                 compression: Any = "none", fedprox_mu: float = 0.0,
+                 server_momentum: float = 0.0,
+                 selection: Any = None, aggregator: Any = None):
         self.cnn_cfg = cnn_cfg
         self.fed = fed
         self.fleet = fleet
-        self.compression = compression
-        self.fedprox_mu = fedprox_mu
-        self.server_opt = (ServerMomentum(server_momentum)
-                           if server_momentum > 0 else None)
         self.fl = fl
         self.B = bandwidth_mhz
-        self.allocator = allocator
-        self.box_correct = box_correct
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
         self.test_images = jnp.asarray(test_images)
         self.test_labels = jnp.asarray(test_labels)
 
-        self.global_params = init_cnn(cnn_cfg, self._next_key())
+        # -- strategy resolution (names → registered instances) --------
+        self.allocator = ALLOCATORS.resolve(allocator)
+        if box_correct:
+            if getattr(self.allocator, "registry_name", "") != "sao":
+                raise ValueError("box_correct=True only applies to the "
+                                 "'sao' allocator; set allocator params "
+                                 "explicitly instead")
+            import dataclasses as _dc
+            self.allocator = _dc.replace(self.allocator, box_correct=True)
+        self.selector = SELECTORS.resolve(selection if selection is not None
+                                          else fl.selection)
+        if aggregator is None:
+            aggregator = ("fedavgm:%s" % server_momentum
+                          if server_momentum > 0 else "fedavg")
+        self.aggregator = AGGREGATORS.resolve(aggregator)
+        self.aggregator.reset()
+        self.compressor = COMPRESSORS.resolve(compression)
+
+        # -- compiled compute, shared across same-config experiments ---
+        self.engine = RoundEngine.shared(EngineConfig(
+            cnn_cfg, fl.learning_rate, fl.local_iters, batch_size,
+            fedprox_mu=fedprox_mu))
+
+        self.global_params = self.engine.init_params(self._next_key())
         # all-client stacked copies (updated lazily for selected clients)
         self.client_params = jax.tree_util.tree_map(
             lambda l: jnp.broadcast_to(l, (fed.num_clients,) + l.shape).copy(),
@@ -108,43 +124,31 @@ class FLExperiment:
         self.clusters: Optional[List[np.ndarray]] = None
         self.cluster_labels: Optional[np.ndarray] = None
 
-        if fedprox_mu > 0:
-            local_update = make_fedprox_local_update(
-                cnn_cfg, fl.learning_rate, fl.local_iters, batch_size,
-                mu=fedprox_mu)
-        else:
-            local_update = make_local_update(cnn_cfg, fl.learning_rate,
-                                             fl.local_iters, batch_size)
-        self._vmapped_update = jax.jit(jax.vmap(local_update,
-                                                in_axes=(None, 0, 0, 0)))
-        self._eval = jax.jit(self._eval_fn)
         self._images = jnp.asarray(fed.images)
         self._labels = jnp.asarray(fed.labels)
         self._sizes = jnp.asarray(fed.sizes)
-        if compression != "none":
-            # uplink payload shrinks -> z_n enters SAO via H_n and t_com
-            n_par = tree_num_params(self.global_params)
-            n_leaves = len(jax.tree_util.tree_leaves(self.global_params))
-            z = payload_mbit(n_par, compression, n_leaves)
+
+        # lossy uplink shrinks the payload -> z_n enters SAO via H_n, t_com
+        n_par = tree_num_params(self.global_params)
+        n_leaves = len(jax.tree_util.tree_leaves(self.global_params))
+        z = self.compressor.payload_mbit(n_par, n_leaves)
+        if z is not None:
             import dataclasses as _dc
             self.fleet = _dc.replace(fleet, z=np.full_like(fleet.z, z))
 
     # ------------------------------------------------------------------
+    @classmethod
+    def from_spec(cls, spec) -> "FLExperiment":
+        from repro.api.build import build_experiment
+        return build_experiment(spec)
+
     def _next_key(self):
         self.key, sub = jax.random.split(self.key)
         return sub
 
-    def _eval_fn(self, params):
-        logits = cnn_forward(params, self.test_images, self.cnn_cfg)
-        pred = jnp.argmax(logits, axis=-1)
-        acc = jnp.mean((pred == self.test_labels).astype(jnp.float32))
-        onehot = jax.nn.one_hot(self.test_labels, self.cnn_cfg.num_classes)
-        correct = (pred == self.test_labels).astype(jnp.float32)[:, None] * onehot
-        per_class = jnp.sum(correct, 0) / jnp.maximum(jnp.sum(onehot, 0), 1.0)
-        return acc, per_class
-
     def evaluate(self):
-        acc, per_class = self._eval(self.global_params)
+        acc, per_class = self.engine.evaluate(
+            self.global_params, self.test_images, self.test_labels)
         return float(acc), np.asarray(per_class)
 
     # ------------------------------------------------------------------
@@ -153,24 +157,16 @@ class FLExperiment:
         (after simulated lossy uplink compression, if configured)."""
         idx = np.asarray(idx)
         keys = jax.random.split(self._next_key(), len(idx))
-        new_params = self._vmapped_update(
+        new_params = self.engine.train_clients(
             self.global_params, self._images[idx], self._labels[idx], keys)
-        if self.compression != "none":
-            deltas = jax.tree_util.tree_map(
-                lambda n, g: n - g[None], new_params, self.global_params)
-            deltas = apply_compression(deltas, self.compression)
-            new_params = jax.tree_util.tree_map(
-                lambda d, g: g[None] + d, deltas, self.global_params)
-        return new_params
+        return self.compressor.apply(new_params, self.global_params)
 
     def aggregate(self, stacked_params, idx: np.ndarray):
-        """Eq. (4): D_n-weighted average of the participating local models
-        (+ optional FedAvgM server momentum)."""
+        """Server aggregation over the participating local models (eq. (4)
+        weighted mean by default; pluggable via the aggregator registry)."""
         weights = self._sizes[np.asarray(idx)]
-        agg = tree_weighted_mean_stacked(stacked_params, weights)
-        if self.server_opt is not None:
-            agg = self.server_opt.step(self.global_params, agg)
-        self.global_params = agg
+        self.global_params = self.aggregator.aggregate(
+            self.global_params, stacked_params, weights)
 
     def store_clients(self, stacked_params, idx: np.ndarray):
         idx = jnp.asarray(np.asarray(idx))
@@ -194,50 +190,65 @@ class FLExperiment:
         return np.asarray(weight_divergence(self.client_params,
                                             self.global_params))
 
-    def select(self, method: str) -> np.ndarray:
-        S = self.fl.devices_per_round
-        if method == "random":
-            return sel.select_random(self.rng, self.fed.num_clients, S)
-        if method == "kmeans_random":
-            return sel.select_kmeans_random(self.rng, self.clusters,
-                                            self.fl.selected_per_cluster)
-        if method == "divergence":
-            return sel.select_divergence(self.divergences(), self.clusters,
-                                         self.fl.selected_per_cluster)
-        if method == "icas":
-            arr = fleet_arrays(self.fleet)
-            rates = np.asarray(rate_mbps(self.B / self.fed.num_clients,
-                                         arr["J"]))
-            return sel.select_icas(self.divergences(), rates, S)
-        if method == "rra":
-            arr = fleet_arrays(self.fleet)
-            e_eq = np.asarray(arr["H"] / rate_mbps(self.B / 45.0, arr["J"]))
-            return sel.select_rra(self.rng, e_eq, np.asarray(arr["e_cons"]),
-                                  target_mean=45)
-        raise ValueError(method)
+    def selection_context(self) -> SelectionContext:
+        return SelectionContext(
+            rng=self.rng,
+            num_devices=self.fed.num_clients,
+            devices_per_round=self.fl.devices_per_round,
+            selected_per_cluster=self.fl.selected_per_cluster,
+            bandwidth_mhz=self.B,
+            fleet=self.fleet,
+            clusters=self.clusters,
+            divergences=self.divergences)
+
+    def select(self, method: Any = None) -> np.ndarray:
+        """Device selection for one round; ``method`` may be a registered
+        name, a spec dict, a Selector instance, or None for the default."""
+        selector = (self.selector if method is None
+                    else SELECTORS.resolve(method))
+        return np.asarray(selector.select(self.selection_context()))
+
+    def allocation(self, idx: np.ndarray) -> Allocation:
+        """Spectrum allocation for the round (full per-device solution)."""
+        arr = fleet_arrays(self.fleet.select(np.asarray(idx)))
+        return self.allocator.allocate(arr, self.B)
 
     def allocate(self, idx: np.ndarray):
-        """Spectrum allocation for the round; returns (T_k, E_k)."""
-        arr = fleet_arrays(self.fleet.select(idx))
-        if self.allocator == "sao":
-            s = solve_sao(arr, self.B, box_correct=self.box_correct)
-            Q = s.b * jnp.log2(1.0 + arr["J"] / s.b)
-            e = arr["G"] * jnp.square(s.f) + arr["H"] / Q
-            return float(s.T), float(jnp.sum(e))
-        if self.allocator == "equal":
-            r = equal_bandwidth(arr, self.B)
-            return float(r.T), float(jnp.sum(r.e))
-        if self.allocator.startswith("fedl"):
-            lam = float(self.allocator.split(":")[1]) if ":" in self.allocator else 1.0
-            r = fedl_lambda(arr, self.B, lam)
-            return float(r.T), float(jnp.sum(r.e))
-        raise ValueError(self.allocator)
+        """Back-compat: returns just ``(T_k, E_k)``."""
+        a = self.allocation(idx)
+        return a.T, a.E
 
     # ------------------------------------------------------------------
-    def run(self, method: Optional[str] = None, rounds: Optional[int] = None,
+    def round(self, method: Any = None) -> RoundResult:
+        """One full FL round: select → allocate → train → aggregate → eval.
+
+        Uses the engine's fused jitted step when the aggregator is the
+        plain eq. (4) mean and no lossy compression is configured.
+        """
+        idx = self.select(method)
+        alloc = self.allocation(idx)
+        fused = (getattr(self.aggregator, "fuses_with_engine", False)
+                 and getattr(self.compressor, "identity", False))
+        if fused:
+            keys = jax.random.split(self._next_key(), len(idx))
+            stacked, new_global, acc, per_class = self.engine.round_step(
+                self.global_params, self._images[idx], self._labels[idx],
+                keys, self._sizes[idx], self.test_images, self.test_labels)
+            self.store_clients(stacked, idx)
+            self.global_params = new_global
+            acc, per_class = float(acc), np.asarray(per_class)
+        else:
+            stacked = self.train_clients(idx)
+            self.store_clients(stacked, idx)
+            self.aggregate(stacked, idx)
+            acc, per_class = self.evaluate()
+        return RoundResult(selected=np.asarray(idx), T_k=alloc.T, E_k=alloc.E,
+                           accuracy=acc, per_class=per_class,
+                           params=self.global_params, stacked_params=stacked)
+
+    def run(self, method: Any = None, rounds: Optional[int] = None,
             target_accuracy: Optional[float] = None,
             include_initial_round: bool = True) -> FLHistory:
-        method = method or self.fl.selection
         rounds = rounds or self.fl.max_rounds
         target = (self.fl.target_accuracy
                   if target_accuracy is None else target_accuracy)
@@ -245,23 +256,16 @@ class FLExperiment:
         if include_initial_round or self.clusters is None:
             self.initial_round()
             acc, _ = self.evaluate()
+            all_idx = np.arange(self.fed.num_clients)
+            T0, E0 = self.allocate(all_idx)
             hist.accuracy.append(acc)
-            T0, E0 = self.allocate(np.arange(self.fed.num_clients))
             hist.T_k.append(T0)
             hist.E_k.append(E0)
-            hist.selected.append(np.arange(self.fed.num_clients))
+            hist.selected.append(all_idx)
         for k in range(rounds):
-            idx = self.select(method)
-            T_k, E_k = self.allocate(idx)
-            new_params = self.train_clients(idx)
-            self.store_clients(new_params, idx)
-            self.aggregate(new_params, idx)
-            acc, _ = self.evaluate()
-            hist.accuracy.append(acc)
-            hist.T_k.append(T_k)
-            hist.E_k.append(E_k)
-            hist.selected.append(np.asarray(idx))
-            if target and acc >= target and hist.rounds_to_target is None:
+            res = self.round(method)
+            hist.append(res)
+            if target and res.accuracy >= target and hist.rounds_to_target is None:
                 hist.rounds_to_target = k + 1
                 break
         return hist

@@ -104,3 +104,18 @@ def lower_fl_round(cfg: ModelConfig, mesh: Mesh, *, num_clients: int = 128,
                      out_shardings=(p_shard, rep, rep))
     with mesh:
         return jitted.lower(c_struct, p_struct, cent, sizes)
+
+
+def lower_fl_round_from_spec(spec, mesh: Mesh, *, feature_slice: int = 0):
+    """Spec-API entry point: lower the sharded round for an
+    ``ExperimentSpec`` whose ``model`` names an assigned LM architecture
+    (``spec.clients`` LM clients, ``spec.num_clusters`` K-means clusters)."""
+    from repro.configs import get_config
+
+    if spec.model == "auto":
+        raise ValueError("spec.model must name an arch id (e.g. "
+                         "'tinyllama-1.1b') for the sharded fl_round path")
+    return lower_fl_round(get_config(spec.model), mesh,
+                          num_clients=spec.clients,
+                          num_clusters=spec.num_clusters,
+                          feature_slice=feature_slice)

@@ -1,7 +1,12 @@
-"""FL simulation driver — the paper's full framework (Fig. 2) end to end.
+"""FL simulation driver — the paper's full framework (Fig. 2) end to end,
+declared as an ``ExperimentSpec``.
 
   PYTHONPATH=src python -m repro.launch.fl_sim --dataset mnist \
       --selection divergence --rounds 30 --clients 40
+
+  # or fully declaratively:
+  PYTHONPATH=src python -m repro.launch.fl_sim --spec my_experiment.json
+  PYTHONPATH=src python -m repro.launch.fl_sim --dump-spec   # print + exit
 """
 from __future__ import annotations
 
@@ -10,10 +15,24 @@ import json
 
 import numpy as np
 
-from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNN_CONFIGS
-from repro.core import FLExperiment, sample_fleet, adjusted_rand_index
-from repro.data import make_dataset, partition_bias
+from repro.api import ExperimentSpec, build_experiment, SELECTORS, ALLOCATORS
+from repro.core import adjusted_rand_index
+
+
+def run_spec(spec: ExperimentSpec):
+    """Build + run one experiment; returns (exp, history, clustering ARI)."""
+    exp = build_experiment(spec)
+    hist = exp.run(rounds=spec.rounds,
+                   target_accuracy=spec.target_accuracy or None)
+    ari = adjusted_rand_index(exp.cluster_labels, exp.fed.majority)
+    return exp, hist, ari
+
+
+def _allocator_ref(allocator: str, box_correct: bool):
+    """Fold the legacy --box-correct flag into the sao allocator params."""
+    if box_correct and allocator.partition(":")[0] == "sao":
+        return {"name": "sao", "params": {"box_correct": True}}
+    return allocator
 
 
 def run(dataset: str, selection: str, *, rounds: int, clients: int,
@@ -21,31 +40,46 @@ def run(dataset: str, selection: str, *, rounds: int, clients: int,
         box_correct: bool = False, seed: int = 0, samples_per_client: int = 128,
         train_samples: int = 4000, test_samples: int = 1000,
         target_accuracy: float = 0.0, lr: float = 0.05):
-    ds = make_dataset(dataset, train_samples, seed=seed)
-    test = make_dataset(dataset, test_samples, seed=seed + 10_000)
-    fed = partition_bias(ds, clients, samples_per_client, sigma, seed=seed + 1)
-    fleet = sample_fleet(clients, seed=seed)
-    fl = FLConfig(num_devices=clients, devices_per_round=per_round,
-                  local_iters=local_iters, num_clusters=10,
-                  learning_rate=lr, max_rounds=rounds,
-                  target_accuracy=target_accuracy)
-    exp = FLExperiment(CNN_CONFIGS[dataset], fed, test.images, test.labels,
-                       fleet, fl, allocator=allocator, seed=seed,
-                       box_correct=box_correct)
-    hist = exp.run(selection, rounds=rounds,
-                   target_accuracy=target_accuracy or None)
-    ari = adjusted_rand_index(exp.cluster_labels, fed.majority)
-    return exp, hist, ari
+    """Back-compat kwargs shim over :func:`run_spec`."""
+    alloc = _allocator_ref(allocator, box_correct)
+    spec = ExperimentSpec(dataset=dataset, selection=selection,
+                          rounds=rounds, clients=clients,
+                          devices_per_round=per_round, sigma=sigma,
+                          local_iters=local_iters, allocator=alloc,
+                          seed=seed, samples_per_client=samples_per_client,
+                          train_samples=train_samples,
+                          test_samples=test_samples,
+                          target_accuracy=target_accuracy,
+                          learning_rate=lr)
+    return run_spec(spec)
+
+
+def spec_from_args(args) -> ExperimentSpec:
+    if args.spec:
+        with open(args.spec) as f:
+            return ExperimentSpec.from_json(f.read())
+    sigma = args.sigma if args.sigma == "H" else float(args.sigma)
+    return ExperimentSpec(dataset=args.dataset, selection=args.selection,
+                          allocator=_allocator_ref(args.allocator,
+                                                   args.box_correct),
+                          rounds=args.rounds,
+                          clients=args.clients,
+                          devices_per_round=args.per_round, sigma=sigma,
+                          local_iters=args.local_iters,
+                          learning_rate=args.lr,
+                          target_accuracy=args.target_acc, seed=args.seed)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--spec", default=None,
+                    help="ExperimentSpec JSON file (overrides other flags)")
     ap.add_argument("--dataset", choices=["mnist", "cifar10", "fashion"],
                     default="mnist")
     ap.add_argument("--selection", default="divergence",
-                    choices=["divergence", "kmeans_random", "random", "icas",
-                             "rra"])
-    ap.add_argument("--allocator", default="sao")
+                    help=f"one of {SELECTORS.names()} (':arg' allowed)")
+    ap.add_argument("--allocator", default="sao",
+                    help=f"one of {ALLOCATORS.names()} (e.g. 'fedl:2.0')")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--clients", type=int, default=40)
     ap.add_argument("--per-round", type=int, default=10)
@@ -55,27 +89,27 @@ def main(argv=None):
     ap.add_argument("--target-acc", type=float, default=0.0)
     ap.add_argument("--box-correct", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dump-spec", action="store_true",
+                    help="print the resolved ExperimentSpec JSON and exit")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
-    sigma = args.sigma if args.sigma == "H" else float(args.sigma)
 
-    exp, hist, ari = run(args.dataset, args.selection, rounds=args.rounds,
-                         clients=args.clients, per_round=args.per_round,
-                         sigma=sigma, local_iters=args.local_iters,
-                         allocator=args.allocator, lr=args.lr,
-                         box_correct=args.box_correct, seed=args.seed,
-                         target_accuracy=args.target_acc)
+    spec = spec_from_args(args)
+    if args.dump_spec:
+        print(spec.to_json(indent=1))
+        return
+
+    exp, hist, ari = run_spec(spec)
     result = {
-        "dataset": args.dataset, "selection": args.selection,
-        "allocator": args.allocator, "sigma": args.sigma,
+        "spec": spec.to_dict(),
         "final_accuracy": hist.accuracy[-1],
         "accuracy": hist.accuracy,
         "total_T_s": hist.total_T, "total_E_J": hist.total_E,
         "rounds_to_target": hist.rounds_to_target,
         "clustering_ari": ari,
     }
-    print(json.dumps({k: v for k, v in result.items() if k != "accuracy"},
-                     indent=1))
+    print(json.dumps({k: v for k, v in result.items()
+                      if k not in ("accuracy", "spec")}, indent=1))
     print("accuracy curve:", np.round(hist.accuracy, 3).tolist())
     if args.out:
         with open(args.out, "a") as f:

@@ -1,0 +1,8 @@
+"""Built-in strategy implementations. Importing this package populates the
+``repro.api`` registries; user code can register additional strategies at
+any time with ``@SELECTORS.register(...)`` etc.
+"""
+from repro.strategies import selectors as selectors        # noqa: F401
+from repro.strategies import allocators as allocators      # noqa: F401
+from repro.strategies import aggregators as aggregators    # noqa: F401
+from repro.strategies import compressors as compressors    # noqa: F401

@@ -1,0 +1,49 @@
+"""Registered server-side aggregation strategies: eq. (4) FedAvg and the
+beyond-paper FedAvgM server-momentum variant.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.api.registry import AGGREGATORS, Strategy
+from repro.core.algorithms import ServerMomentum
+from repro.utils.trees import tree_weighted_mean_stacked
+
+
+@AGGREGATORS.register("fedavg")
+@dataclass
+class FedAvgAggregator(Strategy):
+    """Eq. (4): D_n-weighted average of the participating local models.
+    Stateless, so the driver may fuse it into the jitted round step."""
+
+    fuses_with_engine = True
+
+    def aggregate(self, global_params, stacked_params, weights):
+        return tree_weighted_mean_stacked(stacked_params, weights)
+
+    def reset(self):
+        pass
+
+
+@AGGREGATORS.register("fedavgm")
+@dataclass
+class FedAvgMAggregator(Strategy):
+    """FedAvgM (Hsu et al. 2019): momentum over the server pseudo-gradient.
+    Spelled ``fedavgm:<β>`` in compact form."""
+
+    beta: float = 0.9
+    lr: float = 1.0
+
+    fuses_with_engine = False
+
+    def __post_init__(self):
+        self._opt = ServerMomentum(self.beta, self.lr)
+
+    def aggregate(self, global_params, stacked_params, weights):
+        agg = tree_weighted_mean_stacked(stacked_params, weights)
+        return self._opt.step(global_params, agg)
+
+    def reset(self):
+        self._opt = ServerMomentum(self.beta, self.lr)

@@ -1,0 +1,64 @@
+"""Registered spectrum-allocation strategies: SAO (Alg. 5, ours) and the
+§VI-A baselines. Each takes the ``fleet_arrays`` dict of the *selected*
+devices plus the band B [MHz] and returns an ``Allocation`` (T_k, E_k, b, f).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.protocols import Allocation
+from repro.api.registry import ALLOCATORS, Strategy, StrategyError
+from repro.core.baselines import equal_bandwidth, fedl_lambda
+from repro.core.sao import _Q, solve_sao
+
+
+@ALLOCATORS.register("sao")
+@dataclass(frozen=True)
+class SAOAllocator(Strategy):
+    """Algorithm 5: per-device bandwidth + CPU frequency under per-device
+    energy budgets. ``box_correct`` enables the beyond-paper KKT box fix."""
+
+    box_correct: bool = False
+
+    def allocate(self, arr, B: float) -> Allocation:
+        s = solve_sao(arr, B, box_correct=self.box_correct)
+        e = arr["G"] * jnp.square(s.f) + arr["H"] / _Q(s.b, arr["J"])
+        return Allocation(T=float(s.T), E=float(jnp.sum(e)),
+                          b=np.asarray(s.b), f=np.asarray(s.f))
+
+    @classmethod
+    def from_string(cls, arg):
+        if arg in (None, ""):
+            return cls()
+        if arg in ("box", "box_correct"):
+            return cls(box_correct=True)
+        raise StrategyError(f"sao:{arg}: the only ':arg' is 'box' "
+                            "(KKT box correction)")
+
+
+@ALLOCATORS.register("equal")
+@dataclass(frozen=True)
+class EqualBandwidthAllocator(Strategy):
+    """Baseline 1: b_n = B/S, fastest feasible frequency per device."""
+
+    def allocate(self, arr, B: float) -> Allocation:
+        r = equal_bandwidth(arr, B)
+        return Allocation(T=float(r.T), E=float(jnp.sum(r.e)),
+                          b=np.asarray(r.b), f=np.asarray(r.f))
+
+
+@ALLOCATORS.register("fedl")
+@dataclass(frozen=True)
+class FEDLAllocator(Strategy):
+    """Baseline 2 — FEDL [27]: min Σe + λ·T without per-device energy
+    constraints. Spelled ``fedl:<λ>`` in compact form."""
+
+    lam: float = 1.0
+
+    def allocate(self, arr, B: float) -> Allocation:
+        r = fedl_lambda(arr, B, self.lam)
+        return Allocation(T=float(r.T), E=float(jnp.sum(r.e)),
+                          b=np.asarray(r.b), f=np.asarray(r.f))

@@ -1,0 +1,76 @@
+"""Registered uplink-compression strategies. Compression shrinks the
+payload z_n, which enters SAO through H_n = z_n·p_n and t_com = z_n/r_n —
+and is simulated faithfully (quantize→dequantize on the real update trees)
+so the accuracy cost is measured, not assumed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+
+from repro.api.registry import COMPRESSORS, Strategy
+from repro.core.compression import (compress_int8, compress_topk,
+                                    payload_mbit)
+
+
+class _DeltaCompressor(Strategy):
+    """Shared delta-coding scaffold: compress the stacked client *updates*
+    (w_new − w_global), then re-add the global model."""
+
+    identity = False
+
+    def compress(self, tree):
+        raise NotImplementedError
+
+    def apply(self, stacked_new, global_params):
+        deltas = jax.tree_util.tree_map(
+            lambda n, g: n - g[None], stacked_new, global_params)
+        deltas = self.compress(deltas)
+        return jax.tree_util.tree_map(
+            lambda d, g: g[None] + d, deltas, global_params)
+
+
+@COMPRESSORS.register("none")
+@dataclass(frozen=True)
+class NoCompression(Strategy):
+    """Full-precision uplink: updates and the fleet's own z_n untouched."""
+
+    identity = True
+
+    def compress(self, tree):
+        return tree
+
+    def apply(self, stacked_new, global_params):
+        return stacked_new
+
+    def payload_mbit(self, num_params: int, num_leaves: int) -> Optional[float]:
+        return None
+
+
+@COMPRESSORS.register("int8")
+@dataclass(frozen=True)
+class Int8Compressor(_DeltaCompressor):
+    """Per-leaf symmetric int8 quantization (8 bits + fp32 scale/leaf)."""
+
+    def compress(self, tree):
+        return compress_int8(tree)
+
+    def payload_mbit(self, num_params: int, num_leaves: int) -> float:
+        return payload_mbit(num_params, "int8", num_leaves)
+
+
+@COMPRESSORS.register("topk")
+@dataclass(frozen=True)
+class TopKCompressor(_DeltaCompressor):
+    """Magnitude top-k sparsification keeping ``fraction`` of entries
+    (values fp32 + log2(n)-bit indices). Spelled ``topk:<fraction>``."""
+
+    fraction: float = 0.01
+
+    def compress(self, tree):
+        return compress_topk(tree, self.fraction)
+
+    def payload_mbit(self, num_params: int, num_leaves: int) -> float:
+        return payload_mbit(num_params, f"topk:{self.fraction}", num_leaves)

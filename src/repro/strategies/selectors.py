@@ -1,0 +1,87 @@
+"""Registered device-selection strategies (paper §IV, Algorithms 3-4, and
+the compared baselines). Thin adapters over ``repro.core.selection``; each
+consumes only what it needs from the ``SelectionContext``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.api.protocols import SelectionContext
+from repro.api.registry import SELECTORS, Strategy, StrategyError
+from repro.core.selection import (select_divergence, select_icas,
+                                  select_kmeans_random, select_random,
+                                  select_rra)
+from repro.core.wireless import fleet_arrays, rate_mbps
+
+
+def _require_clusters(ctx: SelectionContext, name: str):
+    if ctx.clusters is None:
+        raise StrategyError(
+            f"selector {name!r} needs K-means clusters; run the initial "
+            "round (Algorithm 2) first")
+    return ctx.clusters
+
+
+@SELECTORS.register("random")
+@dataclass(frozen=True)
+class RandomSelector(Strategy):
+    """FedAvg [31]: S uniform devices."""
+
+    def select(self, ctx: SelectionContext) -> np.ndarray:
+        return select_random(ctx.rng, ctx.num_devices, ctx.devices_per_round)
+
+
+@SELECTORS.register("kmeans_random")
+@dataclass(frozen=True)
+class KMeansRandomSelector(Strategy):
+    """Algorithm 3: s random devices from each cluster."""
+
+    def select(self, ctx: SelectionContext) -> np.ndarray:
+        return select_kmeans_random(ctx.rng,
+                                    _require_clusters(ctx, self.registry_name),
+                                    ctx.selected_per_cluster)
+
+
+@SELECTORS.register("divergence")
+@dataclass(frozen=True)
+class DivergenceSelector(Strategy):
+    """Algorithm 4 (ours): top-s weight divergence per cluster."""
+
+    def select(self, ctx: SelectionContext) -> np.ndarray:
+        return select_divergence(ctx.divergences(),
+                                 _require_clusters(ctx, self.registry_name),
+                                 ctx.selected_per_cluster)
+
+
+@SELECTORS.register("icas")
+@dataclass(frozen=True)
+class ICASSelector(Strategy):
+    """ICAS [42]: importance × channel-rate blend, deterministic top-S."""
+
+    beta: float = 0.5
+
+    def select(self, ctx: SelectionContext) -> np.ndarray:
+        arr = fleet_arrays(ctx.fleet)
+        rates = np.asarray(rate_mbps(ctx.bandwidth_mhz / ctx.num_devices,
+                                     arr["J"]))
+        return select_icas(ctx.divergences(), rates, ctx.devices_per_round,
+                           beta=self.beta)
+
+
+@SELECTORS.register("rra")
+@dataclass(frozen=True)
+class RRASelector(Strategy):
+    """RRA [39]: energy-efficiency participation thresholding; the selected
+    set size varies per round (~``target_mean`` on average, §VI-C)."""
+
+    target_mean: int = 45
+
+    def select(self, ctx: SelectionContext) -> np.ndarray:
+        arr = fleet_arrays(ctx.fleet)
+        e_eq = np.asarray(
+            arr["H"] / rate_mbps(ctx.bandwidth_mhz / self.target_mean,
+                                 arr["J"]))
+        return select_rra(ctx.rng, e_eq, np.asarray(arr["e_cons"]),
+                          target_mean=self.target_mean)

@@ -1,0 +1,228 @@
+"""Registry + ExperimentSpec API: lookup/registration semantics, JSON
+round-trip, spec↔legacy equivalence, and a selector × allocator round
+smoke over every registered pair."""
+import numpy as np
+import pytest
+
+from repro.api import (AGGREGATORS, ALLOCATORS, COMPRESSORS, SELECTORS,
+                       Allocation, ExperimentSpec, Registry, StrategyError,
+                       build_experiment)
+
+# small enough that one round is sub-second on CPU
+TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
+            train_samples=160, test_samples=80, local_iters=2, batch_size=8,
+            rounds=1, devices_per_round=4, num_clusters=4,
+            learning_rate=0.05)
+
+
+# ---------------------------------------------------------------------------
+# registry semantics
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_strategies_registered():
+    assert {"divergence", "kmeans_random", "random", "icas",
+            "rra"} <= set(SELECTORS.names())
+    assert {"sao", "equal", "fedl"} <= set(ALLOCATORS.names())
+    assert {"fedavg", "fedavgm"} <= set(AGGREGATORS.names())
+    assert {"none", "int8", "topk"} <= set(COMPRESSORS.names())
+
+
+def test_duplicate_registration_raises():
+    reg = Registry("widget")
+
+    @reg.register("x")
+    class A:
+        pass
+
+    with pytest.raises(StrategyError, match="duplicate widget 'x'"):
+        reg.register("x")(A)
+
+
+def test_unknown_name_raises_and_lists_known():
+    with pytest.raises(StrategyError, match="unknown selector 'nope'"):
+        SELECTORS.resolve("nope")
+    with pytest.raises(StrategyError, match="divergence"):
+        SELECTORS.get("nope")
+
+
+def test_colon_shorthand_parses_params():
+    assert ALLOCATORS.resolve("fedl:2.5").lam == 2.5
+    assert COMPRESSORS.resolve("topk:0.05").fraction == 0.05
+    assert AGGREGATORS.resolve("fedavgm:0.7").beta == 0.7
+    assert ALLOCATORS.resolve("sao:box").box_correct is True
+
+
+def test_resolve_dict_and_instance():
+    inst = ALLOCATORS.resolve({"name": "fedl", "params": {"lam": 3.0}})
+    assert inst.lam == 3.0
+    assert ALLOCATORS.resolve(inst) is inst
+    with pytest.raises(StrategyError):
+        ALLOCATORS.resolve(42)
+    with pytest.raises(StrategyError, match="must have keys"):
+        ALLOCATORS.resolve({"name": "sao", "parameters": {}})   # typo'd key
+
+
+def test_resolve_rejects_class_and_malformed_shorthand():
+    cls = type(ALLOCATORS.resolve("sao"))
+    with pytest.raises(StrategyError, match="pass an instance"):
+        ALLOCATORS.resolve(cls)
+    with pytest.raises(StrategyError, match="expected a number"):
+        ALLOCATORS.resolve("fedl:abc")
+    with pytest.raises(StrategyError, match="'box'"):
+        ALLOCATORS.resolve("sao:garbage")
+
+
+def test_box_correct_kwarg_applies_to_resolved_allocator():
+    from repro.configs.base import FLConfig
+    from repro.configs.paper_cnn import CNN_CONFIGS
+    from repro.core import FLExperiment, sample_fleet
+    from repro.data import make_dataset, partition_bias
+
+    ds = make_dataset("fashion", 96, seed=0)
+    fed = partition_bias(ds, 6, 16, 0.8, seed=1)
+    fl = FLConfig(num_devices=6, devices_per_round=3, num_clusters=3,
+                  local_iters=1)
+    args = (CNN_CONFIGS["fashion"], fed, ds.images[:20], ds.labels[:20],
+            sample_fleet(6, seed=0), fl)
+    for alloc in ("sao", {"name": "sao"}, ALLOCATORS.resolve("sao")):
+        exp = FLExperiment(*args, allocator=alloc, box_correct=True,
+                           batch_size=8)
+        assert exp.allocator.box_correct is True
+    with pytest.raises(ValueError, match="only applies to the 'sao'"):
+        FLExperiment(*args, allocator="equal", box_correct=True, batch_size=8)
+
+
+def test_custom_registration_resolves():
+    @SELECTORS.register("test_first_s")
+    class FirstS:
+        def select(self, ctx):
+            return np.arange(ctx.devices_per_round)
+
+        def params(self):
+            return {}
+
+        def spec(self):
+            return {"name": "test_first_s", "params": {}}
+
+    try:
+        assert "test_first_s" in SELECTORS
+        idx = SELECTORS.resolve("test_first_s")
+        assert idx.select.__name__ == "select"
+    finally:
+        SELECTORS._classes.pop("test_first_s")
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec
+# ---------------------------------------------------------------------------
+
+
+def test_spec_json_roundtrip():
+    spec = ExperimentSpec(dataset="fashion", clients=12, sigma="H",
+                          selection="icas", allocator="fedl:2.0",
+                          aggregator="fedavgm:0.8", compressor="topk:0.1",
+                          test_seed=90_000)
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.to_json() == spec.to_json()
+
+
+def test_spec_normalizes_compact_strings():
+    spec = ExperimentSpec(allocator="fedl:2.0")
+    assert spec.allocator == {"name": "fedl", "params": {"lam": 2.0}}
+    assert spec.selection["name"] == "divergence"
+
+
+def test_spec_rejects_unknown_fields_and_strategies():
+    with pytest.raises(ValueError, match="unknown ExperimentSpec fields"):
+        ExperimentSpec.from_dict({"no_such_field": 1})
+    with pytest.raises(StrategyError):
+        ExperimentSpec(selection="not_a_policy")
+
+
+def test_spec_seed_derivation():
+    spec = ExperimentSpec(seed=5)
+    assert (spec.resolved_data_seed, spec.resolved_test_seed,
+            spec.resolved_partition_seed, spec.resolved_fleet_seed) \
+        == (5, 10_005, 6, 5)
+    spec = ExperimentSpec(seed=5, data_seed=7, test_seed=90_000)
+    assert (spec.resolved_data_seed, spec.resolved_test_seed) == (7, 90_000)
+
+
+# ---------------------------------------------------------------------------
+# spec-built experiment ≡ legacy kwargs path (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_spec_reproduces_legacy_experiment():
+    from repro.configs.base import FLConfig
+    from repro.configs.paper_cnn import CNN_CONFIGS
+    from repro.core import FLExperiment, sample_fleet
+    from repro.data import make_dataset, partition_bias
+
+    spec = ExperimentSpec.from_json(ExperimentSpec(**TINY).to_json())
+    exp = build_experiment(spec)
+    hist = exp.run()
+
+    ds = make_dataset("fashion", 160, seed=0)
+    test = make_dataset("fashion", 80, seed=10_000)
+    fed = partition_bias(ds, 8, 16, 0.8, seed=1)
+    fl = FLConfig(num_devices=8, devices_per_round=4, local_iters=2,
+                  num_clusters=4, learning_rate=0.05, max_rounds=1)
+    legacy = FLExperiment(CNN_CONFIGS["fashion"], fed, test.images,
+                          test.labels, sample_fleet(8, seed=0), fl,
+                          allocator="sao", seed=0, batch_size=8)
+    legacy_hist = legacy.run("divergence", rounds=1)
+
+    assert hist.accuracy == legacy_hist.accuracy
+    assert hist.T_k == legacy_hist.T_k
+    assert hist.E_k == legacy_hist.E_k
+    np.testing.assert_array_equal(hist.selected[-1], legacy_hist.selected[-1])
+
+
+def test_engine_shared_across_same_config_experiments():
+    spec = ExperimentSpec(**TINY)
+    a = build_experiment(spec)
+    b = build_experiment(spec.replace(seed=1))
+    assert a.engine is b.engine
+
+
+# ---------------------------------------------------------------------------
+# every selector × allocator completes a round (smoke)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_exp():
+    exp = build_experiment(ExperimentSpec(**TINY))
+    exp.initial_round()
+    return exp
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("allocator", ["sao", "equal", "fedl:1.0"])
+@pytest.mark.parametrize("selector", sorted(SELECTORS.names()))
+def test_selector_allocator_round(tiny_exp, selector, allocator):
+    exp = tiny_exp
+    saved = exp.allocator
+    exp.allocator = ALLOCATORS.resolve(allocator)
+    try:
+        res = exp.round(selector)
+    finally:
+        exp.allocator = saved
+    idx = res.selected
+    assert idx.ndim == 1 and len(idx) > 0
+    assert len(np.unique(idx)) == len(idx)
+    assert idx.min() >= 0 and idx.max() < TINY["clients"]
+    assert np.isfinite(res.T_k) and res.T_k > 0
+    assert np.isfinite(res.E_k) and res.E_k > 0
+    assert 0.0 <= res.accuracy <= 1.0
+
+
+def test_allocation_returns_per_device_solution(tiny_exp):
+    alloc = tiny_exp.allocation(np.arange(4))
+    assert isinstance(alloc, Allocation)
+    assert alloc.b.shape == (4,) and alloc.f.shape == (4,)
+    assert np.all(alloc.b > 0) and np.all(alloc.f > 0)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from hypothesis_compat import given, settings, st, HealthCheck
 
 from repro.core.clustering import (kmeans_fit, kmeans_predict,
                                    adjusted_rand_index, extract_features,

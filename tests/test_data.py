@@ -1,7 +1,7 @@
 """Synthetic data + non-iid partitioner invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from hypothesis_compat import given, settings, st, HealthCheck
 
 from repro.data import make_dataset, partition_bias, partition_dirichlet
 from repro.data.synthetic import make_token_stream

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from hypothesis_compat import given, settings, st, HealthCheck
 
 from repro.core import selection as sel
 from repro.core.divergence import weight_divergence

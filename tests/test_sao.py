@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from hypothesis_compat import given, settings, st, HealthCheck
 
 from repro.core.wireless import sample_fleet, fleet_arrays, LN2
 from repro.core.sao import solve_sao, kkt_residuals

@@ -1,7 +1,7 @@
 """Wireless system model (eqs. 5-11) unit + property tests."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st, HealthCheck
+from hypothesis_compat import given, settings, st, HealthCheck
 
 from repro.core import wireless as w
 
