@@ -1,6 +1,14 @@
 """Fig. 10/11 + Table III: convergence of the four device-selection methods
 on non-iid data; rounds-to-target; improvement scores vs FedAvg compared
 with Favor's published scores.
+
+The multi-seed trials for each (σ, method) cell run on the
+``CohortRunner`` — the whole seed sweep is ONE compiled vmapped program
+(initial round + K-means + all rounds), with rounds-to-target computed
+host-side from the returned accuracy curves. Stochastic selectors
+(kmeans_random / random) draw from ``jax.random`` on the cohort engine, so
+their per-seed trajectories differ from the pre-cohort host-loop runs
+(divergence / icas are deterministic and bit-identical).
 """
 from __future__ import annotations
 
@@ -8,7 +16,8 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, fl_experiment
+from benchmarks.common import emit, fl_spec
+from repro.api import build_cohort
 
 # Favor's improvement scores over FedAvg (paper Table III)
 FAVOR_SCORES = {("mnist", 0.5): 0.228, ("mnist", 0.8): 0.157,
@@ -19,19 +28,29 @@ FAVOR_SCORES = {("mnist", 0.5): 0.228, ("mnist", 0.8): 0.157,
                 ("cifar10", "H"): 0.340}
 
 
-def run_one(dataset, sigma, method, *, clients, rounds, local_iters, seed,
-            target):
-    exp = fl_experiment(dataset=dataset, sigma=sigma, clients=clients,
-                        local_iters=local_iters, seed=seed,
-                        test_seed=90_000, selection=method, rounds=rounds,
-                        target_accuracy=target)
-    hist = exp.run(rounds=rounds, target_accuracy=target)
-    rounds_to = hist.rounds_to_target
-    if rounds_to is None:
-        # first round whose accuracy reaches the target, else cap
-        hit = [i for i, a in enumerate(hist.accuracy) if a >= target]
-        rounds_to = hit[0] if hit else rounds + 1
-    return hist, rounds_to
+def run_method(dataset, sigma, method, *, clients, rounds, local_iters,
+               seeds, target):
+    """All trials of one (σ, method) cell as a single cohort program.
+
+    Returns (final accuracies, rounds-to-target) per seed. Rounds-to-target
+    is the first history index at or above ``target`` (index k = round k;
+    the initial all-device round sits at index 0), else ``rounds + 1``.
+    The reported accuracy is the accuracy AT the stop round — matching the
+    legacy early-stopping loop's final history entry — not after all
+    ``rounds`` (the cohort always runs them; the curve is just truncated).
+    """
+    spec = fl_spec(dataset=dataset, sigma=sigma, clients=clients,
+                   local_iters=local_iters, test_seed=90_000,
+                   selection=method, rounds=rounds, seed=seeds[0])
+    ch = build_cohort(spec).run(seeds=seeds, rounds=rounds)
+    accs, r2t = [], []
+    for i in range(len(seeds)):
+        hist = ch.history(i)
+        hit = [k for k, a in enumerate(hist.accuracy) if a >= target]
+        stop = hit[0] if hit else len(hist.accuracy) - 1
+        accs.append(hist.accuracy[stop])
+        r2t.append(hit[0] if hit else rounds + 1)
+    return accs, r2t
 
 
 def run(quick: bool = False):
@@ -42,19 +61,16 @@ def run(quick: bool = False):
     rounds = 10 if quick else 22
     trials = 1 if quick else 2
     target = 0.60 if dataset == "fashion" else 0.55
+    seeds = [t * 17 for t in range(trials)]
 
     for sigma in sigmas:
         stag = str(sigma)
         per_method = {}
         for method in methods:
-            accs, r2t = [], []
             t0 = time.time()
-            for trial in range(trials):
-                hist, rt = run_one(dataset, sigma, method, clients=clients,
+            accs, r2t = run_method(dataset, sigma, method, clients=clients,
                                    rounds=rounds, local_iters=20,
-                                   seed=trial * 17, target=target)
-                accs.append(hist.accuracy[-1])
-                r2t.append(rt)
+                                   seeds=seeds, target=target)
             us = (time.time() - t0) * 1e6 / trials
             per_method[method] = (float(np.median(r2t)),
                                   float(np.mean(accs)))

@@ -11,16 +11,19 @@ from repro.api.registry import (AGGREGATORS, ALLOCATORS, COMPRESSORS,
                                 SELECTORS, Registry, Strategy, StrategyError,
                                 get_registry)
 from repro.api.protocols import (Allocation, Aggregator, Allocator,
-                                 Compressor, SelectionContext, Selector)
+                                 Compressor, RoundState, SelectionContext,
+                                 Selector, TracedAllocator, TracedContext,
+                                 TracedSelector)
 from repro.api.spec import SPEC_VERSION, ExperimentSpec
-from repro.api.build import build_experiment, fl_config_from_spec
+from repro.api.build import build_cohort, build_experiment, fl_config_from_spec
 import repro.strategies  # noqa: F401  (register built-in strategies)
 
 __all__ = [
     "AGGREGATORS", "ALLOCATORS", "COMPRESSORS", "SELECTORS",
     "Registry", "Strategy", "StrategyError", "get_registry",
     "Allocation", "Aggregator", "Allocator", "Compressor",
-    "SelectionContext", "Selector",
+    "RoundState", "SelectionContext", "Selector",
+    "TracedAllocator", "TracedContext", "TracedSelector",
     "SPEC_VERSION", "ExperimentSpec",
-    "build_experiment", "fl_config_from_spec",
+    "build_cohort", "build_experiment", "fl_config_from_spec",
 ]

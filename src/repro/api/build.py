@@ -72,3 +72,10 @@ def build_experiment(spec: ExperimentSpec, *,
         fedprox_mu=spec.fedprox_mu)
     exp.spec = spec
     return exp
+
+
+def build_cohort(spec: ExperimentSpec):
+    """A ``CohortRunner`` for ``spec`` — seeds ``seed..seed+cohort-1`` run
+    as one vmapped, device-sharded program (``repro.core.cohort``)."""
+    from repro.core.cohort import CohortRunner       # late: cycle
+    return CohortRunner(spec)

@@ -3,12 +3,25 @@
 The driver (``repro.core.fedavg.FLExperiment``) talks to strategies only
 through these protocols; the math lives in ``repro.core.*`` and the
 registered adapters in ``repro.strategies.*``.
+
+Two parallel contracts exist for each stage:
+
+* the host (numpy) protocols — ``Selector``/``Allocator``/... — drive the
+  legacy one-Python-round-at-a-time loop;
+* the traced variants — ``TracedSelector``/``TracedAllocator`` — are pure
+  jnp functions over fixed-size padded index sets + participation masks,
+  usable inside ``lax.scan``/``vmap`` (the device-resident round pipeline,
+  ``repro.core.engine.run_rounds`` / ``repro.core.cohort.CohortRunner``).
+
+A strategy advertises the traced contract with ``traceable = True``; the
+driver dispatches to the scanned path only when every configured strategy
+does.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import (TYPE_CHECKING, Any, Callable, Dict, NamedTuple, Optional,
-                    Protocol, Sequence, runtime_checkable)
+                    Protocol, Sequence, Tuple, runtime_checkable)
 
 import numpy as np
 
@@ -34,11 +47,95 @@ class SelectionContext:
 
 
 class Allocation(NamedTuple):
-    """Outcome of one round's spectrum allocation (eqs. 10-11)."""
-    T: float                          # round delay T_k [s]
-    E: float                          # round energy E_k [J]
+    """Outcome of one round's spectrum allocation (eqs. 10-11).
+
+    ``T``/``E`` may be device scalars (jnp) — the solve is jitted and the
+    values stay on device until the host boundary (``FLHistory.append``)
+    coerces them, so the driver never blocks between allocation and the
+    training dispatch.
+    """
+    T: Any                            # round delay T_k [s] (float or jnp scalar)
+    E: Any                            # round energy E_k [J] (float or jnp scalar)
     b: Optional[np.ndarray] = None    # per-device bandwidth [MHz]
     f: Optional[np.ndarray] = None    # per-device CPU frequency [GHz]
+
+
+# ---------------------------------------------------------------------------
+# traced round pipeline (device-resident; lax.scan / vmap friendly)
+# ---------------------------------------------------------------------------
+
+
+class RoundState(NamedTuple):
+    """The carried pytree of the scanned round loop — everything one FL
+    round reads and writes, device-resident.
+
+    Leaves:
+      params        : global model pytree
+      client_params : per-client model pytree, stacked on a leading N axis
+      opt_state     : server-optimizer state (e.g. FedAvgM momentum; the
+                      aggregator's ``init_traced_state`` defines it — may be
+                      ``None`` for stateless aggregation)
+      key           : jax PRNG key driving selection + local SGD
+      labels        : [N] int32 K-means cluster labels (Alg. 2; zeros until
+                      the initial round has run)
+    """
+    params: Any
+    client_params: Any
+    opt_state: Any
+    key: Any
+    labels: Any
+
+
+@dataclass(frozen=True)
+class TracedContext:
+    """Static (trace-time) round geometry shared by the traced strategies.
+
+    Every field is a compile-time constant: it sizes the fixed-shape padded
+    index sets, so it is part of the XLA program cache key.
+    """
+    num_devices: int                  # N
+    devices_per_round: int            # S
+    selected_per_cluster: int         # s (Alg. 3/4)
+    num_clusters: int                 # c
+    bandwidth_mhz: float              # B
+
+
+@runtime_checkable
+class TracedSelector(Protocol):
+    """Traceable device selection: returns a FIXED-SIZE padded index set.
+
+    ``select_traced(key, divergences, labels, arr, ctx)`` returns
+    ``(idx, mask)`` where ``idx`` is int32 of length ``pad_size(ctx)``;
+    invalid (padding) lanes hold the out-of-bounds sentinel
+    ``ctx.num_devices`` and ``mask`` is False exactly there — JAX gathers
+    clamp and scatters drop those lanes, so padding is self-masking.
+    ``key`` is consumed only when ``needs_rng``; deterministic policies
+    leave the PRNG stream untouched (bit-parity with the host loop).
+    """
+
+    traceable: bool
+    needs_rng: bool                   # split a selection key off the stream?
+    needs_divergence: bool            # compute ‖w_n − w_g‖ before selecting?
+
+    def pad_size(self, ctx: TracedContext) -> int: ...
+
+    def select_traced(self, key, divergences, labels,
+                      arr: Dict[str, Any], ctx: TracedContext) -> Tuple[Any, Any]: ...
+
+
+@runtime_checkable
+class TracedAllocator(Protocol):
+    """Traceable spectrum allocation over a padded selected set.
+
+    ``arr`` holds the selected devices' constants (gathered, padded lanes
+    duplicated + masked); returns jnp scalars/arrays ``(T, E, b, f)`` with
+    padded lanes excluded from the max/sum reductions.
+    """
+
+    traceable: bool
+
+    def allocate_traced(self, arr: Dict[str, Any], B: float,
+                        mask: Any) -> Tuple[Any, Any, Any, Any]: ...
 
 
 @runtime_checkable

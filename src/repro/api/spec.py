@@ -61,6 +61,10 @@ class ExperimentSpec:
     feature_layer: str = "auto"            # K-means feature (Alg. 2)
     fedprox_mu: float = 0.0                # >0 → FedProx client objective
 
+    # ---- cohort (vmapped multi-seed execution) -----------------------
+    cohort: int = 1                        # seeds seed..seed+cohort-1 run as
+                                           # ONE compiled program (CohortRunner)
+
     # ---- seeds (None → derived from ``seed``) ------------------------
     seed: int = 0
     data_seed: Optional[int] = None        # default: seed

@@ -11,5 +11,7 @@ from repro.core.clustering import (kmeans_fit, kmeans_predict, extract_features,
                                    clusters_from_labels, adjusted_rand_index)
 from repro.core.divergence import weight_divergence, pairwise_divergence_matrix
 from repro.core import selection
-from repro.core.engine import EngineConfig, RoundEngine, RoundResult
+from repro.core.engine import (EngineConfig, RoundEngine, RoundResult,
+                               TracedRunResult, run_rounds)
 from repro.core.fedavg import FLExperiment, FLHistory, make_local_update
+from repro.core.cohort import CohortHistory, CohortRunner

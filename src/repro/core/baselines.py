@@ -30,16 +30,33 @@ class AllocResult(NamedTuple):
     feasible: jnp.ndarray     # per-device energy constraint satisfied
 
 
-def equal_bandwidth(arr: Dict[str, jnp.ndarray], B: float) -> AllocResult:
-    """Baseline 1. Every device gets B/S; f maximal within its own budget."""
-    n = arr["J"].shape[0]
-    b = jnp.full((n,), B / n, jnp.float32)
-    ecom = arr["H"] / _Q(b, arr["J"])
+def equal_bandwidth(arr: Dict[str, jnp.ndarray], B: float,
+                    mask=None) -> AllocResult:
+    """Baseline 1. Every device gets B/S; f maximal within its own budget.
+
+    ``mask`` (optional, [S] bool) marks the real devices of a fixed-size
+    padded selection (traced round pipeline): the band splits over the
+    masked count only, and padded lanes are excluded from the reductions
+    and zeroed in the returned ``b``/``f``/``e``.
+    """
+    if mask is None:
+        n = arr["J"].shape[0]
+        b = jnp.full((n,), B / n, jnp.float32)
+        b_q = b
+    else:
+        n = jnp.maximum(jnp.sum(mask), 1)
+        b = jnp.where(mask, B / n, 0.0)
+        b_q = jnp.where(mask, b, 1.0)        # keep Q well-defined on pads
+    ecom = arr["H"] / _Q(b_q, arr["J"])
     resid = arr["e_cons"] - ecom
     f = jnp.sqrt(jnp.maximum(resid, 0.0) / arr["G"])
     f = jnp.clip(f, arr["f_min"], arr["f_max"])
-    t = arr["z"] / _Q(b, arr["J"]) + arr["U"] / f
+    t = arr["z"] / _Q(b_q, arr["J"]) + arr["U"] / f
     e = arr["G"] * jnp.square(f) + ecom
+    if mask is not None:
+        t = jnp.where(mask, t, -jnp.inf)
+        e = jnp.where(mask, e, 0.0)
+        f = jnp.where(mask, f, 0.0)
     return AllocResult(T=jnp.max(t), b=b, f=f, e=e,
                        feasible=e <= arr["e_cons"] + 1e-6)
 

@@ -1,0 +1,196 @@
+"""CohortRunner — vmapped seed cohorts over the device-resident round
+pipeline.
+
+The paper's headline figures are all sweeps (many seeds × selectors × σ);
+with the whole experiment traced (``engine.run_rounds``), a cohort of
+seeds/fleet draws becomes ONE compiled program: the per-seed
+state/data/fleet pytrees are stacked on a leading cohort axis, ``vmap``
+maps the scanned multi-round run over it, and ``jax.sharding`` splits that
+axis across the local devices. One dispatch, one device→host transfer for
+the entire cohort history.
+
+    runner = CohortRunner(ExperimentSpec(..., cohort=8))
+    ch = runner.run()                  # 8 seeds, one XLA program
+    ch.accuracy                        # [8, rounds+1]
+    ch.history(3)                      # seed 3's FLHistory view
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import TracedRunResult, run_rounds
+from repro.core.fedavg import FLExperiment, FLHistory
+from repro.core.wireless import fleet_arrays
+
+__all__ = ["CohortHistory", "CohortRunner"]
+
+
+def _tree_stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def cohort_mesh(cohort_size: int):
+    """A 1-axis ``("cohort",)`` mesh over the largest local-device count
+    dividing the cohort, or None on a single-device host (plain vmap)."""
+    devs = jax.devices()
+    n = len(devs)
+    while n > 1 and cohort_size % n:
+        n -= 1
+    if n <= 1:
+        return None
+    return jax.sharding.Mesh(np.array(devs[:n]), ("cohort",))
+
+
+def _shard_cohort(tree, mesh):
+    """Pre-place every leaf's leading (cohort) axis onto the mesh devices,
+    so the sharded program starts without a host→device reshuffle."""
+    if mesh is None:
+        return tree
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("cohort"))
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), tree)
+
+
+@dataclass
+class CohortHistory:
+    """Stacked round histories for a seed cohort (leading axis = seed)."""
+    seeds: List[int]
+    accuracy: np.ndarray              # [B, rounds(+1)]
+    T_k: np.ndarray                   # [B, rounds(+1)]
+    E_k: np.ndarray                   # [B, rounds(+1)]
+    selected: np.ndarray              # [B, rounds, S_pad] padded indices
+    mask: np.ndarray                  # [B, rounds, S_pad] participation
+    with_init: bool
+    num_devices: int
+
+    def __len__(self) -> int:
+        return len(self.seeds)
+
+    def history(self, i: int) -> FLHistory:
+        """Seed ``i``'s run as a plain ``FLHistory`` (padding stripped)."""
+        hist = FLHistory()
+        hist.accuracy = [float(a) for a in self.accuracy[i]]
+        hist.T_k = [float(t) for t in self.T_k[i]]
+        hist.E_k = [float(e) for e in self.E_k[i]]
+        if self.with_init:
+            hist.selected.append(np.arange(self.num_devices))
+        hist.selected.extend(self.selected[i][k][self.mask[i][k]]
+                             for k in range(self.selected.shape[1]))
+        return hist
+
+    @property
+    def final_accuracy(self) -> np.ndarray:
+        return self.accuracy[:, -1]
+
+
+class CohortRunner:
+    """Run one ``ExperimentSpec`` across a batch of seeds as a single
+    compiled, device-sharded program.
+
+    Per-seed datasets/partitions/fleets are materialized host-side through
+    the normal ``build_experiment`` factory (so seed-derivation semantics
+    match single runs exactly), stacked, and handed to the vmapped
+    ``engine.run_rounds``. Requires every configured strategy to be
+    traceable (``FLExperiment.traceable``).
+
+    Note on stochastic selection: random/kmeans_random/rra draw from
+    ``jax.random`` here (keyed off each seed's PRNG stream), not the host
+    numpy Generator the Python loop uses — per-seed histories are
+    reproducible run-to-run but differ from a host-loop run of the same
+    seed. Deterministic selectors (divergence, icas) match the host loop
+    bit-for-bit.
+    """
+
+    def __init__(self, spec):
+        self.spec = spec
+        self.experiments: List[FLExperiment] = []
+
+    # ------------------------------------------------------------------
+    def _build(self, seeds: Sequence[int]) -> List[FLExperiment]:
+        from repro.api.build import build_experiment
+        return [build_experiment(self.spec.replace(seed=int(s)))
+                for s in seeds]
+
+    def run(self, seeds: Optional[Sequence[int]] = None,
+            rounds: Optional[int] = None,
+            reuse_experiments: bool = False) -> CohortHistory:
+        """Execute the cohort. ``reuse_experiments=True`` skips rebuilding
+        the per-seed datasets/fleets when this runner already holds them
+        (benchmarking repeat runs; training state continues where it was)."""
+        if seeds is None:
+            seeds = [self.spec.seed + i
+                     for i in range(max(int(getattr(self.spec, "cohort", 1)),
+                                        1))]
+        seeds = [int(s) for s in seeds]
+        rounds = rounds or self.spec.rounds
+        if reuse_experiments and len(self.experiments) == len(seeds):
+            exps = self.experiments
+        else:
+            exps = self.experiments = self._build(seeds)
+        e0 = exps[0]
+        if not e0.traceable():
+            raise ValueError(
+                "CohortRunner needs an all-traceable strategy bundle; "
+                f"got selector={e0.selector.registry_name!r}, "
+                f"allocator={e0.allocator.registry_name!r}, "
+                f"aggregator={e0.aggregator.registry_name!r}, "
+                f"compressor={e0.compressor.registry_name!r}")
+
+        # per-seed pytrees, stacked on the cohort axis and device-sharded
+        B = len(seeds)
+        mesh = cohort_mesh(B)
+        state = _shard_cohort(_tree_stack([e.traced_state() for e in exps]),
+                              mesh)
+        images = _shard_cohort(jnp.stack([e._images for e in exps]), mesh)
+        labels = _shard_cohort(jnp.stack([e._labels for e in exps]), mesh)
+        sizes = _shard_cohort(jnp.stack([e._sizes for e in exps]), mesh)
+        arr = _shard_cohort(
+            _tree_stack([fleet_arrays(e.fleet) for e in exps]), mesh)
+        # the evaluation set is shared across the cohort iff every seed
+        # resolves the same test data (the common sweep protocol)
+        test_shared = len({e.spec.resolved_test_seed if hasattr(e, "spec")
+                           else id(e) for e in exps}) == 1
+        if test_shared:
+            test_images, test_labels = e0.test_images, e0.test_labels
+        else:
+            test_images = _shard_cohort(
+                jnp.stack([e.test_images for e in exps]), mesh)
+            test_labels = _shard_cohort(
+                jnp.stack([e.test_labels for e in exps]), mesh)
+
+        fn = run_rounds(e0.engine.cfg, selector=e0.selector,
+                        allocator=e0.allocator, aggregator=e0.aggregator,
+                        compressor=e0.compressor, tctx=e0.traced_context(),
+                        feature_layer=e0.fl.feature_layer, rounds=rounds,
+                        with_init=True, cohort=True,
+                        test_shared=test_shared, mesh=mesh)
+        res: TracedRunResult = fn(state, images, labels, sizes, arr,
+                                  test_images, test_labels)
+
+        # sync each seed's final state back into its host experiment
+        for i, e in enumerate(exps):
+            e.load_traced_state(jax.tree_util.tree_map(lambda x, i=i: x[i],
+                                                       res.state))
+        return self._history(seeds, res, e0.fed.num_clients)
+
+    @staticmethod
+    def _history(seeds, res: TracedRunResult,
+                 num_devices: int) -> CohortHistory:
+        accs, Ts, Es, sel, msk = (np.asarray(x) for x in (
+            res.rounds.accuracy, res.rounds.T, res.rounds.E,
+            res.rounds.selected, res.rounds.mask))
+        acc0, T0, E0 = (np.asarray(x)[:, None] for x in (
+            res.init_accuracy, res.init_T, res.init_E))
+        return CohortHistory(
+            seeds=list(seeds),
+            accuracy=np.concatenate([acc0, accs], axis=1),
+            T_k=np.concatenate([T0, Ts], axis=1),
+            E_k=np.concatenate([E0, Es], axis=1),
+            selected=sel, mask=msk, with_init=True,
+            num_devices=num_devices)

@@ -12,18 +12,27 @@ clients, eq. (4) weighted aggregation, and test-set evaluation in a single
 XLA program — usable whenever the aggregator is the plain weighted mean and
 no lossy uplink compression is configured; the driver otherwise composes
 the unfused pieces with the strategy objects in between.
+
+``run_rounds`` goes further: when every configured strategy is traceable,
+the ENTIRE experiment — initial all-device round + K-means clustering
+(Alg. 2), then K rounds of select → SAO allocate → vmapped local training →
+aggregate → eval — compiles to a single ``lax.scan`` program. The whole
+``FLHistory`` comes back as stacked arrays in one device→host transfer, and
+the same program vmaps over a cohort axis (``repro.core.cohort``).
 """
 from __future__ import annotations
 
 import functools
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
+from repro.api.protocols import RoundState, TracedContext
 from repro.configs.paper_cnn import CNNConfig
 from repro.core.algorithms import make_fedprox_local_update
 from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
@@ -132,3 +141,203 @@ def _eval_fn(params, test_images, test_labels, *, cnn_cfg: CNNConfig):
     correct = (pred == test_labels).astype(jnp.float32)[:, None] * onehot
     per_class = jnp.sum(correct, 0) / jnp.maximum(jnp.sum(onehot, 0), 1.0)
     return acc, per_class
+
+
+# ---------------------------------------------------------------------------
+# the device-resident round pipeline: one lax.scan over K full rounds
+# ---------------------------------------------------------------------------
+
+
+class RoundOutputs(NamedTuple):
+    """Per-round stacked history a traced run produces ([R] / [R, S_pad])."""
+    accuracy: Any
+    T: Any
+    E: Any
+    selected: Any
+    mask: Any
+
+
+class TracedRunResult(NamedTuple):
+    """Everything one ``run_rounds`` call returns, still on device."""
+    state: RoundState
+    rounds: RoundOutputs
+    # initial (all-device) round bookkeeping, or None when with_init=False
+    init_accuracy: Any = None
+    init_T: Any = None
+    init_E: Any = None
+
+
+@functools.lru_cache(maxsize=32)
+def _traced_round_program(cfg: EngineConfig, selector, allocator,
+                          agg_name: str, agg_params: tuple, compressor,
+                          tctx: TracedContext, feature_layer: str):
+    """The pure (unjitted) traced experiment fn for one strategy bundle.
+
+    All arguments are hashable trace-time constants: ``selector`` /
+    ``allocator`` / ``compressor`` are frozen strategy dataclasses and the
+    (stateful, unhashable) aggregator travels as its registry spec. The
+    cache makes sweeps over seeds/σ share one Python closure → one XLA
+    program per (rounds, with_init, cohort) variant.
+    """
+    from repro.api.registry import AGGREGATORS
+    from repro.core.clustering import extract_features, kmeans_fit
+    from repro.core.divergence import weight_divergence
+
+    aggregator = AGGREGATORS.resolve({"name": agg_name,
+                                      "params": dict(agg_params)})
+    if cfg.fedprox_mu > 0:
+        local_update = make_fedprox_local_update(
+            cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size,
+            mu=cfg.fedprox_mu)
+    else:
+        local_update = make_local_update(
+            cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size)
+    vmapped_update = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
+    N, B = tctx.num_devices, tctx.bandwidth_mhz
+
+    def train_aggregate(state, idx, mask, images, labels, sizes):
+        """Local training of ``idx`` + store + aggregate (masked weights).
+
+        Key discipline mirrors the host loop exactly: one split off the
+        stream, then per-client subkeys — a traced run and the Python loop
+        consume identical PRNG sequences.
+        """
+        key, sub = jax.random.split(state.key)
+        tkeys = jax.random.split(sub, idx.shape[0])
+        # gathers clamp the out-of-bounds padding sentinel; masked below
+        stacked = vmapped_update(state.params, images[idx], labels[idx], tkeys)
+        stacked = compressor.apply(stacked, state.params)
+        w = sizes[idx]
+        if mask is not None:
+            w = jnp.where(mask, w, 0.0)
+        new_global, opt_state = aggregator.aggregate_traced(
+            state.params, stacked, w, state.opt_state)
+        # scatter back: the sentinel rows are out of bounds -> dropped
+        new_client = jax.tree_util.tree_map(
+            lambda all_, new: all_.at[idx].set(new),
+            state.client_params, stacked)
+        return state._replace(params=new_global, client_params=new_client,
+                              opt_state=opt_state, key=key)
+
+    def init_round(state, images, labels, sizes, arr, test_images,
+                   test_labels):
+        """Round 0 (Alg. 1 line 1 + Alg. 2): all devices train, aggregate,
+        K-means-cluster on the chosen feature layer, evaluate + allocate."""
+        all_idx = jnp.arange(N)
+        state = train_aggregate(state, all_idx, None, images, labels, sizes)
+        feats = extract_features(state.client_params, feature_layer)
+        key, sub = jax.random.split(state.key)
+        _, k_labels, _ = kmeans_fit(sub, feats, tctx.num_clusters)
+        state = state._replace(key=key, labels=k_labels.astype(jnp.int32))
+        acc0, _ = _eval_fn(state.params, test_images, test_labels,
+                           cnn_cfg=cfg.cnn_cfg)
+        T0, E0, _, _ = allocator.allocate_traced(arr, B, None)
+        return state, (acc0, T0, E0)
+
+    def round_step(state, images, labels, sizes, arr, test_images,
+                   test_labels):
+        """One full FL round: select → allocate → train → aggregate → eval."""
+        if selector.needs_divergence:
+            div = weight_divergence(state.client_params, state.params)
+        else:
+            div = jnp.zeros((N,), jnp.float32)
+        if selector.needs_rng:
+            key, k_sel = jax.random.split(state.key)
+            state = state._replace(key=key)
+        else:
+            k_sel = None
+        idx, mask = selector.select_traced(k_sel, div, state.labels, arr,
+                                           tctx)
+        arr_sel = {k: v[idx] for k, v in arr.items()}
+        T, E, _, _ = allocator.allocate_traced(arr_sel, B, mask)
+        state = train_aggregate(state, idx, mask, images, labels, sizes)
+        acc, _ = _eval_fn(state.params, test_images, test_labels,
+                          cnn_cfg=cfg.cnn_cfg)
+        return state, RoundOutputs(accuracy=acc, T=T, E=E, selected=idx,
+                                   mask=mask)
+
+    def run(state, images, labels, sizes, arr, test_images, test_labels,
+            rounds: int, with_init: bool):
+        init_out = None
+        if with_init:
+            state, init_out = init_round(state, images, labels, sizes, arr,
+                                         test_images, test_labels)
+
+        def step(s, _):
+            return round_step(s, images, labels, sizes, arr, test_images,
+                              test_labels)
+
+        state, outs = lax.scan(step, state, None, length=rounds)
+        if init_out is None:
+            return TracedRunResult(state=state, rounds=outs)
+        acc0, T0, E0 = init_out
+        return TracedRunResult(state=state, rounds=outs, init_accuracy=acc0,
+                               init_T=T0, init_E=E0)
+
+    return run
+
+
+# LRU-bounded like RoundEngine._CACHE: sweeps over many distinct
+# (strategies, rounds) combos must not pin every XLA executable forever.
+_RUN_FN_CACHE: "OrderedDict[tuple, Any]" = OrderedDict()
+_RUN_FN_CACHE_MAX = 64
+
+
+def aggregator_cache_key(aggregator) -> tuple:
+    """Hashable identity of a (possibly stateful) aggregator instance."""
+    return (aggregator.registry_name,
+            tuple(sorted(aggregator.params().items())))
+
+
+def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
+               compressor, tctx: TracedContext, feature_layer: str,
+               rounds: int, with_init: bool, cohort: bool = False,
+               test_shared: bool = True, mesh=None):
+    """The compiled multi-round experiment fn for one strategy bundle.
+
+    Returns a jitted callable
+    ``(state, images, labels, sizes, arr, test_images, test_labels)
+    -> TracedRunResult`` executing ``rounds`` full FL rounds as ONE XLA
+    program (plus the Alg.-2 initial round when ``with_init``). With
+    ``cohort=True`` every data/state argument gains a leading cohort axis
+    (vmapped) — the ``CohortRunner`` path; ``test_shared`` keeps the
+    evaluation set un-mapped (one copy across the cohort).
+
+    ``mesh`` (a 1-axis ``jax.sharding.Mesh`` named ``"cohort"``) splits the
+    cohort axis across local devices via ``shard_map``: each device runs
+    its slice of seeds as an independent per-shard vmap — embarrassingly
+    parallel, no cross-device collectives inside the round.
+
+    Compiled callables are cached process-wide, so sweeps that differ only
+    in seed/data reuse one executable.
+    """
+    mesh_key = (None if mesh is None
+                else tuple(d.id for d in mesh.devices.flat))
+    key = (cfg, selector, allocator, aggregator_cache_key(aggregator),
+           compressor, tctx, feature_layer, rounds, with_init, cohort,
+           test_shared, mesh_key)
+    fn = _RUN_FN_CACHE.get(key)
+    if fn is None:
+        prog = _traced_round_program(
+            cfg, selector, allocator, aggregator.registry_name,
+            tuple(sorted(aggregator.params().items())), compressor, tctx,
+            feature_layer)
+        core = functools.partial(prog, rounds=rounds, with_init=with_init)
+        if cohort:
+            test_ax = None if test_shared else 0
+            core = jax.vmap(core, in_axes=(0, 0, 0, 0, 0, test_ax, test_ax))
+            if mesh is not None:
+                from jax.experimental.shard_map import shard_map
+                from jax.sharding import PartitionSpec as P
+                data_spec = P("cohort")
+                test_spec = P() if test_shared else P("cohort")
+                core = shard_map(
+                    core, mesh=mesh,
+                    in_specs=(data_spec,) * 5 + (test_spec, test_spec),
+                    out_specs=data_spec, check_rep=False)
+        fn = _RUN_FN_CACHE[key] = jax.jit(core)
+        while len(_RUN_FN_CACHE) > _RUN_FN_CACHE_MAX:
+            _RUN_FN_CACHE.popitem(last=False)
+    else:
+        _RUN_FN_CACHE.move_to_end(key)
+    return fn

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.protocols import Allocation, SelectionContext
+from repro.api.protocols import (Allocation, RoundState, SelectionContext,
+                                 TracedContext)
 from repro.api.registry import AGGREGATORS, ALLOCATORS, COMPRESSORS, SELECTORS
 import repro.strategies  # noqa: F401  (populate the registries)
 from repro.configs.base import FLConfig
@@ -35,7 +36,7 @@ from repro.core.clustering import (kmeans_fit, extract_features,
                                    clusters_from_labels)
 from repro.core.divergence import weight_divergence
 from repro.core.engine import (EngineConfig, RoundEngine, RoundResult,
-                               make_local_update)
+                               TracedRunResult, make_local_update, run_rounds)
 from repro.core.wireless import DeviceFleet, fleet_arrays
 from repro.data.partition import FederatedData
 from repro.utils.trees import tree_num_params
@@ -60,9 +61,13 @@ class FLHistory:
         return float(np.sum(self.E_k))
 
     def append(self, res: RoundResult):
-        self.accuracy.append(res.accuracy)
-        self.T_k.append(res.T_k)
-        self.E_k.append(res.E_k)
+        # the host boundary: allocation/eval outputs may still be device
+        # scalars (the solves are jitted); coerce HERE, once per round,
+        # instead of blocking inside the allocator before training even
+        # dispatches — and so the stored history is plain Python floats.
+        self.accuracy.append(float(res.accuracy))
+        self.T_k.append(float(res.T_k))
+        self.E_k.append(float(res.E_k))
         self.selected.append(np.asarray(res.selected))
 
 
@@ -249,9 +254,28 @@ class FLExperiment:
     def run(self, method: Any = None, rounds: Optional[int] = None,
             target_accuracy: Optional[float] = None,
             include_initial_round: bool = True) -> FLHistory:
+        """Run the experiment; identical results from two execution paths.
+
+        When every configured strategy advertises ``traceable=True``, the
+        selection policy is deterministic (bit-parity with the host loop —
+        stochastic selectors draw from ``jax.random`` when traced, which
+        would silently change this reproduction's numbers for the same
+        seed), and no early-stop target is set, the whole experiment runs
+        as ONE compiled ``lax.scan`` program on device
+        (``engine.run_rounds``) and the history comes back in a single
+        transfer. Otherwise the legacy round-at-a-time Python loop below
+        drives the same math. Stochastic selectors run device-resident
+        through the explicit ``CohortRunner`` path, which documents the
+        ``jax.random`` draw.
+        """
         rounds = rounds or self.fl.max_rounds
         target = (self.fl.target_accuracy
                   if target_accuracy is None else target_accuracy)
+        selector = (self.selector if method is None
+                    else SELECTORS.resolve(method))
+        bit_parity = not getattr(selector, "needs_rng", True)
+        if not target and bit_parity and self.traceable(selector):
+            return self._run_traced(selector, rounds, include_initial_round)
         hist = FLHistory()
         if include_initial_round or self.clusters is None:
             self.initial_round()
@@ -259,8 +283,8 @@ class FLExperiment:
             all_idx = np.arange(self.fed.num_clients)
             T0, E0 = self.allocate(all_idx)
             hist.accuracy.append(acc)
-            hist.T_k.append(T0)
-            hist.E_k.append(E0)
+            hist.T_k.append(float(T0))
+            hist.E_k.append(float(E0))
             hist.selected.append(all_idx)
         for k in range(rounds):
             res = self.round(method)
@@ -268,4 +292,82 @@ class FLExperiment:
             if target and res.accuracy >= target and hist.rounds_to_target is None:
                 hist.rounds_to_target = k + 1
                 break
+        return hist
+
+    # ------------------------------------------------------------------
+    # device-resident path: the whole experiment as one lax.scan program
+    # ------------------------------------------------------------------
+    def traceable(self, selector: Any = None) -> bool:
+        """True when the configured strategy bundle supports the scanned
+        device-resident pipeline."""
+        selector = self.selector if selector is None else selector
+        return all(getattr(s, "traceable", False)
+                   for s in (selector, self.allocator, self.aggregator,
+                             self.compressor))
+
+    def traced_context(self) -> TracedContext:
+        return TracedContext(num_devices=self.fed.num_clients,
+                             devices_per_round=self.fl.devices_per_round,
+                             selected_per_cluster=self.fl.selected_per_cluster,
+                             num_clusters=self.fl.num_clusters,
+                             bandwidth_mhz=self.B)
+
+    def traced_state(self) -> RoundState:
+        """Snapshot the experiment's mutable state as the scan carry."""
+        labels = (jnp.zeros((self.fed.num_clients,), jnp.int32)
+                  if self.cluster_labels is None
+                  else jnp.asarray(self.cluster_labels, jnp.int32))
+        return RoundState(
+            params=self.global_params, client_params=self.client_params,
+            opt_state=self.aggregator.init_traced_state(self.global_params),
+            key=self.key, labels=labels)
+
+    def load_traced_state(self, state: RoundState, *,
+                          clusters_valid: bool = True):
+        """Sync a (final) scan carry back into the host driver, so a traced
+        run can be inspected or continued by the Python loop."""
+        self.global_params = state.params
+        self.client_params = state.client_params
+        self.key = state.key
+        self.aggregator.load_traced_state(state.opt_state)
+        if clusters_valid:
+            self.cluster_labels = np.asarray(state.labels)
+            self.clusters = clusters_from_labels(self.cluster_labels,
+                                                 self.fl.num_clusters)
+
+    def _run_traced(self, selector, rounds: int,
+                    include_initial_round: bool) -> FLHistory:
+        with_init = include_initial_round or self.clusters is None
+        fn = run_rounds(self.engine.cfg, selector=selector,
+                        allocator=self.allocator, aggregator=self.aggregator,
+                        compressor=self.compressor,
+                        tctx=self.traced_context(),
+                        feature_layer=self.fl.feature_layer,
+                        rounds=rounds, with_init=with_init)
+        res = fn(self.traced_state(), self._images, self._labels,
+                 self._sizes, fleet_arrays(self.fleet), self.test_images,
+                 self.test_labels)
+        self.load_traced_state(res.state,
+                               clusters_valid=with_init
+                               or self.cluster_labels is not None)
+        return self.history_from_traced(res, with_init,
+                                        self.fed.num_clients)
+
+    @staticmethod
+    def history_from_traced(res: TracedRunResult, with_init: bool,
+                            num_devices: int) -> FLHistory:
+        """One device→host transfer of a scanned run's stacked history."""
+        hist = FLHistory()
+        accs, Ts, Es, sel, msk = (np.asarray(x) for x in (
+            res.rounds.accuracy, res.rounds.T, res.rounds.E,
+            res.rounds.selected, res.rounds.mask))
+        if with_init:
+            hist.accuracy.append(float(res.init_accuracy))
+            hist.T_k.append(float(res.init_T))
+            hist.E_k.append(float(res.init_E))
+            hist.selected.append(np.arange(num_devices))
+        hist.accuracy.extend(float(a) for a in accs)
+        hist.T_k.extend(float(t) for t in Ts)
+        hist.E_k.extend(float(e) for e in Es)
+        hist.selected.extend(sel[k][msk[k]] for k in range(sel.shape[0]))
         return hist

@@ -147,26 +147,40 @@ def _inner_allocate(T, arr, b_max, n_iters: int, box_correct: bool):
 
 @functools.partial(jax.jit,
                    static_argnames=("n_outer", "n_inner", "box_correct"))
-def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, eps0: float = 1e-3,
-              b_max: float = None, n_outer: int = 48,
+def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, mask=None,
+              eps0: float = 1e-3, b_max: float = None, n_outer: int = 48,
               n_inner: int = 48, box_correct: bool = False) -> SAOSolution:
     """Algorithm 5. ``arr`` = fleet_arrays(fleet.select(S_k)); B in MHz.
 
     Outer bisection on T_k: Σ_n b_n(T) is monotone ↓ in T (looser deadline →
     smaller f → more energy headroom for comm → less bandwidth needed), so
     plain bisection converges to the T* where the band is exactly used.
+
+    ``mask`` (optional, [S] bool) marks which lanes are real devices — the
+    traced round pipeline passes fixed-size padded selections; padded lanes
+    are excluded from every cross-device reduction (band sum, delay max)
+    and get ``b = f = 0`` in the returned solution.
     """
     if b_max is None:
         b_max = B
     b_max = jnp.asarray(b_max, jnp.float32)
     B = jnp.asarray(B, jnp.float32)
+    if mask is None:
+        mask = jnp.ones(arr["J"].shape, bool)
+
+    def masked_max(x):
+        return jnp.max(jnp.where(mask, x, -jnp.inf))
+
+    def masked_sum(x):
+        return jnp.sum(jnp.where(mask, x, 0.0))
 
     # Line 1: T_min = max_n( ln2·z/J + U/f_max ) — the b→∞, f=f_max limit.
-    T_min0 = jnp.max(LN2 * arr["z"] / arr["J"] + arr["U"] / arr["f_max"])
+    T_min0 = masked_max(LN2 * arr["z"] / arr["J"] + arr["U"] / arr["f_max"])
     # T_max: generous upper bound — slowest CPU + a 1000th of the band each.
     n = arr["J"].shape[0]
     b_floor = jnp.maximum(B / n * 1e-3, 1e-6)
-    T_max0 = jnp.max(arr["z"] / _Q(b_floor, arr["J"]) + arr["U"] / arr["f_min"]) * 2.0
+    T_max0 = masked_max(arr["z"] / _Q(b_floor, arr["J"])
+                        + arr["U"] / arr["f_min"]) * 2.0
 
     def cond(carry):
         i, T_lo, T_hi, done = carry
@@ -176,7 +190,7 @@ def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, eps0: float = 1e-3,
         i, T_lo, T_hi, _ = carry
         T = 0.5 * (T_lo + T_hi)
         b, f = _inner_allocate(T, arr, b_max, n_inner, box_correct)
-        ratio = jnp.sum(b) / B
+        ratio = masked_sum(b) / B
         done = (ratio <= 1.0) & (ratio >= 1.0 - eps0)
         # pin both ends to T on convergence so the returned midpoint IS the
         # T that satisfied the band; otherwise shrink the bracket.
@@ -199,12 +213,13 @@ def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, eps0: float = 1e-3,
     e_of = lambda ff: arr["G"] * jnp.square(ff) + arr["H"] / _Q(b, arr["J"])
     f_final = jnp.where(e_of(f_star) <= arr["e_cons"] + 1e-6, f_star, f)
     t = arr["z"] / _Q(b, arr["J"]) + arr["U"] / f_final
-    T_star = jnp.max(t)
-    ratio = jnp.sum(b) / B
+    T_star = masked_max(t)
+    ratio = masked_sum(b) / B
     # ratio ≤ 1 at the bracket floor means the band constraint is slack at
     # the optimum (γ* = 0 corner: energy budgets loose, T* = T_min) — that is
     # a converged optimum too, (22) just isn't tight.
-    return SAOSolution(T=T_star, b=b, f=f_final,
+    return SAOSolution(T=T_star, b=jnp.where(mask, b, 0.0),
+                       f=jnp.where(mask, f_final, 0.0),
                        converged=done | (ratio <= 1.0), ratio=ratio)
 
 

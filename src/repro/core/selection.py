@@ -67,7 +67,13 @@ def select_rra(rng: np.random.Generator, e_com_at_equal_share: np.ndarray,
     # participation probability grows with energy efficiency
     p = np.clip(eff / np.percentile(eff, 100 * min(
         1.0, target_mean / len(eff))), 0.0, 1.0)
-    mask = rng.uniform(size=len(eff)) < p * (target_mean / max(p.sum(), 1e-9))
+    # Rescale toward the target mean, but never ABOVE probability-one: when
+    # target_mean >= N the percentile lands at 100 (p ≈ eff/max(eff)) and an
+    # unclamped target_mean/p.sum() factor pushed every device past 1 —
+    # deterministic all-device participation with zero round-to-round
+    # variance, silently degenerating the thresholding policy.
+    scale = min(1.0, target_mean / max(p.sum(), 1e-9))
+    mask = rng.uniform(size=len(eff)) < p * scale
     if not mask.any():
         mask[np.argmax(eff)] = True
     return np.flatnonzero(mask)

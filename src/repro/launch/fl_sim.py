@@ -12,10 +12,12 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import numpy as np
 
-from repro.api import ExperimentSpec, build_experiment, SELECTORS, ALLOCATORS
+from repro.api import (ExperimentSpec, build_cohort, build_experiment,
+                       SELECTORS, ALLOCATORS)
 from repro.core import adjusted_rand_index
 
 
@@ -26,6 +28,16 @@ def run_spec(spec: ExperimentSpec):
                    target_accuracy=spec.target_accuracy or None)
     ari = adjusted_rand_index(exp.cluster_labels, exp.fed.majority)
     return exp, hist, ari
+
+
+def run_cohort_spec(spec: ExperimentSpec):
+    """Run seeds ``seed..seed+cohort-1`` as ONE compiled vmapped program.
+
+    Returns (runner, CohortHistory); per-seed ``FLHistory`` views come from
+    ``cohort_hist.history(i)``.
+    """
+    runner = build_cohort(spec)
+    return runner, runner.run()
 
 
 def _allocator_ref(allocator: str, box_correct: bool):
@@ -67,7 +79,8 @@ def spec_from_args(args) -> ExperimentSpec:
                           devices_per_round=args.per_round, sigma=sigma,
                           local_iters=args.local_iters,
                           learning_rate=args.lr,
-                          target_accuracy=args.target_acc, seed=args.seed)
+                          target_accuracy=args.target_acc, seed=args.seed,
+                          cohort=args.cohort)
 
 
 def main(argv=None):
@@ -89,6 +102,9 @@ def main(argv=None):
     ap.add_argument("--target-acc", type=float, default=0.0)
     ap.add_argument("--box-correct", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cohort", type=int, default=1,
+                    help="run seeds seed..seed+N-1 as one vmapped, "
+                         "device-sharded program (traceable strategies only)")
     ap.add_argument("--dump-spec", action="store_true",
                     help="print the resolved ExperimentSpec JSON and exit")
     ap.add_argument("--out", default=None)
@@ -97,6 +113,32 @@ def main(argv=None):
     spec = spec_from_args(args)
     if args.dump_spec:
         print(spec.to_json(indent=1))
+        return
+
+    if spec.cohort > 1:
+        if spec.target_accuracy:
+            print(f"warning: --cohort runs all {spec.rounds} rounds as one "
+                  "compiled program; target_accuracy early stopping is "
+                  "ignored (compute rounds-to-target from the curves)",
+                  file=sys.stderr)
+        runner, ch = run_cohort_spec(spec)
+        aris = [adjusted_rand_index(e.cluster_labels, e.fed.majority)
+                for e in runner.experiments]
+        result = {
+            "spec": spec.to_dict(),
+            "seeds": ch.seeds,
+            "final_accuracy_mean": float(np.mean(ch.final_accuracy)),
+            "final_accuracy_std": float(np.std(ch.final_accuracy)),
+            "final_accuracy_per_seed": ch.final_accuracy.tolist(),
+            "total_T_s_per_seed": np.sum(ch.T_k, axis=1).tolist(),
+            "total_E_J_per_seed": np.sum(ch.E_k, axis=1).tolist(),
+            "clustering_ari_per_seed": aris,
+        }
+        print(json.dumps({k: v for k, v in result.items() if k != "spec"},
+                         indent=1))
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(result) + "\n")
         return
 
     exp, hist, ari = run_spec(spec)

@@ -1,5 +1,12 @@
 """Registered server-side aggregation strategies: eq. (4) FedAvg and the
 beyond-paper FedAvgM server-momentum variant.
+
+Both implement the traced contract used by the scanned round pipeline:
+``init_traced_state(params)`` builds the server-optimizer pytree carried in
+``RoundState.opt_state`` and ``aggregate_traced`` is a pure function
+``(global, stacked, weights, opt_state) -> (new_global, new_opt_state)``.
+``load_traced_state`` syncs the final scanned state back into the stateful
+host object so a traced run can be continued by the Python loop.
 """
 from __future__ import annotations
 
@@ -9,7 +16,8 @@ import numpy as np
 
 from repro.api.registry import AGGREGATORS, Strategy
 from repro.core.algorithms import ServerMomentum
-from repro.utils.trees import tree_weighted_mean_stacked
+from repro.utils.trees import (tree_add, tree_scale, tree_sub,
+                               tree_weighted_mean_stacked, tree_zeros_like)
 
 
 @AGGREGATORS.register("fedavg")
@@ -19,11 +27,23 @@ class FedAvgAggregator(Strategy):
     Stateless, so the driver may fuse it into the jitted round step."""
 
     fuses_with_engine = True
+    traceable = True
 
     def aggregate(self, global_params, stacked_params, weights):
         return tree_weighted_mean_stacked(stacked_params, weights)
 
     def reset(self):
+        pass
+
+    # -- traced contract ------------------------------------------------
+    def init_traced_state(self, global_params):
+        return None
+
+    def aggregate_traced(self, global_params, stacked_params, weights,
+                         opt_state):
+        return tree_weighted_mean_stacked(stacked_params, weights), opt_state
+
+    def load_traced_state(self, opt_state):
         pass
 
 
@@ -37,6 +57,7 @@ class FedAvgMAggregator(Strategy):
     lr: float = 1.0
 
     fuses_with_engine = False
+    traceable = True
 
     def __post_init__(self):
         self._opt = ServerMomentum(self.beta, self.lr)
@@ -47,3 +68,20 @@ class FedAvgMAggregator(Strategy):
 
     def reset(self):
         self._opt = ServerMomentum(self.beta, self.lr)
+
+    # -- traced contract ------------------------------------------------
+    def init_traced_state(self, global_params):
+        if self._opt.v is not None:      # continue from host-loop momentum
+            return self._opt.v
+        # fresh v starts at zeros: β·0 + Δ ≡ Δ matches the lazy-None init
+        return tree_zeros_like(global_params)
+
+    def aggregate_traced(self, global_params, stacked_params, weights,
+                         opt_state):
+        agg = tree_weighted_mean_stacked(stacked_params, weights)
+        delta = tree_sub(global_params, agg)            # pseudo-gradient
+        v = tree_add(tree_scale(opt_state, self.beta), delta)
+        return tree_sub(global_params, tree_scale(v, self.lr)), v
+
+    def load_traced_state(self, opt_state):
+        self._opt.v = opt_state

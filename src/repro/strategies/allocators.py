@@ -1,13 +1,22 @@
 """Registered spectrum-allocation strategies: SAO (Alg. 5, ours) and the
 §VI-A baselines. Each takes the ``fleet_arrays`` dict of the *selected*
 devices plus the band B [MHz] and returns an ``Allocation`` (T_k, E_k, b, f).
+
+``allocate`` keeps its outputs on device (jnp scalars/arrays) — the solves
+are jitted and the host boundary (``FLHistory.append``) is the single place
+values are pulled back, so the driver never blocks between the allocation
+and the training dispatch.
+
+SAO and equal-bandwidth also implement the traced contract
+(``allocate_traced``: padded selected sets + participation masks) used by
+the scanned round pipeline; FEDL's waterfilling grid solve is host-driven
+(λ tuning) and stays loop-only.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.api.protocols import Allocation
 from repro.api.registry import ALLOCATORS, Strategy, StrategyError
@@ -23,11 +32,18 @@ class SAOAllocator(Strategy):
 
     box_correct: bool = False
 
+    traceable = True
+
     def allocate(self, arr, B: float) -> Allocation:
-        s = solve_sao(arr, B, box_correct=self.box_correct)
+        T, E, b, f = self.allocate_traced(arr, B, None)
+        return Allocation(T=T, E=E, b=b, f=f)
+
+    def allocate_traced(self, arr, B: float, mask):
+        s = solve_sao(arr, B, mask=mask, box_correct=self.box_correct)
         e = arr["G"] * jnp.square(s.f) + arr["H"] / _Q(s.b, arr["J"])
-        return Allocation(T=float(s.T), E=float(jnp.sum(e)),
-                          b=np.asarray(s.b), f=np.asarray(s.f))
+        if mask is not None:
+            e = jnp.where(mask, e, 0.0)
+        return s.T, jnp.sum(e), s.b, s.f
 
     @classmethod
     def from_string(cls, arg):
@@ -44,10 +60,15 @@ class SAOAllocator(Strategy):
 class EqualBandwidthAllocator(Strategy):
     """Baseline 1: b_n = B/S, fastest feasible frequency per device."""
 
+    traceable = True
+
     def allocate(self, arr, B: float) -> Allocation:
         r = equal_bandwidth(arr, B)
-        return Allocation(T=float(r.T), E=float(jnp.sum(r.e)),
-                          b=np.asarray(r.b), f=np.asarray(r.f))
+        return Allocation(T=r.T, E=jnp.sum(r.e), b=r.b, f=r.f)
+
+    def allocate_traced(self, arr, B: float, mask):
+        r = equal_bandwidth(arr, B, mask=mask)
+        return r.T, jnp.sum(r.e), r.b, r.f
 
 
 @ALLOCATORS.register("fedl")
@@ -58,7 +79,8 @@ class FEDLAllocator(Strategy):
 
     lam: float = 1.0
 
+    traceable = False                  # host-driven grid solve (λ tuning)
+
     def allocate(self, arr, B: float) -> Allocation:
         r = fedl_lambda(arr, B, self.lam)
-        return Allocation(T=float(r.T), E=float(jnp.sum(r.e)),
-                          b=np.asarray(r.b), f=np.asarray(r.f))
+        return Allocation(T=r.T, E=jnp.sum(r.e), b=r.b, f=r.f)

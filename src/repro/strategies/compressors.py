@@ -17,9 +17,13 @@ from repro.core.compression import (compress_int8, compress_topk,
 
 class _DeltaCompressor(Strategy):
     """Shared delta-coding scaffold: compress the stacked client *updates*
-    (w_new − w_global), then re-add the global model."""
+    (w_new − w_global), then re-add the global model.
+
+    ``apply`` is pure jnp over static shapes, so every built-in compressor
+    is ``traceable`` inside the scanned round pipeline."""
 
     identity = False
+    traceable = True
 
     def compress(self, tree):
         raise NotImplementedError
@@ -38,6 +42,7 @@ class NoCompression(Strategy):
     """Full-precision uplink: updates and the fleet's own z_n untouched."""
 
     identity = True
+    traceable = True
 
     def compress(self, tree):
         return tree

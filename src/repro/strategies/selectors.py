@@ -1,6 +1,15 @@
 """Registered device-selection strategies (paper §IV, Algorithms 3-4, and
 the compared baselines). Thin adapters over ``repro.core.selection``; each
 consumes only what it needs from the ``SelectionContext``.
+
+Every built-in also implements the traced contract
+(``repro.api.protocols.TracedSelector``): ``select_traced`` is a pure jnp
+function over fixed-size padded index sets (ports in
+``repro.strategies.traced``), which lets the driver move the whole round
+loop onto the device (``lax.scan`` in ``repro.core.engine.run_rounds``).
+Deterministic policies (divergence, icas) are bit-compatible with their
+numpy versions; the stochastic ones draw from ``jax.random`` instead of the
+host Generator and are parity-tested structurally.
 """
 from __future__ import annotations
 
@@ -8,12 +17,16 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.api.protocols import SelectionContext
+from repro.api.protocols import SelectionContext, TracedContext
 from repro.api.registry import SELECTORS, Strategy, StrategyError
 from repro.core.selection import (select_divergence, select_icas,
                                   select_kmeans_random, select_random,
                                   select_rra)
 from repro.core.wireless import fleet_arrays, rate_mbps
+from repro.strategies.traced import (select_divergence_traced,
+                                     select_icas_traced,
+                                     select_kmeans_random_traced,
+                                     select_random_traced, select_rra_traced)
 
 
 def _require_clusters(ctx: SelectionContext, name: str):
@@ -29,8 +42,19 @@ def _require_clusters(ctx: SelectionContext, name: str):
 class RandomSelector(Strategy):
     """FedAvg [31]: S uniform devices."""
 
+    traceable = True
+    needs_rng = True
+    needs_divergence = False
+
     def select(self, ctx: SelectionContext) -> np.ndarray:
         return select_random(ctx.rng, ctx.num_devices, ctx.devices_per_round)
+
+    def pad_size(self, ctx: TracedContext) -> int:
+        return ctx.devices_per_round
+
+    def select_traced(self, key, divergences, labels, arr, ctx: TracedContext):
+        return select_random_traced(key, num_devices=ctx.num_devices,
+                                    S=ctx.devices_per_round)
 
 
 @SELECTORS.register("kmeans_random")
@@ -38,10 +62,22 @@ class RandomSelector(Strategy):
 class KMeansRandomSelector(Strategy):
     """Algorithm 3: s random devices from each cluster."""
 
+    traceable = True
+    needs_rng = True
+    needs_divergence = False
+
     def select(self, ctx: SelectionContext) -> np.ndarray:
         return select_kmeans_random(ctx.rng,
                                     _require_clusters(ctx, self.registry_name),
                                     ctx.selected_per_cluster)
+
+    def pad_size(self, ctx: TracedContext) -> int:
+        return ctx.num_clusters * ctx.selected_per_cluster
+
+    def select_traced(self, key, divergences, labels, arr, ctx: TracedContext):
+        return select_kmeans_random_traced(
+            key, labels, num_clusters=ctx.num_clusters,
+            s=ctx.selected_per_cluster, num_devices=ctx.num_devices)
 
 
 @SELECTORS.register("divergence")
@@ -49,10 +85,22 @@ class KMeansRandomSelector(Strategy):
 class DivergenceSelector(Strategy):
     """Algorithm 4 (ours): top-s weight divergence per cluster."""
 
+    traceable = True
+    needs_rng = False
+    needs_divergence = True
+
     def select(self, ctx: SelectionContext) -> np.ndarray:
         return select_divergence(ctx.divergences(),
                                  _require_clusters(ctx, self.registry_name),
                                  ctx.selected_per_cluster)
+
+    def pad_size(self, ctx: TracedContext) -> int:
+        return ctx.num_clusters * ctx.selected_per_cluster
+
+    def select_traced(self, key, divergences, labels, arr, ctx: TracedContext):
+        return select_divergence_traced(
+            divergences, labels, num_clusters=ctx.num_clusters,
+            s=ctx.selected_per_cluster, num_devices=ctx.num_devices)
 
 
 @SELECTORS.register("icas")
@@ -62,12 +110,25 @@ class ICASSelector(Strategy):
 
     beta: float = 0.5
 
+    traceable = True
+    needs_rng = False
+    needs_divergence = True
+
     def select(self, ctx: SelectionContext) -> np.ndarray:
         arr = fleet_arrays(ctx.fleet)
         rates = np.asarray(rate_mbps(ctx.bandwidth_mhz / ctx.num_devices,
                                      arr["J"]))
         return select_icas(ctx.divergences(), rates, ctx.devices_per_round,
                            beta=self.beta)
+
+    def pad_size(self, ctx: TracedContext) -> int:
+        return ctx.devices_per_round
+
+    def select_traced(self, key, divergences, labels, arr, ctx: TracedContext):
+        return select_icas_traced(
+            divergences, arr, bandwidth_mhz=ctx.bandwidth_mhz,
+            num_devices=ctx.num_devices, S=ctx.devices_per_round,
+            beta=self.beta)
 
 
 @SELECTORS.register("rra")
@@ -78,6 +139,10 @@ class RRASelector(Strategy):
 
     target_mean: int = 45
 
+    traceable = True
+    needs_rng = True
+    needs_divergence = False
+
     def select(self, ctx: SelectionContext) -> np.ndarray:
         arr = fleet_arrays(ctx.fleet)
         e_eq = np.asarray(
@@ -85,3 +150,11 @@ class RRASelector(Strategy):
                                  arr["J"]))
         return select_rra(ctx.rng, e_eq, np.asarray(arr["e_cons"]),
                           target_mean=self.target_mean)
+
+    def pad_size(self, ctx: TracedContext) -> int:
+        return ctx.num_devices          # the participating set size varies
+
+    def select_traced(self, key, divergences, labels, arr, ctx: TracedContext):
+        return select_rra_traced(
+            key, arr, bandwidth_mhz=ctx.bandwidth_mhz,
+            num_devices=ctx.num_devices, target_mean=self.target_mean)

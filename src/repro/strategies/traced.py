@@ -1,0 +1,89 @@
+"""jnp ports of the device-selection policies (paper §IV + baselines) for
+the device-resident round pipeline.
+
+Each port returns a FIXED-SIZE padded index set ``(idx, mask)`` so the
+whole selection step traces under ``lax.scan`` / ``vmap``:
+
+  * ``idx`` is int32 of a static length (``pad_size``); padding lanes hold
+    the out-of-bounds sentinel ``num_devices`` — JAX gathers clamp and
+    scatters DROP out-of-bounds indices, so padding is self-masking on both
+    the read (client data) and write (client-param store) sides.
+  * ``mask`` is True exactly on the valid lanes; it zeroes the padded
+    lanes' aggregation weights and excludes them from the SAO reductions.
+
+The host/numpy versions in ``repro.core.selection`` stay registered and
+bit-authoritative for the legacy Python loop; parity between the two is
+pinned by ``tests/test_traced_engine.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.wireless import rate_mbps
+
+
+def _per_cluster_topk(scores, labels, num_clusters: int, s: int,
+                      num_devices: int):
+    """Top-``s`` lanes per cluster of a masked score vector.
+
+    Returns ``(idx, mask)`` of static length ``num_clusters * s``; clusters
+    with fewer than ``s`` members pad with the sentinel. Cluster blocks are
+    emitted in label order (matching the host loop's concatenation order),
+    each block descending by score (``lax.top_k``).
+    """
+    member = labels[None, :] == jnp.arange(num_clusters)[:, None]   # [c, N]
+    masked = jnp.where(member, scores[None, :], -jnp.inf)
+    top_scores, top_idx = jax.lax.top_k(masked, s)                  # [c, s]
+    valid = jnp.isfinite(top_scores)
+    idx = jnp.where(valid, top_idx, num_devices)
+    return idx.reshape(-1).astype(jnp.int32), valid.reshape(-1)
+
+
+def select_divergence_traced(divergences, labels, *, num_clusters: int,
+                             s: int, num_devices: int):
+    """Algorithm 4: top-s weight divergence per cluster (masked ``top_k``)."""
+    return _per_cluster_topk(divergences, labels, num_clusters, s, num_devices)
+
+
+def select_kmeans_random_traced(key, labels, *, num_clusters: int, s: int,
+                                num_devices: int):
+    """Algorithm 3: s uniform devices per cluster — uniform random scores
+    make per-cluster ``top_k`` a without-replacement uniform draw."""
+    scores = jax.random.uniform(key, (num_devices,))
+    return _per_cluster_topk(scores, labels, num_clusters, s, num_devices)
+
+
+def select_random_traced(key, *, num_devices: int, S: int):
+    """FedAvg: S uniform devices without replacement."""
+    idx = jax.random.permutation(key, num_devices)[:S].astype(jnp.int32)
+    return idx, jnp.ones((S,), bool)
+
+
+def select_icas_traced(divergences, arr, *, bandwidth_mhz: float,
+                       num_devices: int, S: int, beta: float):
+    """ICAS: importance × channel-rate geometric blend, deterministic top-S."""
+    rates = rate_mbps(bandwidth_mhz / num_devices, arr["J"])
+    u = divergences / jnp.maximum(jnp.max(divergences), 1e-12)
+    r = rates / jnp.maximum(jnp.max(rates), 1e-12)
+    score = jnp.power(u, beta) * jnp.power(r, 1.0 - beta)
+    _, idx = jax.lax.top_k(score, S)
+    return idx.astype(jnp.int32), jnp.ones((S,), bool)
+
+
+def select_rra_traced(key, arr, *, bandwidth_mhz: float, num_devices: int,
+                      target_mean: int):
+    """RRA: energy-efficiency thresholding as a fixed-size (N-lane) masked
+    variant — the participating-set size varies through the mask, not the
+    shape. Mirrors the host version including the scale clamp."""
+    e_eq = arr["H"] / rate_mbps(bandwidth_mhz / target_mean, arr["J"])
+    eff = arr["e_cons"] / jnp.maximum(e_eq, 1e-12)
+    q = 100.0 * min(1.0, target_mean / num_devices)
+    p = jnp.clip(eff / jnp.percentile(eff, q), 0.0, 1.0)
+    scale = jnp.minimum(1.0, target_mean / jnp.maximum(jnp.sum(p), 1e-9))
+    mask = jax.random.uniform(key, (num_devices,)) < p * scale
+    # never empty: fall back to the most efficient device
+    mask = jnp.where(jnp.any(mask), mask,
+                     jnp.arange(num_devices) == jnp.argmax(eff))
+    idx = jnp.where(mask, jnp.arange(num_devices), num_devices)
+    return idx.astype(jnp.int32), mask

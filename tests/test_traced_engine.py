@@ -1,0 +1,241 @@
+"""Device-resident round pipeline: scan-path ≡ python-loop equivalence,
+traced-vs-numpy selector parity, masked/batched SAO invariance, and the
+vmapped seed-cohort runner."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build_cohort, build_experiment
+from repro.core import selection as sel
+from repro.core.sao import solve_sao
+from repro.core.wireless import fleet_arrays, sample_fleet
+from repro.strategies.traced import (select_divergence_traced,
+                                     select_icas_traced,
+                                     select_kmeans_random_traced,
+                                     select_random_traced, select_rra_traced)
+
+TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
+            train_samples=160, test_samples=80, local_iters=2, batch_size=8,
+            rounds=3, devices_per_round=4, num_clusters=4,
+            learning_rate=0.05)
+
+
+def _run_legacy(exp, *args, **kw):
+    """Force the round-at-a-time Python loop regardless of traceability."""
+    exp.traceable = lambda *a, **k: False
+    return exp.run(*args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# scan path ≡ python loop (the tentpole acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_scan_path_matches_python_loop():
+    spec = ExperimentSpec(**TINY)
+    traced = build_experiment(spec)
+    assert traced.traceable()
+    h_t = traced.run(rounds=3)
+
+    legacy = build_experiment(spec)
+    h_l = _run_legacy(legacy, rounds=3)
+
+    assert h_t.accuracy == h_l.accuracy
+    np.testing.assert_allclose(h_t.T_k, h_l.T_k, rtol=1e-6)
+    np.testing.assert_allclose(h_t.E_k, h_l.E_k, rtol=1e-6)
+    assert len(h_t.selected) == len(h_l.selected) == 4
+    for a, b in zip(h_t.selected, h_l.selected):
+        np.testing.assert_array_equal(a, b)
+    # the synced-back host state matches too (params, clusters, key stream)
+    np.testing.assert_array_equal(traced.cluster_labels,
+                                  legacy.cluster_labels)
+    for lt, ll in zip(jax.tree_util.tree_leaves(traced.global_params),
+                      jax.tree_util.tree_leaves(legacy.global_params)):
+        np.testing.assert_allclose(np.asarray(lt), np.asarray(ll),
+                                   rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(np.asarray(traced.key),
+                                  np.asarray(legacy.key))
+
+
+@pytest.mark.slow
+def test_scan_path_history_is_python_floats():
+    exp = build_experiment(ExperimentSpec(**TINY))
+    hist = exp.run(rounds=1)
+    assert all(type(a) is float for a in hist.accuracy)
+    assert all(type(t) is float for t in hist.T_k)
+    assert all(type(e) is float for e in hist.E_k)
+
+
+@pytest.mark.slow
+def test_target_accuracy_falls_back_to_python_loop():
+    # early stopping needs the host loop; an impossible target runs all
+    # rounds there, and history values still land as floats (bugfix)
+    exp = build_experiment(ExperimentSpec(**TINY))
+    hist = exp.run(rounds=2, target_accuracy=0.01)
+    assert hist.rounds_to_target == 1
+    assert all(type(t) is float for t in hist.T_k)
+
+
+# ---------------------------------------------------------------------------
+# traced selector parity vs the numpy versions
+# ---------------------------------------------------------------------------
+
+
+def test_traced_divergence_matches_numpy():
+    rng = np.random.default_rng(0)
+    N, c, s = 12, 3, 2
+    div = rng.uniform(0.1, 5.0, N)
+    labels = rng.integers(0, c, N)
+    clusters = [np.flatnonzero(labels == i) for i in range(c)]
+    want = sel.select_divergence(div, clusters, s=s)
+    idx, mask = select_divergence_traced(
+        jnp.asarray(div, jnp.float32), jnp.asarray(labels),
+        num_clusters=c, s=s, num_devices=N)
+    got = np.asarray(idx)[np.asarray(mask)]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_traced_divergence_pads_small_clusters():
+    div = jnp.asarray([3.0, 1.0, 2.0])
+    labels = jnp.asarray([0, 0, 1])           # cluster 2 empty
+    idx, mask = select_divergence_traced(div, labels, num_clusters=3, s=2,
+                                         num_devices=3)
+    assert idx.shape == (6,)
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [True, True, True, False, False, False])
+    # padding lanes hold the out-of-bounds sentinel (scatters drop them)
+    assert np.all(np.asarray(idx)[~np.asarray(mask)] == 3)
+    np.testing.assert_array_equal(np.asarray(idx)[np.asarray(mask)],
+                                  [0, 1, 2])
+
+
+def test_traced_random_and_kmeans_random_structural():
+    key = jax.random.PRNGKey(0)
+    idx, mask = select_random_traced(key, num_devices=20, S=6)
+    assert bool(np.all(np.asarray(mask)))
+    got = np.asarray(idx)
+    assert len(np.unique(got)) == 6 and got.min() >= 0 and got.max() < 20
+
+    labels = jnp.asarray(np.arange(20) % 4)
+    idx, mask = select_kmeans_random_traced(key, labels, num_clusters=4,
+                                            s=1, num_devices=20)
+    got = np.asarray(idx)[np.asarray(mask)]
+    assert len(got) == 4
+    # one pick per cluster, emitted in cluster order, member of its cluster
+    np.testing.assert_array_equal(np.asarray(labels)[got], np.arange(4))
+
+
+def test_traced_icas_matches_numpy():
+    fleet = sample_fleet(16, seed=3)
+    arr = fleet_arrays(fleet)
+    rng = np.random.default_rng(1)
+    div = rng.uniform(0.5, 4.0, 16)
+    from repro.core.wireless import rate_mbps
+    rates = np.asarray(rate_mbps(20.0 / 16, arr["J"]))
+    want = sel.select_icas(div, rates, 5, beta=0.5)
+    idx, mask = select_icas_traced(jnp.asarray(div, jnp.float32), arr,
+                                   bandwidth_mhz=20.0, num_devices=16, S=5,
+                                   beta=0.5)
+    assert bool(np.all(np.asarray(mask)))
+    np.testing.assert_array_equal(np.asarray(idx), want)
+
+
+def test_traced_rra_masked_and_nonempty():
+    fleet = sample_fleet(30, seed=0)
+    arr = fleet_arrays(fleet)
+    sizes = set()
+    for i in range(8):
+        idx, mask = select_rra_traced(jax.random.PRNGKey(i), arr,
+                                      bandwidth_mhz=20.0, num_devices=30,
+                                      target_mean=15)
+        m = np.asarray(mask)
+        got = np.asarray(idx)
+        assert m.sum() > 0
+        np.testing.assert_array_equal(got[m], np.flatnonzero(m))
+        assert np.all(got[~m] == 30)           # sentinel on padding
+        sizes.add(int(m.sum()))
+    assert len(sizes) > 1                      # set size varies per round
+
+
+# ---------------------------------------------------------------------------
+# select_rra regression: target_mean >= N must not degenerate (bugfix)
+# ---------------------------------------------------------------------------
+
+
+def test_select_rra_target_above_population_not_degenerate():
+    rng = np.random.default_rng(3)
+    e_eq = rng.uniform(0.001, 0.05, 10)
+    e_b = rng.uniform(0.03, 0.06, 10)
+    sizes = [len(sel.select_rra(rng, e_eq, e_b, target_mean=45))
+             for _ in range(30)]
+    assert all(s > 0 for s in sizes)
+    # pre-fix: the unclamped target_mean/p.sum() factor pushed every
+    # participation probability past 1 -> all 10 devices, every round
+    assert any(s < 10 for s in sizes)
+    assert len(set(sizes)) > 1
+
+
+# ---------------------------------------------------------------------------
+# masked + batched SAO invariance
+# ---------------------------------------------------------------------------
+
+
+def test_solve_sao_masked_padding_matches_unpadded():
+    fleet = sample_fleet(6, seed=1)
+    arr = fleet_arrays(fleet)
+    want = solve_sao(arr, 20.0)
+    # pad with two duplicated (masked-out) lanes
+    pad = {k: jnp.concatenate([v, v[:2]]) for k, v in arr.items()}
+    mask = jnp.asarray([True] * 6 + [False] * 2)
+    got = solve_sao(pad, 20.0, mask=mask)
+    np.testing.assert_allclose(float(got.T), float(want.T), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.b[:6]), np.asarray(want.b),
+                               rtol=1e-4, atol=1e-5)
+    assert np.all(np.asarray(got.b[6:]) == 0.0)
+    assert np.all(np.asarray(got.f[6:]) == 0.0)
+
+
+def test_vmapped_sao_matches_per_fleet_solves():
+    arrs = [fleet_arrays(sample_fleet(8, seed=s)) for s in range(3)]
+    stacked = {k: jnp.stack([a[k] for a in arrs]) for k in arrs[0]}
+    batched = jax.vmap(lambda a: solve_sao(a, 20.0))(stacked)
+    for i, a in enumerate(arrs):
+        single = solve_sao(a, 20.0)
+        np.testing.assert_allclose(float(batched.T[i]), float(single.T),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(batched.b[i]),
+                                   np.asarray(single.b), rtol=1e-4,
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(batched.f[i]),
+                                   np.asarray(single.f), rtol=1e-4,
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# cohort runner: vmapped seeds ≡ per-seed single runs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_cohort_matches_per_seed_runs():
+    spec = ExperimentSpec(**TINY, cohort=2, data_seed=7, test_seed=90_000)
+    runner = build_cohort(spec)
+    ch = runner.run()
+    assert ch.accuracy.shape == (2, TINY["rounds"] + 1)
+    for i, seed in enumerate(ch.seeds):
+        single = build_experiment(spec.replace(seed=seed)).run()
+        hi = ch.history(i)
+        assert hi.accuracy == single.accuracy
+        np.testing.assert_allclose(hi.T_k, single.T_k, rtol=1e-6)
+        np.testing.assert_allclose(hi.E_k, single.E_k, rtol=1e-6)
+        for a, b in zip(hi.selected, single.selected):
+            np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_cohort_rejects_untraceable_bundle():
+    spec = ExperimentSpec(**TINY, cohort=2, allocator="fedl:1.0")
+    with pytest.raises(ValueError, match="all-traceable"):
+        build_cohort(spec).run()
