@@ -27,7 +27,13 @@ parallel devices the sharded cohort scales toward min(M, 8)x on top.
 Writes ``results/BENCH_cohort.json`` (the perf-trajectory artifact the CI
 workflow uploads) plus the usual CSV rows.
 
-    PYTHONPATH=src:. python benchmarks/bench_cohort_scaling.py [--quick]
+``--smoke`` is the per-PR CI gate: the quick workload, a printed summary,
+and a NON-ZERO EXIT when the scanned path has regressed below
+``SMOKE_MIN_SPEEDUP`` × the python loop — so a pipeline slowdown fails the
+tier-1 workflow instead of hiding in an artifact. The threshold is far
+under the measured 1.9-2.1× so shared-runner noise doesn't flake.
+
+    PYTHONPATH=src:. python benchmarks/bench_cohort_scaling.py [--quick|--smoke]
 """
 from __future__ import annotations
 
@@ -42,6 +48,7 @@ from benchmarks.common import emit, fl_spec
 from repro.api import build_cohort, build_experiment
 
 COHORT = 8
+SMOKE_MIN_SPEEDUP = 0.8        # scanned/python rounds-per-sec floor (gate)
 
 
 def _workload(clients: int, rounds: int):
@@ -91,6 +98,10 @@ def bench_cohort(spec, rounds: int):
 def run(quick: bool = False, out: str | None = None):
     rounds = 8 if quick else 15
     sizes = [50] if quick else [50, 100]
+    return _run(rounds, sizes, quick, out)
+
+
+def _run(rounds, sizes, quick, out):
     configs = []
     for clients in sizes:
         spec = _workload(clients, rounds)
@@ -132,9 +143,31 @@ def run(quick: bool = False, out: str | None = None):
     return payload
 
 
+def smoke(out: str | None = None) -> bool:
+    """The per-PR CI gate: quick workload + regression check. Returns
+    True when the scanned pipeline still clears the speedup floor."""
+    payload = _run(rounds=8, sizes=[50], quick=True, out=out)
+    ok = True
+    for cfg in payload["configs"]:
+        ratio = cfg["speedup_scanned_vs_python"]
+        verdict = "ok" if ratio >= SMOKE_MIN_SPEEDUP else "REGRESSION"
+        print(f"smoke N{cfg['clients']}: scanned/python = {ratio:.2f}x "
+              f"(floor {SMOKE_MIN_SPEEDUP}x) ... {verdict}")
+        ok &= ratio >= SMOKE_MIN_SPEEDUP
+    print(json.dumps(payload["configs"], indent=1))
+    return ok
+
+
 if __name__ == "__main__":
+    import sys
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="quick run + scanned-vs-python regression gate "
+                         "(non-zero exit on regression; the tier-1 CI step)")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
+    if args.smoke:
+        sys.exit(0 if smoke(out=args.out) else 1)
     run(quick=args.quick, out=args.out)

@@ -7,23 +7,31 @@ Strategies resolve through per-stage registries (see ``repro.strategies``
 for the built-ins); experiments are declared as a frozen, JSON-serializable
 ``ExperimentSpec`` and materialized by ``build_experiment``.
 """
-from repro.api.registry import (AGGREGATORS, ALLOCATORS, COMPRESSORS,
-                                SELECTORS, Registry, Strategy, StrategyError,
-                                get_registry)
+from repro.api.registry import (AGGREGATORS, ALLOCATORS, CHANNELS,
+                                COMPRESSORS, SELECTORS, Registry, Strategy,
+                                StrategyError, get_registry,
+                                register_channel)
 from repro.api.protocols import (Allocation, Aggregator, Allocator,
-                                 Compressor, RoundState, SelectionContext,
-                                 Selector, TracedAllocator, TracedContext,
+                                 ChannelModel, Compressor, RoundState,
+                                 SelectionContext, Selector,
+                                 TracedAllocator, TracedContext,
                                  TracedSelector)
+from repro.api.scenario import (CellSpec, FleetSpec, build_fleet,
+                                multicell_fleet_spec)
 from repro.api.spec import SPEC_VERSION, ExperimentSpec
-from repro.api.build import build_cohort, build_experiment, fl_config_from_spec
+from repro.api.build import (build_cohort, build_experiment,
+                             fl_config_from_spec, fleet_for_cell)
 import repro.strategies  # noqa: F401  (register built-in strategies)
 
 __all__ = [
-    "AGGREGATORS", "ALLOCATORS", "COMPRESSORS", "SELECTORS",
+    "AGGREGATORS", "ALLOCATORS", "CHANNELS", "COMPRESSORS", "SELECTORS",
     "Registry", "Strategy", "StrategyError", "get_registry",
-    "Allocation", "Aggregator", "Allocator", "Compressor",
+    "register_channel",
+    "Allocation", "Aggregator", "Allocator", "ChannelModel", "Compressor",
     "RoundState", "SelectionContext", "Selector",
     "TracedAllocator", "TracedContext", "TracedSelector",
+    "CellSpec", "FleetSpec", "build_fleet", "multicell_fleet_spec",
     "SPEC_VERSION", "ExperimentSpec",
     "build_cohort", "build_experiment", "fl_config_from_spec",
+    "fleet_for_cell",
 ]

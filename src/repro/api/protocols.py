@@ -26,7 +26,7 @@ from typing import (TYPE_CHECKING, Any, Callable, Dict, NamedTuple, Optional,
 import numpy as np
 
 if TYPE_CHECKING:                      # import-cycle guard: api ↔ core
-    from repro.core.wireless import DeviceFleet
+    from repro.core.wireless import Fleet
 
 
 @dataclass
@@ -41,7 +41,7 @@ class SelectionContext:
     devices_per_round: int            # S
     selected_per_cluster: int         # s (Alg. 3/4)
     bandwidth_mhz: float              # B
-    fleet: "DeviceFleet"
+    fleet: "Fleet"
     clusters: Optional[Sequence[np.ndarray]]
     divergences: Callable[[], np.ndarray]
 
@@ -136,6 +136,34 @@ class TracedAllocator(Protocol):
 
     def allocate_traced(self, arr: Dict[str, Any], B: float,
                         mask: Any) -> Tuple[Any, Any, Any, Any]: ...
+
+
+@runtime_checkable
+class ChannelModel(Protocol):
+    """Pluggable physical channel (registry: ``CHANNELS`` /
+    ``@register_channel``).
+
+    Two hooks, two time scales:
+
+    * ``sample_gains(rng, d_km)`` — host-side large-scale fading at fleet
+      build time (path loss + shadowing from BS–device distance); consumed
+      by ``repro.api.scenario.build_fleet``.
+    * ``apply_traced(key, arr)`` — per-round small-scale fading INSIDE the
+      scanned round pipeline: transform the round's ``fleet_arrays`` dict
+      (e.g. redraw a Rayleigh block-fading multiplier on J). Pure jnp; the
+      engine splits ``key`` off the round PRNG stream only when
+      ``needs_rng`` — a model with ``needs_rng = False`` leaves the stream
+      (and the compiled program) untouched, bit-identical to no channel
+      hook at all.
+    """
+
+    traceable: bool
+    needs_rng: bool                   # split a per-round fading key?
+
+    def sample_gains(self, rng: np.random.Generator,
+                     d_km: np.ndarray) -> np.ndarray: ...
+
+    def apply_traced(self, key, arr: Dict[str, Any]) -> Dict[str, Any]: ...
 
 
 @runtime_checkable

@@ -161,8 +161,16 @@ SELECTORS = Registry("selector")
 ALLOCATORS = Registry("allocator")
 AGGREGATORS = Registry("aggregator")
 COMPRESSORS = Registry("compressor")
+CHANNELS = Registry("channel")
 
-_BY_KIND = {r.kind: r for r in (SELECTORS, ALLOCATORS, AGGREGATORS, COMPRESSORS)}
+_BY_KIND = {r.kind: r for r in (SELECTORS, ALLOCATORS, AGGREGATORS,
+                                COMPRESSORS, CHANNELS)}
+
+
+def register_channel(name: str):
+    """Register a :class:`~repro.api.protocols.ChannelModel` under ``name``
+    (sugar for ``CHANNELS.register`` — the scenario-API entry point)."""
+    return CHANNELS.register(name)
 
 
 def get_registry(kind: str) -> Registry:

@@ -1,0 +1,352 @@
+"""Declarative physical-layer scenarios — the paper's §III-B system model
+(eqs (5)–(11)) as a frozen, JSON-round-trippable spec instead of ad-hoc
+host-side sampling.
+
+    FleetSpec                       # topology: cells × device distributions
+      └── CellSpec × C              # per-cell geometry, counts, power/energy
+    ChannelModel registry           # @register_channel: static | rayleigh-
+                                    # block | multicell-interference | yours
+    build_fleet(spec, seed)         # → pytree-native Fleet (traces through
+                                    #   engine.run_rounds / CohortRunner)
+
+A ``FleetSpec`` is a field of ``ExperimentSpec`` — the physical scenario
+round-trips through the same JSON artifact as the strategies, and the CLI
+grows ``--fleet-spec`` / ``--cells`` / ``--channel``:
+
+    spec = ExperimentSpec(clients=40,
+                          fleet=FleetSpec(cells=(CellSpec(), CellSpec()),
+                                          channel="multicell-interference"))
+    build_cohort(spec).run()        # (seeds × cells) lanes, ONE lax.scan
+
+Single-cell ``FleetSpec()`` with the ``static`` channel reproduces
+:func:`repro.core.wireless.sample_fleet` bit-for-bit (pinned by
+``tests/test_scenario.py``). Units: ``docs/UNITS.md``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.registry import CHANNELS, Strategy, register_channel
+from repro.core.wireless import (CELL_RADIUS_KM, DEFAULT_ALPHA, DEFAULT_B_MHZ,
+                                 DEFAULT_CYCLES_RANGE, DEFAULT_E_CONS_RANGE,
+                                 DEFAULT_F_MAX_GHZ, DEFAULT_F_MIN_GHZ,
+                                 DEFAULT_LOCAL_ITERS, DEFAULT_P_DBM,
+                                 DEFAULT_SAMPLES_RANGE, DEFAULT_Z_MBIT,
+                                 NOISE_DBM_PER_HZ, PATHLOSS_DB,
+                                 SHADOW_STD_DB, Fleet, dbm_to_watt)
+
+FLEET_SPEC_VERSION = 1
+
+# decorrelates per-cell streams (fleet draws here, data partitions in
+# api.build) while cell 0 keeps the exact single-cell stream; any odd
+# prime far above realistic cohort sizes works — consecutive cohort seeds
+# must never land on another cell's stream (seed + 1 == seed' + stride)
+CELL_SEED_STRIDE = 7919
+
+__all__ = ["CellSpec", "FleetSpec", "build_fleet", "CHANNELS",
+           "register_channel", "StaticChannel", "RayleighBlockChannel",
+           "MulticellInterferenceChannel"]
+
+
+# ---------------------------------------------------------------------------
+# channel models
+# ---------------------------------------------------------------------------
+
+
+def _largescale_gains(rng, d_km, shadow_db):
+    """3GPP path loss + lognormal shadowing — THE large-scale draw every
+    built-in shares, so the serving-link RNG stream is identical across
+    channel models (the `static` bit-identity pin relies on this)."""
+    pl_db = PATHLOSS_DB(d_km) + rng.normal(0.0, shadow_db, np.shape(d_km))
+    return 10.0 ** (-pl_db / 10.0)
+
+
+@register_channel("static")
+@dataclass(frozen=True)
+class StaticChannel(Strategy):
+    """The paper's §VI channel: 3GPP path loss + lognormal shadowing drawn
+    once at fleet build time, constant over rounds. ``shadow_db = 0``
+    disables shadowing (pure path loss)."""
+
+    shadow_db: float = SHADOW_STD_DB
+
+    traceable = True
+    needs_rng = False
+
+    def sample_gains(self, rng, d_km):
+        return _largescale_gains(rng, d_km, self.shadow_db)
+
+    def apply_traced(self, key, arr):
+        return arr
+
+
+@register_channel("rayleigh-block")
+@dataclass(frozen=True)
+class RayleighBlockChannel(Strategy):
+    """Block Rayleigh fading: the large-scale gain of :class:`StaticChannel`
+    times a unit-mean exponential power coefficient |g|² redrawn EVERY
+    round inside the scanned program — no host round-trips. ``floor``
+    clamps deep fades so the SAO bisection brackets stay finite.
+    Spelled ``rayleigh-block:<floor>`` in compact form."""
+
+    floor: float = 1e-3
+    shadow_db: float = SHADOW_STD_DB
+
+    traceable = True
+    needs_rng = True
+
+    def sample_gains(self, rng, d_km):
+        return _largescale_gains(rng, d_km, self.shadow_db)
+
+    def apply_traced(self, key, arr):
+        fade = jax.random.exponential(key, arr["J"].shape, arr["J"].dtype)
+        out = dict(arr)
+        out["J"] = arr["J"] * jnp.maximum(fade, self.floor)
+        return out
+
+
+@register_channel("multicell-interference")
+@dataclass(frozen=True)
+class MulticellInterferenceChannel(Strategy):
+    """Multi-cell uplink: per-cell path loss + shadowing to the serving BS
+    (as ``static``), plus cross-cell interference at fleet build time —
+    every cell reuses the full band B, so a BS hears the other cells'
+    devices. The interference enters the FDMA rate (7) through the
+    ``inr = I/N0`` fleet term (``J_eff = J/(1+inr)``,
+    ``repro.core.wireless.effective_arrays``).
+
+    ``load`` is the activity factor of interfering cells: the expected
+    interference PSD at BS c is
+    ``I_c = load · Σ_{m≠c} mean_{k∈m}(h_{k→c}·p_k) / (B·1e6)`` [W/Hz]
+    (cross links use deterministic path loss — no extra shadowing draws, so
+    the serving-link RNG stream matches ``static`` exactly).
+    Spelled ``multicell-interference:<load>`` in compact form."""
+
+    load: float = 1.0
+    shadow_db: float = SHADOW_STD_DB
+
+    traceable = True
+    needs_rng = False
+
+    def sample_gains(self, rng, d_km):
+        return _largescale_gains(rng, d_km, self.shadow_db)
+
+    def apply_traced(self, key, arr):
+        return arr
+
+    def cross_cell_inr(self, pos_km, p_watt, cell_ids, centers_km,
+                       bandwidth_mhz: float, N0: float) -> np.ndarray:
+        """Per-device ``I/N0`` at each device's serving BS (all devices of
+        one cell share it)."""
+        cell_ids = np.asarray(cell_ids)
+        num_cells = len(centers_km)
+        inr = np.zeros(len(cell_ids))
+        if num_cells < 2 or self.load <= 0.0:
+            return inr
+        for c in range(num_cells):
+            psd = 0.0
+            for m in range(num_cells):
+                if m == c:
+                    continue
+                k = np.flatnonzero(cell_ids == m)
+                d = np.hypot(pos_km[k, 0] - centers_km[c][0],
+                             pos_km[k, 1] - centers_km[c][1])
+                g = 10.0 ** (-PATHLOSS_DB(d) / 10.0)
+                psd += float(np.mean(g * p_watt[k])) / (bandwidth_mhz * 1e6)
+            inr[cell_ids == c] = self.load * psd / N0
+        return inr
+
+
+# ---------------------------------------------------------------------------
+# fleet specification
+# ---------------------------------------------------------------------------
+
+
+def _pair(x, name: str) -> Tuple[float, float]:
+    try:
+        lo, hi = x
+    except (TypeError, ValueError):
+        raise ValueError(f"{name} must be a (lo, hi) pair; got {x!r}") from None
+    return (float(lo), float(hi))
+
+
+@dataclass(frozen=True)
+class CellSpec:
+    """One cell's geometry and device-population distributions (§VI setup;
+    every default reproduces :func:`repro.core.wireless.sample_fleet`).
+
+    ``devices = None`` inherits ``ExperimentSpec.clients``;
+    ``center_km = None`` takes the cell's slot in the ``FleetSpec`` auto
+    layout (a line of cells ``isd_km`` apart).
+    """
+
+    devices: Optional[int] = None
+    center_km: Optional[Tuple[float, float]] = None
+    radius_km: float = CELL_RADIUS_KM
+    p_dbm: float = DEFAULT_P_DBM
+    z_mbit: float = DEFAULT_Z_MBIT
+    e_cons_range: Tuple[float, float] = DEFAULT_E_CONS_RANGE
+    cycles_range: Tuple[float, float] = DEFAULT_CYCLES_RANGE
+    samples_range: Tuple[int, int] = DEFAULT_SAMPLES_RANGE
+    f_min_ghz: float = DEFAULT_F_MIN_GHZ
+    f_max_ghz: float = DEFAULT_F_MAX_GHZ
+    alpha: float = DEFAULT_ALPHA
+
+    def __post_init__(self):
+        for name in ("e_cons_range", "cycles_range"):
+            object.__setattr__(self, name, _pair(getattr(self, name), name))
+        lo, hi = _pair(self.samples_range, "samples_range")
+        object.__setattr__(self, "samples_range", (int(lo), int(hi)))
+        if self.center_km is not None:
+            object.__setattr__(self, "center_km",
+                               _pair(self.center_km, "center_km"))
+
+    def resolved_devices(self, default: Optional[int]) -> int:
+        n = self.devices if self.devices is not None else default
+        if n is None or n <= 0:
+            raise ValueError(
+                "CellSpec.devices is unset and no default device count was "
+                "given (pass clients= to build_fleet / set it on the "
+                "ExperimentSpec)")
+        return int(n)
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """The whole physical scenario: cells, channel model, shared constants.
+
+    Frozen and JSON-round-trippable, like ``ExperimentSpec`` (of which it
+    is the ``fleet`` field). ``channel`` is a registry reference —
+    ``"static"``, ``"rayleigh-block:0.01"``,
+    ``{"name": "multicell-interference", "params": {"load": 0.5}}``, or any
+    ``@register_channel`` model.
+    """
+
+    cells: Tuple[CellSpec, ...] = (CellSpec(),)
+    channel: Union[str, Dict[str, Any]] = "static"
+    isd_km: float = 2.0 * CELL_RADIUS_KM        # auto-layout inter-site dist
+    local_iters: int = DEFAULT_LOCAL_ITERS      # the fleet's L (eq. 16)
+    noise_dbm_per_hz: float = NOISE_DBM_PER_HZ
+    version: int = FLEET_SPEC_VERSION
+
+    def __post_init__(self):
+        cells = tuple(c if isinstance(c, CellSpec) else CellSpec(**c)
+                      for c in self.cells)
+        if not cells:
+            raise ValueError("FleetSpec needs at least one cell")
+        object.__setattr__(self, "cells", cells)
+        object.__setattr__(self, "channel",
+                           CHANNELS.canonical(self.channel))
+
+    @property
+    def num_cells(self) -> int:
+        return len(self.cells)
+
+    def centers_km(self):
+        """Resolved BS positions: explicit ``center_km`` wins, otherwise a
+        line along x with ``isd_km`` spacing."""
+        return [c.center_km if c.center_km is not None
+                else (i * self.isd_km, 0.0)
+                for i, c in enumerate(self.cells)]
+
+    def replace(self, **kw) -> "FleetSpec":
+        return dataclasses.replace(self, **kw)
+
+    # ---- serialization (mirrors ExperimentSpec) ----------------------
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    def to_json(self, indent: Optional[int] = None) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "FleetSpec":
+        d = dict(d)
+        version = d.pop("version", FLEET_SPEC_VERSION)
+        if version > FLEET_SPEC_VERSION:
+            raise ValueError(f"fleet spec version {version} is newer than "
+                             f"supported {FLEET_SPEC_VERSION}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown FleetSpec fields: {sorted(unknown)}")
+        return cls(version=version, **d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FleetSpec":
+        return cls.from_dict(json.loads(s))
+
+
+def multicell_fleet_spec(num_cells: int, **kw) -> FleetSpec:
+    """Convenience: ``num_cells`` default cells on the auto line layout,
+    with the interference channel once there is more than one cell (the
+    ``fl_sim --cells N`` shorthand)."""
+    channel = kw.pop("channel",
+                     "multicell-interference" if num_cells > 1 else "static")
+    return FleetSpec(cells=tuple(CellSpec() for _ in range(num_cells)),
+                     channel=channel, **kw)
+
+
+# ---------------------------------------------------------------------------
+# build_fleet: FleetSpec → pytree-native Fleet
+# ---------------------------------------------------------------------------
+
+
+def build_fleet(spec: FleetSpec, seed: int = 0, *,
+                clients: Optional[int] = None,
+                bandwidth_mhz: float = DEFAULT_B_MHZ) -> Fleet:
+    """Materialize a :class:`~repro.core.wireless.Fleet` from ``spec``.
+
+    Cell ``i`` draws from ``np.random.default_rng(seed + i·stride)`` in
+    exactly :func:`sample_fleet`'s sequence (radius → shadowing → cycles →
+    samples → energy budgets), so the default single-cell spec is
+    bit-identical to ``sample_fleet(clients, seed)`` and consecutive
+    cohort seeds never alias another cell's stream (``CELL_SEED_STRIDE``);
+    multi-cell builds additionally draw a device angle (for cross-cell
+    geometry) right after the radius. ``bandwidth_mhz`` is the per-cell
+    reuse band the interference PSD normalizes over.
+    """
+    channel = CHANNELS.resolve(spec.channel)
+    centers = spec.centers_km()
+    multi = spec.num_cells > 1
+    parts = []
+    for i, cell in enumerate(spec.cells):
+        n = cell.resolved_devices(clients)
+        rng = np.random.default_rng(seed + i * CELL_SEED_STRIDE)
+        r_km = cell.radius_km * np.sqrt(rng.uniform(0.01, 1.0, n))
+        theta = rng.uniform(0.0, 2.0 * math.pi, n) if multi \
+            else np.zeros(n)
+        h = channel.sample_gains(rng, r_km)
+        parts.append(dict(
+            h=h,
+            p=np.full(n, dbm_to_watt(cell.p_dbm)),
+            z=np.full(n, cell.z_mbit),
+            C=rng.uniform(*cell.cycles_range, n),
+            D=rng.integers(cell.samples_range[0], cell.samples_range[1] + 1,
+                           n).astype(np.float64),
+            alpha=np.full(n, cell.alpha),
+            f_min=np.full(n, cell.f_min_ghz),
+            f_max=np.full(n, cell.f_max_ghz),
+            e_cons=rng.uniform(*cell.e_cons_range, n),
+            cell=np.full(n, i, np.int32),
+            pos=np.stack([centers[i][0] + r_km * np.cos(theta),
+                          centers[i][1] + r_km * np.sin(theta)], axis=1),
+        ))
+
+    cat = {k: np.concatenate([p[k] for p in parts])
+           for k in parts[0]}
+    pos = cat.pop("pos")
+    N0 = dbm_to_watt(spec.noise_dbm_per_hz)
+    inr = np.zeros(len(cat["h"]))
+    if hasattr(channel, "cross_cell_inr"):
+        inr = channel.cross_cell_inr(pos, cat["p"], cat["cell"], centers,
+                                     bandwidth_mhz, N0)
+    return Fleet(L=spec.local_iters, N0=N0, inr=inr, **cat)

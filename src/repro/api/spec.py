@@ -19,6 +19,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Union
 
 from repro.api.registry import get_registry
+from repro.api.scenario import FleetSpec
 
 SPEC_VERSION = 1
 
@@ -46,8 +47,12 @@ class ExperimentSpec:
     model: str = "auto"                    # "auto" → paper CNN for dataset;
                                            # else an arch id (sharded fl_round)
 
-    # ---- wireless fleet ----------------------------------------------
-    bandwidth_mhz: float = 20.0            # B
+    # ---- wireless fleet / physical scenario --------------------------
+    bandwidth_mhz: float = 20.0            # B (per cell — reused across cells)
+    fleet: Optional[Any] = None            # FleetSpec (or its dict form);
+                                           # None → the paper's §VI single
+                                           # cell via sample_fleet (legacy,
+                                           # bit-identical to FleetSpec())
 
     # ---- FL hyper-parameters (FLConfig) ------------------------------
     rounds: int = 30
@@ -81,6 +86,8 @@ class ExperimentSpec:
     version: int = SPEC_VERSION
 
     def __post_init__(self):
+        if self.fleet is not None and not isinstance(self.fleet, FleetSpec):
+            object.__setattr__(self, "fleet", FleetSpec.from_dict(self.fleet))
         object.__setattr__(self, "selection",
                            _canonical("selector", self.selection))
         object.__setattr__(self, "allocator",
@@ -107,6 +114,16 @@ class ExperimentSpec:
     @property
     def resolved_fleet_seed(self) -> int:
         return self.seed if self.fleet_seed is None else self.fleet_seed
+
+    @property
+    def resolved_fleet_spec(self) -> FleetSpec:
+        """The scenario, with ``None`` resolved to the paper's default
+        single static cell."""
+        return self.fleet if self.fleet is not None else FleetSpec()
+
+    @property
+    def num_cells(self) -> int:
+        return 1 if self.fleet is None else self.fleet.num_cells
 
     def replace(self, **kw) -> "ExperimentSpec":
         return dataclasses.replace(self, **kw)

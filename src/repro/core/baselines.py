@@ -8,6 +8,13 @@ band budget and the frequency box, WITHOUT per-device energy constraints.
 Implemented as an exact-ish convex solve: outer grid/golden search on T,
 inner bandwidth waterfilling (equal marginal energy-per-MHz via a dual
 bisection, per-device slope found by autodiff + bisection).
+
+Both accept the participation ``mask`` of the traced round pipeline
+(fixed-size padded selections) and the ``inr`` interference term of
+multi-cell fleets, and the §VI-A λ tuning ("λ makes the worst device just
+meet its energy budget") is ported into the traced program as
+:func:`tune_fedl_lambda` — a ``lax.while_loop`` bisection, so FEDL baseline
+sweeps run device-resident on the cohort engine.
 """
 from __future__ import annotations
 
@@ -19,7 +26,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.sao import _Q, SAOSolution
-from repro.core.wireless import LN2
+from repro.core.wireless import (LN2, effective_arrays, masked_max,
+                                 masked_sum)
 
 
 class AllocResult(NamedTuple):
@@ -39,6 +47,7 @@ def equal_bandwidth(arr: Dict[str, jnp.ndarray], B: float,
     masked count only, and padded lanes are excluded from the reductions
     and zeroed in the returned ``b``/``f``/``e``.
     """
+    arr = effective_arrays(arr)
     if mask is None:
         n = arr["J"].shape[0]
         b = jnp.full((n,), B / n, jnp.float32)
@@ -94,19 +103,23 @@ def _b_required(T, arr):
     return jnp.where(feasible, 0.5 * (lo + hi), jnp.inf)
 
 
-def _waterfill_b(T, arr, B, n_iters: int = 40):
+def _waterfill_b(T, arr, B, n_iters: int = 40, mask=None):
     """Minimize Σ_n e_n(b_n; T) s.t. Σ b_n = B, b_n ≥ b_req_n.
 
     Equal-marginal condition: de_n/db_n = −μ for unconstrained devices.
     de/db is monotone ↑ (convex energy in b), so per-device bisection on b
-    nested in a dual bisection on μ.
+    nested in a dual bisection on μ. Masked (padding) lanes are pinned to
+    ``b = 0`` and excluded from the band sum.
     """
     b_req = _b_required(T, arr)
+    if mask is not None:
+        b_req = jnp.where(mask, b_req, 0.0)
     # per-device slope de/db via autodiff of the summed energy (elementwise)
     energy_fn = lambda b: _device_energy(b, T, arr)[0]
     slope_fn = jax.grad(lambda b: jnp.sum(energy_fn(b)))      # elementwise slope
 
-    b_hi_cap = jnp.full_like(b_req, B)
+    b_hi_cap = (jnp.full_like(b_req, B) if mask is None
+                else jnp.where(mask, B, 0.0))
 
     def b_of_mu(mu):
         lo = b_req
@@ -135,6 +148,8 @@ def _waterfill_b(T, arr, B, n_iters: int = 40):
     # rescale any residual mismatch onto unconstrained devices
     excess = B - jnp.sum(b)
     free = b > b_req + 1e-9
+    if mask is not None:
+        free = free & mask
     b = b + jnp.where(free, excess / jnp.maximum(jnp.sum(free), 1), 0.0)
     return jnp.maximum(b, b_req)
 
@@ -143,44 +158,87 @@ def arr_ith(arr, i):  # helper retained for API completeness
     return {k: v[i] for k, v in arr.items()}
 
 
-@functools.partial(jax.jit, static_argnames=("n_grid",))
-def fedl_lambda(arr: Dict[str, jnp.ndarray], B: float, lam: float,
-                n_grid: int = 120) -> AllocResult:
-    """Baseline 2: grid-refined solve of min_{T,b,f} Σe + λT."""
+def _fedl_solve(arr, B, lam, n_grid: int, mask):
+    """The (unjitted) FEDL core over an already-interference-folded ``arr``;
+    shared by :func:`fedl_lambda` and the traced λ tuner."""
     B = jnp.asarray(B, jnp.float32)
-    T_min = jnp.max(LN2 * arr["z"] / arr["J"] + arr["U"] / arr["f_max"]) * 1.02
-    T_max = jnp.max(arr["z"] / _Q(B / arr["J"].shape[0] * 0.05, arr["J"])
-                    + arr["U"] / arr["f_min"])
+    n = (arr["J"].shape[0] if mask is None
+         else jnp.maximum(jnp.sum(mask), 1))      # real lanes only — the
+    # bracket must not depend on how much padding rode along
+    T_min = masked_max(LN2 * arr["z"] / arr["J"]
+                       + arr["U"] / arr["f_max"], mask) * 1.02
+    T_max = masked_max(arr["z"] / _Q(B / n * 0.05, arr["J"])
+                       + arr["U"] / arr["f_min"], mask)
     Ts = jnp.exp(jnp.linspace(jnp.log(T_min), jnp.log(T_max), n_grid))
 
     def eval_T(T):
-        b = _waterfill_b(T, arr, B)
+        b = _waterfill_b(T, arr, B, mask=mask)
         e, f = _device_energy(b, T, arr)
-        infeasible = jnp.sum(_b_required(T, arr)) > B
-        obj = jnp.sum(e) + lam * T
+        infeasible = masked_sum(_b_required(T, arr), mask) > B
+        obj = masked_sum(e, mask) + lam * T
         return jnp.where(infeasible, jnp.inf, obj), (b, f, e)
 
     objs, (bs, fs, es) = lax.map(eval_T, Ts)
     i = jnp.argmin(objs)
     b, f, e = bs[i], fs[i], es[i]
-    t = arr["z"] / _Q(b, arr["J"]) + arr["U"] / f
+    b_q = b if mask is None else jnp.where(mask, b, 1.0)
+    t = arr["z"] / _Q(b_q, arr["J"]) + arr["U"] / f
+    if mask is not None:
+        t = jnp.where(mask, t, -jnp.inf)
+        b, f, e = (jnp.where(mask, v, 0.0) for v in (b, f, e))
     return AllocResult(T=jnp.max(t), b=b, f=f, e=e,
                        feasible=e <= arr["e_cons"] + 1e-6)
 
 
+@functools.partial(jax.jit, static_argnames=("n_grid",))
+def fedl_lambda(arr: Dict[str, jnp.ndarray], B: float, lam: float,
+                n_grid: int = 120, *, mask=None) -> AllocResult:
+    """Baseline 2: grid-refined solve of min_{T,b,f} Σe + λT.
+
+    ``mask`` marks the real lanes of a fixed-size padded selection (traced
+    round pipeline); an ``"inr"`` interference entry in ``arr`` folds into
+    J at entry.
+    """
+    return _fedl_solve(effective_arrays(arr), B, lam, n_grid, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "n_grid"))
+def tune_fedl_lambda(arr: Dict[str, jnp.ndarray], B: float, *, mask=None,
+                     lam_lo: float = 1e-3, lam_hi: float = 1e4,
+                     iters: int = 24, n_grid: int = 120) -> jnp.ndarray:
+    """§VI-A λ tuning as a traced ``lax.while_loop`` bisection.
+
+    'λ is tuned to make the device with the highest energy cost just meet
+    the energy constraint': larger λ weights delay more → more energy, so
+    bisect λ (geometrically) down until max(e − e_cons) ≤ 0 over the real
+    lanes. Fully traced — FEDL baseline sweeps run inside the scanned
+    round pipeline / cohort engine instead of a host-driven loop.
+    Returns the largest feasible λ found (a jnp scalar).
+    """
+    arr = effective_arrays(arr)
+
+    def cond(carry):
+        i, lo, hi = carry
+        return (i < iters) & (hi > lo * (1.0 + 1e-3))
+
+    def body(carry):
+        i, lo, hi = carry
+        mid = jnp.sqrt(lo * hi)
+        res = _fedl_solve(arr, B, mid, n_grid, mask)
+        worst = masked_max(res.e - arr["e_cons"], mask)
+        viol = worst > 0.0
+        return (i + 1, jnp.where(viol, lo, mid), jnp.where(viol, mid, hi))
+
+    _, lo, _ = lax.while_loop(
+        cond, body, (0, jnp.asarray(lam_lo, jnp.float32),
+                     jnp.asarray(lam_hi, jnp.float32)))
+    return lo
+
+
 def tune_fedl_lambda_for_constraints(arr, B, *, lam_lo=1e-3, lam_hi=1e4,
                                      iters=24):
-    """§VI-A protocol: 'λ is tuned to make the device with the highest energy
-    cost just meet the energy constraint'. Larger λ weights delay more →
-    more energy → bisect λ down until max(e − e_cons) ≤ 0."""
-    import numpy as np
-    lo, hi = lam_lo, lam_hi
-    for _ in range(iters):
-        mid = float(np.sqrt(lo * hi))
-        res = fedl_lambda(arr, B, mid)
-        worst = float(jnp.max(res.e - arr["e_cons"]))
-        if worst > 0:
-            hi = mid
-        else:
-            lo = mid
-    return lo
+    """Host-facing wrapper over :func:`tune_fedl_lambda` (kept for the
+    figure benchmarks; the value is identical to the old host bisection up
+    to the while_loop's early-exit tolerance)."""
+    return float(tune_fedl_lambda(arr, B, lam_lo=lam_lo, lam_hi=lam_hi,
+                                  iters=iters))

@@ -1,5 +1,5 @@
-"""CohortRunner — vmapped seed cohorts over the device-resident round
-pipeline.
+"""CohortRunner — vmapped (seeds × cells) cohorts over the device-resident
+round pipeline.
 
 The paper's headline figures are all sweeps (many seeds × selectors × σ);
 with the whole experiment traced (``engine.run_rounds``), a cohort of
@@ -9,10 +9,16 @@ maps the scanned multi-round run over it, and ``jax.sharding`` splits that
 axis across the local devices. One dispatch, one device→host transfer for
 the entire cohort history.
 
+Multi-cell ``FleetSpec`` scenarios stack the cells axis next to the cohort
+axis: lane ``s·C + c`` is (seed ``s``, cell ``c``) — each cell an
+independent FL system whose fleet carries the cross-cell interference term
+— so an interference sweep is the SAME single scanned program, just vmapped
+over more lanes.
+
     runner = CohortRunner(ExperimentSpec(..., cohort=8))
-    ch = runner.run()                  # 8 seeds, one XLA program
-    ch.accuracy                        # [8, rounds+1]
-    ch.history(3)                      # seed 3's FLHistory view
+    ch = runner.run()                  # 8 seeds (× cells), one XLA program
+    ch.accuracy                        # [8·C, rounds+1]
+    ch.history(3)                      # lane 3's FLHistory view
 """
 from __future__ import annotations
 
@@ -59,8 +65,10 @@ def _shard_cohort(tree, mesh):
 
 @dataclass
 class CohortHistory:
-    """Stacked round histories for a seed cohort (leading axis = seed)."""
-    seeds: List[int]
+    """Stacked round histories for a (seeds × cells) cohort; the leading
+    axis is the lane ``seed_index · cells + cell`` (``cells == 1`` keeps
+    the old seed-only layout)."""
+    seeds: List[int]                  # per-lane seed
     accuracy: np.ndarray              # [B, rounds(+1)]
     T_k: np.ndarray                   # [B, rounds(+1)]
     E_k: np.ndarray                   # [B, rounds(+1)]
@@ -68,6 +76,12 @@ class CohortHistory:
     mask: np.ndarray                  # [B, rounds, S_pad] participation
     with_init: bool
     num_devices: int
+    cells: int = 1                    # cells per seed (lane = s·cells + c)
+
+    @property
+    def lane_cells(self) -> List[int]:
+        """Per-lane cell index (parallel to ``seeds``)."""
+        return [i % self.cells for i in range(len(self.seeds))]
 
     def __len__(self) -> int:
         return len(self.seeds)
@@ -112,10 +126,20 @@ class CohortRunner:
         self.experiments: List[FLExperiment] = []
 
     # ------------------------------------------------------------------
+    @property
+    def num_cells(self) -> int:
+        return getattr(self.spec, "num_cells", 1)
+
     def _build(self, seeds: Sequence[int]) -> List[FLExperiment]:
         from repro.api.build import build_experiment
-        return [build_experiment(self.spec.replace(seed=int(s)))
-                for s in seeds]
+        exps = [build_experiment(self.spec.replace(seed=int(s)), cell=c)
+                for s in seeds for c in range(self.num_cells)]
+        counts = {e.fed.num_clients for e in exps}
+        if len(counts) > 1:
+            raise ValueError(
+                "CohortRunner stacks (seed, cell) lanes into one vmapped "
+                f"program; all cells need equal device counts, got {counts}")
+        return exps
 
     def run(self, seeds: Optional[Sequence[int]] = None,
             rounds: Optional[int] = None,
@@ -128,8 +152,10 @@ class CohortRunner:
                      for i in range(max(int(getattr(self.spec, "cohort", 1)),
                                         1))]
         seeds = [int(s) for s in seeds]
+        cells = self.num_cells
+        lane_seeds = [s for s in seeds for _ in range(cells)]
         rounds = rounds or self.spec.rounds
-        if reuse_experiments and len(self.experiments) == len(seeds):
+        if reuse_experiments and len(self.experiments) == len(lane_seeds):
             exps = self.experiments
         else:
             exps = self.experiments = self._build(seeds)
@@ -142,8 +168,8 @@ class CohortRunner:
                 f"aggregator={e0.aggregator.registry_name!r}, "
                 f"compressor={e0.compressor.registry_name!r}")
 
-        # per-seed pytrees, stacked on the cohort axis and device-sharded
-        B = len(seeds)
+        # per-lane pytrees, stacked on the cohort axis and device-sharded
+        B = len(lane_seeds)
         mesh = cohort_mesh(B)
         state = _shard_cohort(_tree_stack([e.traced_state() for e in exps]),
                               mesh)
@@ -169,19 +195,21 @@ class CohortRunner:
                         compressor=e0.compressor, tctx=e0.traced_context(),
                         feature_layer=e0.fl.feature_layer, rounds=rounds,
                         with_init=True, cohort=True,
-                        test_shared=test_shared, mesh=mesh)
+                        test_shared=test_shared, mesh=mesh,
+                        channel=e0.channel)
         res: TracedRunResult = fn(state, images, labels, sizes, arr,
                                   test_images, test_labels)
 
-        # sync each seed's final state back into its host experiment
+        # sync each lane's final state back into its host experiment
         for i, e in enumerate(exps):
             e.load_traced_state(jax.tree_util.tree_map(lambda x, i=i: x[i],
                                                        res.state))
-        return self._history(seeds, res, e0.fed.num_clients)
+        return self._history(lane_seeds, res, e0.fed.num_clients,
+                             cells=cells)
 
     @staticmethod
     def _history(seeds, res: TracedRunResult,
-                 num_devices: int) -> CohortHistory:
+                 num_devices: int, cells: int = 1) -> CohortHistory:
         accs, Ts, Es, sel, msk = (np.asarray(x) for x in (
             res.rounds.accuracy, res.rounds.T, res.rounds.E,
             res.rounds.selected, res.rounds.mask))
@@ -193,4 +221,4 @@ class CohortRunner:
             T_k=np.concatenate([T0, Ts], axis=1),
             E_k=np.concatenate([E0, Es], axis=1),
             selected=sel, mask=msk, with_init=True,
-            num_devices=num_devices)
+            num_devices=num_devices, cells=cells)

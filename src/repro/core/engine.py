@@ -170,14 +170,20 @@ class TracedRunResult(NamedTuple):
 @functools.lru_cache(maxsize=32)
 def _traced_round_program(cfg: EngineConfig, selector, allocator,
                           agg_name: str, agg_params: tuple, compressor,
-                          tctx: TracedContext, feature_layer: str):
+                          tctx: TracedContext, feature_layer: str,
+                          channel=None):
     """The pure (unjitted) traced experiment fn for one strategy bundle.
 
     All arguments are hashable trace-time constants: ``selector`` /
-    ``allocator`` / ``compressor`` are frozen strategy dataclasses and the
-    (stateful, unhashable) aggregator travels as its registry spec. The
-    cache makes sweeps over seeds/σ share one Python closure → one XLA
-    program per (rounds, with_init, cohort) variant.
+    ``allocator`` / ``compressor`` / ``channel`` are frozen strategy
+    dataclasses and the (stateful, unhashable) aggregator travels as its
+    registry spec. The cache makes sweeps over seeds/σ share one Python
+    closure → one XLA program per (rounds, with_init, cohort) variant.
+
+    ``channel`` (a registered ``ChannelModel``) redraws per-round fading
+    INSIDE the scan via ``apply_traced``; a model with ``needs_rng=False``
+    (``static``, ``multicell-interference``) leaves both the PRNG stream
+    and the compiled program untouched.
     """
     from repro.api.registry import AGGREGATORS
     from repro.core.clustering import extract_features, kmeans_fit
@@ -194,6 +200,14 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
             cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size)
     vmapped_update = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
     N, B = tctx.num_devices, tctx.bandwidth_mhz
+    channel_rng = channel is not None and getattr(channel, "needs_rng", False)
+
+    def draw_channel(state, arr):
+        """Per-round fading draw (one key split, only for rng channels)."""
+        if not channel_rng:
+            return state, arr
+        key, k_ch = jax.random.split(state.key)
+        return state._replace(key=key), channel.apply_traced(k_ch, arr)
 
     def train_aggregate(state, idx, mask, images, labels, sizes):
         """Local training of ``idx`` + store + aggregate (masked weights).
@@ -231,12 +245,16 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         state = state._replace(key=key, labels=k_labels.astype(jnp.int32))
         acc0, _ = _eval_fn(state.params, test_images, test_labels,
                            cnn_cfg=cfg.cnn_cfg)
+        state, arr = draw_channel(state, arr)
         T0, E0, _, _ = allocator.allocate_traced(arr, B, None)
         return state, (acc0, T0, E0)
 
     def round_step(state, images, labels, sizes, arr, test_images,
                    test_labels):
-        """One full FL round: select → allocate → train → aggregate → eval."""
+        """One full FL round: (fade →) select → allocate → train →
+        aggregate → eval. The fading draw precedes selection so
+        channel-aware policies (icas, rra) see the round's actual gains."""
+        state, arr = draw_channel(state, arr)
         if selector.needs_divergence:
             div = weight_divergence(state.client_params, state.params)
         else:
@@ -292,7 +310,7 @@ def aggregator_cache_key(aggregator) -> tuple:
 def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
                compressor, tctx: TracedContext, feature_layer: str,
                rounds: int, with_init: bool, cohort: bool = False,
-               test_shared: bool = True, mesh=None):
+               test_shared: bool = True, mesh=None, channel=None):
     """The compiled multi-round experiment fn for one strategy bundle.
 
     Returns a jitted callable
@@ -315,13 +333,13 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
                 else tuple(d.id for d in mesh.devices.flat))
     key = (cfg, selector, allocator, aggregator_cache_key(aggregator),
            compressor, tctx, feature_layer, rounds, with_init, cohort,
-           test_shared, mesh_key)
+           test_shared, mesh_key, channel)
     fn = _RUN_FN_CACHE.get(key)
     if fn is None:
         prog = _traced_round_program(
             cfg, selector, allocator, aggregator.registry_name,
             tuple(sorted(aggregator.params().items())), compressor, tctx,
-            feature_layer)
+            feature_layer, channel)
         core = functools.partial(prog, rounds=rounds, with_init=with_init)
         if cohort:
             test_ax = None if test_shared else 0

@@ -28,7 +28,9 @@ import numpy as np
 
 from repro.api.protocols import (Allocation, RoundState, SelectionContext,
                                  TracedContext)
-from repro.api.registry import AGGREGATORS, ALLOCATORS, COMPRESSORS, SELECTORS
+from repro.api.registry import (AGGREGATORS, ALLOCATORS, CHANNELS,
+                                COMPRESSORS, SELECTORS)
+import repro.api.scenario  # noqa: F401  (populate the channel registry)
 import repro.strategies  # noqa: F401  (populate the registries)
 from repro.configs.base import FLConfig
 from repro.configs.paper_cnn import CNNConfig
@@ -37,7 +39,7 @@ from repro.core.clustering import (kmeans_fit, extract_features,
 from repro.core.divergence import weight_divergence
 from repro.core.engine import (EngineConfig, RoundEngine, RoundResult,
                                TracedRunResult, make_local_update, run_rounds)
-from repro.core.wireless import DeviceFleet, fleet_arrays
+from repro.core.wireless import Fleet, fleet_arrays
 from repro.data.partition import FederatedData
 from repro.utils.trees import tree_num_params
 
@@ -82,11 +84,11 @@ class FLExperiment:
 
     def __init__(self, cnn_cfg: CNNConfig, fed: FederatedData,
                  test_images: np.ndarray, test_labels: np.ndarray,
-                 fleet: DeviceFleet, fl: FLConfig, *, bandwidth_mhz: float = 20.0,
+                 fleet: Fleet, fl: FLConfig, *, bandwidth_mhz: float = 20.0,
                  allocator: Any = "sao", seed: int = 0,
                  batch_size: int = 32, box_correct: bool = False,
                  compression: Any = "none", fedprox_mu: float = 0.0,
-                 server_momentum: float = 0.0,
+                 server_momentum: float = 0.0, channel: Any = "static",
                  selection: Any = None, aggregator: Any = None):
         self.cnn_cfg = cnn_cfg
         self.fed = fed
@@ -115,6 +117,7 @@ class FLExperiment:
         self.aggregator = AGGREGATORS.resolve(aggregator)
         self.aggregator.reset()
         self.compressor = COMPRESSORS.resolve(compression)
+        self.channel = CHANNELS.resolve(channel)
 
         # -- compiled compute, shared across same-config experiments ---
         self.engine = RoundEngine.shared(EngineConfig(
@@ -276,6 +279,12 @@ class FLExperiment:
         bit_parity = not getattr(selector, "needs_rng", True)
         if not target and bit_parity and self.traceable(selector):
             return self._run_traced(selector, rounds, include_initial_round)
+        if getattr(self.channel, "needs_rng", False):
+            raise ValueError(
+                f"channel {self.channel.registry_name!r} redraws fading "
+                "inside the scanned program and has no host-loop "
+                "equivalent; run it with a traceable strategy bundle and "
+                "no target_accuracy (or through CohortRunner)")
         hist = FLHistory()
         if include_initial_round or self.clusters is None:
             self.initial_round()
@@ -303,7 +312,7 @@ class FLExperiment:
         selector = self.selector if selector is None else selector
         return all(getattr(s, "traceable", False)
                    for s in (selector, self.allocator, self.aggregator,
-                             self.compressor))
+                             self.compressor, self.channel))
 
     def traced_context(self) -> TracedContext:
         return TracedContext(num_devices=self.fed.num_clients,
@@ -343,7 +352,8 @@ class FLExperiment:
                         compressor=self.compressor,
                         tctx=self.traced_context(),
                         feature_layer=self.fl.feature_layer,
-                        rounds=rounds, with_init=with_init)
+                        rounds=rounds, with_init=with_init,
+                        channel=self.channel)
         res = fn(self.traced_state(), self._images, self._labels,
                  self._sizes, fleet_arrays(self.fleet), self.test_images,
                  self.test_labels)

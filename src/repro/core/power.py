@@ -12,7 +12,7 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.core.sao import solve_sao
-from repro.core.wireless import DeviceFleet, fleet_arrays, dbm_to_watt
+from repro.core.wireless import Fleet, fleet_arrays, dbm_to_watt
 
 
 class PowerOptResult(NamedTuple):
@@ -22,7 +22,7 @@ class PowerOptResult(NamedTuple):
     history: list            # [(p_watt, T_k)]
 
 
-def optimal_transmit_power(fleet: DeviceFleet, B: float, *,
+def optimal_transmit_power(fleet: Fleet, B: float, *,
                            p_min_dbm: float = 10.0, p_max_dbm: float = 23.0,
                            eps3: float = 1e-3,
                            max_epochs: int = 40) -> PowerOptResult:

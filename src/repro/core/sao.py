@@ -32,7 +32,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.wireless import LN2, rate_mbps
+from repro.core.wireless import (LN2, effective_arrays, masked_max,
+                                 masked_sum, rate_mbps)
 
 
 class SAOSolution(NamedTuple):
@@ -160,7 +161,13 @@ def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, mask=None,
     traced round pipeline passes fixed-size padded selections; padded lanes
     are excluded from every cross-device reduction (band sum, delay max)
     and get ``b = f = 0`` in the returned solution.
+
+    When ``arr`` carries an ``"inr"`` interference term (multi-cell
+    scenarios) it is folded into J at entry — the solve itself is
+    interference-aware with no other change (eq. (7) keeps its shape with
+    J_eff = J/(1+inr)).
     """
+    arr = effective_arrays(arr)
     if b_max is None:
         b_max = B
     b_max = jnp.asarray(b_max, jnp.float32)
@@ -168,19 +175,14 @@ def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, mask=None,
     if mask is None:
         mask = jnp.ones(arr["J"].shape, bool)
 
-    def masked_max(x):
-        return jnp.max(jnp.where(mask, x, -jnp.inf))
-
-    def masked_sum(x):
-        return jnp.sum(jnp.where(mask, x, 0.0))
-
     # Line 1: T_min = max_n( ln2·z/J + U/f_max ) — the b→∞, f=f_max limit.
-    T_min0 = masked_max(LN2 * arr["z"] / arr["J"] + arr["U"] / arr["f_max"])
+    T_min0 = masked_max(LN2 * arr["z"] / arr["J"] + arr["U"] / arr["f_max"],
+                        mask)
     # T_max: generous upper bound — slowest CPU + a 1000th of the band each.
     n = arr["J"].shape[0]
     b_floor = jnp.maximum(B / n * 1e-3, 1e-6)
     T_max0 = masked_max(arr["z"] / _Q(b_floor, arr["J"])
-                        + arr["U"] / arr["f_min"]) * 2.0
+                        + arr["U"] / arr["f_min"], mask) * 2.0
 
     def cond(carry):
         i, T_lo, T_hi, done = carry
@@ -190,7 +192,7 @@ def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, mask=None,
         i, T_lo, T_hi, _ = carry
         T = 0.5 * (T_lo + T_hi)
         b, f = _inner_allocate(T, arr, b_max, n_inner, box_correct)
-        ratio = masked_sum(b) / B
+        ratio = masked_sum(b, mask) / B
         done = (ratio <= 1.0) & (ratio >= 1.0 - eps0)
         # pin both ends to T on convergence so the returned midpoint IS the
         # T that satisfied the band; otherwise shrink the bracket.
@@ -213,8 +215,8 @@ def solve_sao(arr: Dict[str, jnp.ndarray], B: float, *, mask=None,
     e_of = lambda ff: arr["G"] * jnp.square(ff) + arr["H"] / _Q(b, arr["J"])
     f_final = jnp.where(e_of(f_star) <= arr["e_cons"] + 1e-6, f_star, f)
     t = arr["z"] / _Q(b, arr["J"]) + arr["U"] / f_final
-    T_star = masked_max(t)
-    ratio = masked_sum(b) / B
+    T_star = masked_max(t, mask)
+    ratio = masked_sum(b, mask) / B
     # ratio ≤ 1 at the bracket floor means the band constraint is slack at
     # the optimum (γ* = 0 corner: energy budgets loose, T* = T_min) — that is
     # a converged optimum too, (22) just isn't tight.
@@ -231,6 +233,7 @@ def kkt_residuals(sol: SAOSolution, arr, B):
       energy_slack : e_cons − e_n           (eq. 21 — ≈0 when not box-clipped)
       band_slack   : B − Σ b_n              (eq. 22 — ≈0)
     """
+    arr = effective_arrays(arr)
     Q = _Q(sol.b, arr["J"])
     t = arr["z"] / Q + arr["U"] / sol.f
     e = arr["G"] * jnp.square(sol.f) + arr["H"] / Q

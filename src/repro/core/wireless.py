@@ -1,19 +1,22 @@
 """Wireless system model — paper §III-B, eqs (5)–(11) and §VI parameters.
 
-Unit conventions (chosen so every solver quantity is O(1e-3 .. 1e3) and the
-whole SAO pipeline is float32-safe; see DESIGN.md §5):
+Every quantity uses the scaled unit system documented in ``docs/UNITS.md``
+(frequency GHz, bandwidth MHz, model size Mbit, power W, time s, energy J,
+CPU work Gcycles, noise W/Hz), chosen so the whole SAO pipeline is
+float32-safe. The FDMA rate (7) becomes r[Mbit/s] = b[MHz]·log2(1 + J/b)
+with J = h·p/N0 expressed in MHz; with inter-cell interference the SINR
+denominator grows to N0·(1 + inr), i.e. J_eff = J / (1 + inr).
 
-  frequency f ......... GHz          bandwidth b ......... MHz
-  model size z ........ Mbit         transmit power p .... W
-  time t .............. seconds      energy e ............ Joules
-  CPU work U = L·C·D .. Gcycles      noise N0 ............ W/Hz
-
-The FDMA rate (7) becomes r[Mbit/s] = b[MHz]·log2(1 + J/b) with
-J = h·p/N0 expressed in MHz.
+The per-device physical state is a :class:`Fleet` — a pytree-registered
+dataclass, so fleets trace through ``jit``/``vmap``/``lax.scan`` (the
+device-resident round pipeline) as plain arrays. Declarative construction
+(multi-cell topologies, channel models) lives in ``repro.api.scenario``;
+:func:`sample_fleet` remains the paper's §VI single-cell sampler.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, fields
 
 import jax
 import jax.numpy as jnp
@@ -35,6 +38,12 @@ DEFAULT_ALPHA = 2e-28                         # effective capacitance 2·(α/2)
 DEFAULT_LOCAL_ITERS = 5
 DEFAULT_CYCLES_PER_SAMPLE = 2e4
 DEFAULT_SAMPLES = 500
+# §VI device-population draws — shared by sample_fleet and the scenario
+# API's CellSpec defaults (the build_fleet ≡ sample_fleet bit-identity pin
+# relies on there being exactly one copy of these)
+DEFAULT_E_CONS_RANGE = (30e-3, 60e-3)
+DEFAULT_CYCLES_RANGE = (1e4, 3e4)
+DEFAULT_SAMPLES_RANGE = (300, 700)
 
 
 def dbm_to_watt(dbm):
@@ -46,8 +55,16 @@ def watt_to_dbm(w):
 
 
 @dataclass
-class DeviceFleet:
-    """Per-device physical parameters for N devices (host-side numpy)."""
+class Fleet:
+    """Per-device physical parameters for N devices.
+
+    A registered pytree: the per-device arrays are leaves (so a ``Fleet``
+    passes through ``jit``/``vmap``/``lax.scan`` directly), while ``L`` and
+    ``N0`` are static aux data. Constructed either by :func:`sample_fleet`
+    (the paper's §VI single-cell draw) or declaratively from a
+    ``FleetSpec`` via ``repro.api.scenario.build_fleet`` (multi-cell
+    topologies, pluggable channel models).
+    """
     h: np.ndarray            # channel gain (linear)
     p: np.ndarray            # transmit power [W]
     z: np.ndarray            # model size [Mbit]
@@ -59,10 +76,22 @@ class DeviceFleet:
     f_max: np.ndarray        # [GHz]
     e_cons: np.ndarray       # per-device energy budget [J]
     N0: float                # noise PSD [W/Hz]
+    cell: np.ndarray = None  # serving-cell index per device (0 for single cell)
+    inr: np.ndarray = None   # interference-to-noise ratio I/N0 at the serving BS
+
+    def __post_init__(self):
+        if self.cell is None:
+            self.cell = np.zeros(np.shape(self.h), np.int32)
+        if self.inr is None:
+            self.inr = np.zeros(np.shape(self.h), np.float64)
 
     @property
     def num_devices(self) -> int:
         return len(self.h)
+
+    @property
+    def num_cells(self) -> int:
+        return int(np.max(np.asarray(self.cell))) + 1 if len(self.h) else 1
 
     # --- the paper's composite constants, eqs (15)-(18), scaled units ---
     def J_mhz(self):
@@ -81,29 +110,62 @@ class DeviceFleet:
         """H_n = z_n·p_n: e_com = H / (b·log2(1+J/b)) with b in MHz, z in Mbit."""
         return self.z * self.p
 
-    def select(self, idx) -> "DeviceFleet":
+    def select(self, idx) -> "Fleet":
         idx = np.asarray(idx)
-        return DeviceFleet(
+        return Fleet(
             h=self.h[idx], p=self.p[idx], z=self.z[idx], C=self.C[idx],
             D=self.D[idx], L=self.L, alpha=self.alpha[idx],
             f_min=self.f_min[idx], f_max=self.f_max[idx],
-            e_cons=self.e_cons[idx], N0=self.N0)
+            e_cons=self.e_cons[idx], N0=self.N0, cell=self.cell[idx],
+            inr=self.inr[idx])
 
-    def with_power(self, p_watt) -> "DeviceFleet":
-        return DeviceFleet(
+    def cell_fleet(self, c: int) -> "Fleet":
+        """The sub-fleet served by cell ``c`` (device order preserved)."""
+        return self.select(np.flatnonzero(np.asarray(self.cell) == c))
+
+    def with_power(self, p_watt) -> "Fleet":
+        return Fleet(
             h=self.h, p=np.broadcast_to(np.asarray(p_watt, np.float64),
                                         self.h.shape).copy(),
             z=self.z, C=self.C, D=self.D, L=self.L, alpha=self.alpha,
-            f_min=self.f_min, f_max=self.f_max, e_cons=self.e_cons, N0=self.N0)
+            f_min=self.f_min, f_max=self.f_max, e_cons=self.e_cons,
+            N0=self.N0, cell=self.cell, inr=self.inr)
+
+
+_FLEET_LEAVES = tuple(f.name for f in fields(Fleet)
+                      if f.name not in ("L", "N0"))
+
+
+def _fleet_flatten(fl: Fleet):
+    return tuple(getattr(fl, n) for n in _FLEET_LEAVES), (fl.L, fl.N0)
+
+
+def _fleet_unflatten(aux, children):
+    kw = dict(zip(_FLEET_LEAVES, children))
+    return Fleet(L=aux[0], N0=aux[1], **kw)
+
+
+jax.tree_util.register_pytree_node(Fleet, _fleet_flatten, _fleet_unflatten)
+
+
+class DeviceFleet(Fleet):
+    """Deprecated alias of :class:`Fleet` (kept importable one release)."""
+
+    def __post_init__(self):
+        warnings.warn(
+            "DeviceFleet is deprecated; use repro.core.wireless.Fleet "
+            "(same fields — DeviceFleet will be removed next release)",
+            DeprecationWarning, stacklevel=2)
+        super().__post_init__()
 
 
 def sample_fleet(num_devices: int = 100, seed: int = 0, *,
                  p_dbm: float = DEFAULT_P_DBM,
                  z_mbit: float = DEFAULT_Z_MBIT,
-                 e_cons_range=(30e-3, 60e-3),
-                 cycles_range=(1e4, 3e4),
-                 samples_range=(300, 700),
-                 local_iters: int = DEFAULT_LOCAL_ITERS) -> DeviceFleet:
+                 e_cons_range=DEFAULT_E_CONS_RANGE,
+                 cycles_range=DEFAULT_CYCLES_RANGE,
+                 samples_range=DEFAULT_SAMPLES_RANGE,
+                 local_iters: int = DEFAULT_LOCAL_ITERS) -> Fleet:
     """§VI setup: N devices uniform in a 300 m cell, 3GPP path loss + 8 dB
     lognormal shadowing, -174 dBm/Hz noise."""
     rng = np.random.default_rng(seed)
@@ -111,7 +173,7 @@ def sample_fleet(num_devices: int = 100, seed: int = 0, *,
     r_km = CELL_RADIUS_KM * np.sqrt(rng.uniform(0.01, 1.0, num_devices))
     pl_db = PATHLOSS_DB(r_km) + rng.normal(0.0, SHADOW_STD_DB, num_devices)
     h = 10.0 ** (-pl_db / 10.0)
-    return DeviceFleet(
+    return Fleet(
         h=h,
         p=np.full(num_devices, dbm_to_watt(p_dbm)),
         z=np.full(num_devices, z_mbit),
@@ -156,19 +218,55 @@ def e_com(H, b_mhz, J_mhz):
     return H / rate_mbps(b_mhz, J_mhz)
 
 
+def effective_arrays(arr):
+    """Fold the inter-cell interference term into the channel constant.
+
+    With interference the FDMA SINR denominator is ``(N0 + I)·b``, so the
+    rate (7) keeps its shape with ``J_eff = J / (1 + inr)`` where
+    ``inr = I/N0``. All solvers call this at entry; dicts without an
+    ``"inr"`` key (hand-built, pre-scenario-API) pass through unchanged,
+    and ``inr == 0`` divides by exactly 1.0 — bit-identical to no
+    interference. The returned copy drops the ``"inr"`` key, making the
+    fold idempotent.
+    """
+    if not isinstance(arr, dict) or "inr" not in arr:
+        return arr
+    out = dict(arr)
+    inr = out.pop("inr")
+    out["J"] = arr["J"] / (1.0 + inr)
+    return out
+
+
+def masked_max(x, mask=None):
+    """Max over the real lanes of a fixed-size padded selection (the one
+    padding convention every solver shares: pads are -inf for maxes)."""
+    return jnp.max(x) if mask is None else \
+        jnp.max(jnp.where(mask, x, -jnp.inf))
+
+
+def masked_sum(x, mask=None):
+    """Sum over the real lanes (pads contribute exactly 0)."""
+    return jnp.sum(x) if mask is None else jnp.sum(jnp.where(mask, x, 0.0))
+
+
 def round_totals(fleet_arrays, b_mhz, f_ghz):
     """Per-round totals, eqs (10)-(11): (T_k, E_k, per-device t, per-device e).
 
     ``fleet_arrays`` is a dict with J, U, G, H, z (jnp arrays).
     """
-    J, U, G, H, z = (fleet_arrays[k] for k in ("J", "U", "G", "H", "z"))
+    fa = effective_arrays(fleet_arrays)
+    J, U, G, H, z = (fa[k] for k in ("J", "U", "G", "H", "z"))
     t = t_com(z, b_mhz, J) + t_cmp(U, f_ghz)
     e = e_com(H, b_mhz, J) + e_cmp(G, f_ghz)
     return jnp.max(t), jnp.sum(e), t, e
 
 
-def fleet_arrays(fleet: DeviceFleet):
-    """Pack the solver-facing constants (15)-(18) into jnp arrays."""
+def fleet_arrays(fleet: Fleet):
+    """Pack the solver-facing constants (15)-(18) into jnp arrays.
+
+    ``inr`` rides along so the solvers can fold interference into J
+    (:func:`effective_arrays`); it is zeros for single-cell fleets.
+    """
     return {
         "J": jnp.asarray(fleet.J_mhz(), jnp.float32),
         "U": jnp.asarray(fleet.U_gcycles(), jnp.float32),
@@ -178,4 +276,5 @@ def fleet_arrays(fleet: DeviceFleet):
         "e_cons": jnp.asarray(fleet.e_cons, jnp.float32),
         "f_min": jnp.asarray(fleet.f_min, jnp.float32),
         "f_max": jnp.asarray(fleet.f_max, jnp.float32),
+        "inr": jnp.asarray(fleet.inr, jnp.float32),
     }

@@ -16,8 +16,9 @@ import sys
 
 import numpy as np
 
-from repro.api import (ExperimentSpec, build_cohort, build_experiment,
-                       SELECTORS, ALLOCATORS)
+from repro.api import (ExperimentSpec, FleetSpec, build_cohort,
+                       build_experiment, multicell_fleet_spec,
+                       SELECTORS, ALLOCATORS, CHANNELS)
 from repro.core import adjusted_rand_index
 
 
@@ -66,6 +67,27 @@ def run(dataset: str, selection: str, *, rounds: int, clients: int,
     return run_spec(spec)
 
 
+def _fleet_from_args(args):
+    """--fleet-spec file (+--channel override) or --cells/--channel
+    shorthand; None (legacy sample_fleet) when neither is given."""
+    if getattr(args, "fleet_spec", None):
+        if getattr(args, "cells", 0):
+            raise SystemExit("--cells conflicts with --fleet-spec (the "
+                             "file defines the cells); edit the spec or "
+                             "drop one flag")
+        with open(args.fleet_spec) as f:
+            fs = FleetSpec.from_json(f.read())
+        if getattr(args, "channel", None):
+            fs = fs.replace(channel=args.channel)
+        return fs
+    cells = getattr(args, "cells", 0) or 0
+    channel = getattr(args, "channel", None)
+    if cells <= 0 and channel is None:
+        return None
+    return multicell_fleet_spec(max(cells, 1),
+                                **({"channel": channel} if channel else {}))
+
+
 def spec_from_args(args) -> ExperimentSpec:
     if args.spec:
         with open(args.spec) as f:
@@ -80,7 +102,8 @@ def spec_from_args(args) -> ExperimentSpec:
                           local_iters=args.local_iters,
                           learning_rate=args.lr,
                           target_accuracy=args.target_acc, seed=args.seed,
-                          cohort=args.cohort)
+                          cohort=args.cohort,
+                          fleet=_fleet_from_args(args))
 
 
 def main(argv=None):
@@ -105,6 +128,16 @@ def main(argv=None):
     ap.add_argument("--cohort", type=int, default=1,
                     help="run seeds seed..seed+N-1 as one vmapped, "
                          "device-sharded program (traceable strategies only)")
+    ap.add_argument("--fleet-spec", default=None,
+                    help="FleetSpec JSON file: declarative multi-cell "
+                         "topology + channel model (repro.api.scenario)")
+    ap.add_argument("--cells", type=int, default=0,
+                    help="shorthand: N default cells on the auto layout "
+                         "(N>1 implies the multicell-interference channel); "
+                         "runs (seeds × cells) lanes on the cohort engine")
+    ap.add_argument("--channel", default=None,
+                    help=f"channel model override, one of {CHANNELS.names()} "
+                         "(':arg' allowed, e.g. 'rayleigh-block:0.01')")
     ap.add_argument("--dump-spec", action="store_true",
                     help="print the resolved ExperimentSpec JSON and exit")
     ap.add_argument("--out", default=None)
@@ -115,7 +148,7 @@ def main(argv=None):
         print(spec.to_json(indent=1))
         return
 
-    if spec.cohort > 1:
+    if spec.cohort > 1 or spec.num_cells > 1:
         if spec.target_accuracy:
             print(f"warning: --cohort runs all {spec.rounds} rounds as one "
                   "compiled program; target_accuracy early stopping is "
@@ -127,6 +160,7 @@ def main(argv=None):
         result = {
             "spec": spec.to_dict(),
             "seeds": ch.seeds,
+            "cells": ch.lane_cells,
             "final_accuracy_mean": float(np.mean(ch.final_accuracy)),
             "final_accuracy_std": float(np.std(ch.final_accuracy)),
             "final_accuracy_per_seed": ch.final_accuracy.tolist(),

@@ -7,10 +7,11 @@ are jitted and the host boundary (``FLHistory.append``) is the single place
 values are pulled back, so the driver never blocks between the allocation
 and the training dispatch.
 
-SAO and equal-bandwidth also implement the traced contract
-(``allocate_traced``: padded selected sets + participation masks) used by
-the scanned round pipeline; FEDL's waterfilling grid solve is host-driven
-(λ tuning) and stays loop-only.
+Every built-in implements the traced contract (``allocate_traced``: padded
+selected sets + participation masks) used by the scanned round pipeline —
+including FEDL, whose §VI-A λ tuning is a ``lax.while_loop`` bisection
+(``fedl_auto``) rather than the old host-driven loop, so baseline sweeps
+run on the cohort engine too.
 """
 from __future__ import annotations
 
@@ -20,8 +21,10 @@ import jax.numpy as jnp
 
 from repro.api.protocols import Allocation
 from repro.api.registry import ALLOCATORS, Strategy, StrategyError
-from repro.core.baselines import equal_bandwidth, fedl_lambda
+from repro.core.baselines import (equal_bandwidth, fedl_lambda,
+                                  tune_fedl_lambda)
 from repro.core.sao import _Q, solve_sao
+from repro.core.wireless import effective_arrays, masked_sum
 
 
 @ALLOCATORS.register("sao")
@@ -39,6 +42,9 @@ class SAOAllocator(Strategy):
         return Allocation(T=T, E=E, b=b, f=f)
 
     def allocate_traced(self, arr, B: float, mask):
+        # fold interference BEFORE the energy accounting too — the rate the
+        # solver allocated against is the degraded one
+        arr = effective_arrays(arr)
         s = solve_sao(arr, B, mask=mask, box_correct=self.box_correct)
         e = arr["G"] * jnp.square(s.f) + arr["H"] / _Q(s.b, arr["J"])
         if mask is not None:
@@ -75,12 +81,45 @@ class EqualBandwidthAllocator(Strategy):
 @dataclass(frozen=True)
 class FEDLAllocator(Strategy):
     """Baseline 2 — FEDL [27]: min Σe + λ·T without per-device energy
-    constraints. Spelled ``fedl:<λ>`` in compact form."""
+    constraints, at a fixed λ. Spelled ``fedl:<λ>`` in compact form."""
 
     lam: float = 1.0
 
-    traceable = False                  # host-driven grid solve (λ tuning)
+    traceable = True
 
     def allocate(self, arr, B: float) -> Allocation:
         r = fedl_lambda(arr, B, self.lam)
         return Allocation(T=r.T, E=jnp.sum(r.e), b=r.b, f=r.f)
+
+    def allocate_traced(self, arr, B: float, mask):
+        r = fedl_lambda(arr, B, self.lam, mask=mask)
+        return r.T, masked_sum(r.e, mask), r.b, r.f
+
+
+@ALLOCATORS.register("fedl_auto")
+@dataclass(frozen=True)
+class FEDLAutoAllocator(Strategy):
+    """FEDL with the §VI-A λ protocol ('the device with the highest energy
+    cost just meets its budget') tuned PER ROUND inside the traced program
+    — a ``lax.while_loop`` bisection over the grid solve, so the baseline
+    sweeps run device-resident. ``fedl_auto:<iters>`` sets the bisection
+    depth; ``n_grid`` the T-grid of each inner solve."""
+
+    iters: int = 12
+    n_grid: int = 60
+
+    traceable = True
+
+    def _solve(self, arr, B, mask):
+        arr = effective_arrays(arr)
+        lam = tune_fedl_lambda(arr, B, mask=mask, iters=self.iters,
+                               n_grid=self.n_grid)
+        return fedl_lambda(arr, B, lam, n_grid=self.n_grid, mask=mask)
+
+    def allocate(self, arr, B: float) -> Allocation:
+        r = self._solve(arr, B, None)
+        return Allocation(T=r.T, E=jnp.sum(r.e), b=r.b, f=r.f)
+
+    def allocate_traced(self, arr, B: float, mask):
+        r = self._solve(arr, B, mask)
+        return r.T, masked_sum(r.e, mask), r.b, r.f

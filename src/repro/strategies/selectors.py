@@ -22,7 +22,7 @@ from repro.api.registry import SELECTORS, Strategy, StrategyError
 from repro.core.selection import (select_divergence, select_icas,
                                   select_kmeans_random, select_random,
                                   select_rra)
-from repro.core.wireless import fleet_arrays, rate_mbps
+from repro.core.wireless import effective_arrays, fleet_arrays, rate_mbps
 from repro.strategies.traced import (select_divergence_traced,
                                      select_icas_traced,
                                      select_kmeans_random_traced,
@@ -115,7 +115,7 @@ class ICASSelector(Strategy):
     needs_divergence = True
 
     def select(self, ctx: SelectionContext) -> np.ndarray:
-        arr = fleet_arrays(ctx.fleet)
+        arr = effective_arrays(fleet_arrays(ctx.fleet))
         rates = np.asarray(rate_mbps(ctx.bandwidth_mhz / ctx.num_devices,
                                      arr["J"]))
         return select_icas(ctx.divergences(), rates, ctx.devices_per_round,
@@ -144,7 +144,7 @@ class RRASelector(Strategy):
     needs_divergence = False
 
     def select(self, ctx: SelectionContext) -> np.ndarray:
-        arr = fleet_arrays(ctx.fleet)
+        arr = effective_arrays(fleet_arrays(ctx.fleet))
         e_eq = np.asarray(
             arr["H"] / rate_mbps(ctx.bandwidth_mhz / self.target_mean,
                                  arr["J"]))

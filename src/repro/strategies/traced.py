@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.wireless import rate_mbps
+from repro.core.wireless import effective_arrays, rate_mbps
 
 
 def _per_cluster_topk(scores, labels, num_clusters: int, s: int,
@@ -63,6 +63,7 @@ def select_random_traced(key, *, num_devices: int, S: int):
 def select_icas_traced(divergences, arr, *, bandwidth_mhz: float,
                        num_devices: int, S: int, beta: float):
     """ICAS: importance × channel-rate geometric blend, deterministic top-S."""
+    arr = effective_arrays(arr)
     rates = rate_mbps(bandwidth_mhz / num_devices, arr["J"])
     u = divergences / jnp.maximum(jnp.max(divergences), 1e-12)
     r = rates / jnp.maximum(jnp.max(rates), 1e-12)
@@ -76,6 +77,7 @@ def select_rra_traced(key, arr, *, bandwidth_mhz: float, num_devices: int,
     """RRA: energy-efficiency thresholding as a fixed-size (N-lane) masked
     variant — the participating-set size varies through the mask, not the
     shape. Mirrors the host version including the scale clamp."""
+    arr = effective_arrays(arr)
     e_eq = arr["H"] / rate_mbps(bandwidth_mhz / target_mean, arr["J"])
     eff = arr["e_cons"] / jnp.maximum(e_eq, 1e-12)
     q = 100.0 * min(1.0, target_mean / num_devices)

@@ -1,0 +1,399 @@
+"""Scenario API: FleetSpec/CellSpec round-trip, build_fleet ≡ sample_fleet
+bit-identity, the static-channel pinned pipeline equivalence, per-round
+Rayleigh fading inside the scan, multi-cell interference sweeps on the
+cohort engine, the traced FEDL λ bisection, and the fl_sim CLI round-trip
+through --dump-spec/--spec."""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis_compat import given, settings, st, HealthCheck
+
+from repro.api import (ALLOCATORS, CHANNELS, CellSpec, ExperimentSpec,
+                       FleetSpec, build_cohort, build_experiment,
+                       build_fleet, multicell_fleet_spec, register_channel)
+from repro.api.registry import StrategyError
+from repro.core.baselines import fedl_lambda, tune_fedl_lambda
+from repro.core.sao import kkt_residuals, solve_sao
+from repro.core.wireless import (DeviceFleet, Fleet, effective_arrays,
+                                 fleet_arrays, sample_fleet)
+
+TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
+            train_samples=160, test_samples=80, local_iters=2, batch_size=8,
+            rounds=2, devices_per_round=4, num_clusters=4,
+            learning_rate=0.05)
+
+slow_settings = settings(deadline=None, max_examples=10,
+                         suppress_health_check=list(HealthCheck))
+
+
+# ---------------------------------------------------------------------------
+# FleetSpec / CellSpec serialization
+# ---------------------------------------------------------------------------
+
+
+def test_fleetspec_json_roundtrip():
+    fs = FleetSpec(
+        cells=(CellSpec(radius_km=0.2, e_cons_range=(0.02, 0.05)),
+               CellSpec(devices=12, center_km=(1.0, 0.5), p_dbm=20.0)),
+        channel="multicell-interference:0.5", isd_km=0.8)
+    again = FleetSpec.from_json(fs.to_json())
+    assert again == fs
+    assert again.channel == {"name": "multicell-interference",
+                             "params": {"load": 0.5, "shadow_db": 8.0}}
+    assert again.cells[1].center_km == (1.0, 0.5)
+    assert isinstance(again.cells[0].e_cons_range, tuple)
+
+
+def test_fleetspec_validation():
+    with pytest.raises(ValueError, match="at least one cell"):
+        FleetSpec(cells=())
+    with pytest.raises(ValueError, match="unknown FleetSpec fields"):
+        FleetSpec.from_dict({"no_such": 1})
+    with pytest.raises(StrategyError, match="unknown channel"):
+        FleetSpec(channel="warp-drive")
+
+
+def test_experiment_spec_carries_fleet():
+    spec = ExperimentSpec(**TINY, fleet=multicell_fleet_spec(2))
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.num_cells == 2
+    assert isinstance(again.fleet, FleetSpec)
+    # the default (legacy) spec keeps fleet=None and one cell
+    assert ExperimentSpec(**TINY).num_cells == 1
+
+
+def test_channel_registry_and_custom_model():
+    assert {"static", "rayleigh-block",
+            "multicell-interference"} <= set(CHANNELS.names())
+
+    @register_channel("test_mirror")
+    class Mirror:
+        traceable = True
+        needs_rng = False
+
+        def sample_gains(self, rng, d_km):
+            return np.ones_like(d_km)
+
+        def apply_traced(self, key, arr):
+            return arr
+
+    try:
+        assert CHANNELS.resolve("test_mirror").needs_rng is False
+    finally:
+        CHANNELS._classes.pop("test_mirror")
+
+
+# ---------------------------------------------------------------------------
+# build_fleet: bit-identity with the legacy sampler; multi-cell geometry
+# ---------------------------------------------------------------------------
+
+
+def test_build_fleet_matches_sample_fleet_bit_identical():
+    want = sample_fleet(23, seed=7)
+    got = build_fleet(FleetSpec(), 7, clients=23)
+    for name in ("h", "p", "z", "C", "D", "alpha", "f_min", "f_max",
+                 "e_cons"):
+        np.testing.assert_array_equal(getattr(got, name),
+                                      getattr(want, name), err_msg=name)
+    assert got.L == want.L and got.N0 == want.N0
+    assert np.all(got.inr == 0.0) and np.all(got.cell == 0)
+
+
+def test_build_fleet_multicell_interference():
+    fl = build_fleet(multicell_fleet_spec(3), 0, clients=10,
+                     bandwidth_mhz=20.0)
+    assert fl.num_devices == 30 and fl.num_cells == 3
+    assert np.all(fl.inr > 0.0)                  # every BS hears other cells
+    c1 = fl.cell_fleet(1)
+    assert c1.num_devices == 10 and np.all(np.asarray(c1.cell) == 1)
+    # interference is per-cell constant
+    assert len(np.unique(np.asarray(c1.inr))) == 1
+    # wider cell spacing → weaker interference
+    far = build_fleet(multicell_fleet_spec(3, isd_km=5.0), 0, clients=10)
+    assert float(np.mean(far.inr)) < float(np.mean(fl.inr))
+    # cell streams must not alias a neighboring cohort seed's cells:
+    # (seed 0, cell 1) and (seed 1, cell 0) draw different populations
+    fs2 = multicell_fleet_spec(2)
+    a = build_fleet(fs2, 0, clients=10).cell_fleet(1)
+    b = build_fleet(fs2, 1, clients=10).cell_fleet(0)
+    assert not np.array_equal(a.h, b.h)
+
+
+def test_interference_raises_optimal_delay():
+    fl = build_fleet(multicell_fleet_spec(2), 1, clients=8)
+    arr = fleet_arrays(fl.cell_fleet(0))
+    clean = dict(arr)
+    clean["inr"] = jnp.zeros_like(arr["inr"])
+    T_int = float(solve_sao(arr, 20.0).T)
+    T_clean = float(solve_sao(clean, 20.0).T)
+    assert T_int > T_clean
+    # inr == 0 is bit-identical to the pre-scenario solver input
+    no_key = {k: v for k, v in clean.items() if k != "inr"}
+    assert float(solve_sao(no_key, 20.0).T) == T_clean
+
+
+def test_sao_allocator_energy_uses_interference_folded_rate():
+    """Regression: E_k must be the energy at the interference-degraded
+    rate the solver allocated against, not the clean-channel one."""
+    fl = build_fleet(multicell_fleet_spec(2), 1, clients=8)
+    arr = fleet_arrays(fl.cell_fleet(0))
+    T, E, b, f = ALLOCATORS.resolve("sao").allocate_traced(arr, 20.0, None)
+    eff = effective_arrays(arr)
+    from repro.core.sao import _Q
+    e_true = eff["G"] * jnp.square(f) + eff["H"] / _Q(b, eff["J"])
+    np.testing.assert_allclose(float(E), float(jnp.sum(e_true)), rtol=1e-6)
+    # sanity: the clean-channel accounting would claim strictly less
+    e_clean = arr["G"] * jnp.square(f) + arr["H"] / _Q(b, arr["J"])
+    assert float(jnp.sum(e_clean)) < float(E)
+
+
+def test_fleet_is_pytree_and_devicefleet_deprecated():
+    fl = sample_fleet(5, seed=0)
+    leaves, treedef = jax.tree_util.tree_flatten(fl)
+    again = jax.tree_util.tree_unflatten(treedef, leaves)
+    np.testing.assert_array_equal(again.h, fl.h)
+    assert again.L == fl.L
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        old = DeviceFleet(h=fl.h, p=fl.p, z=fl.z, C=fl.C, D=fl.D, L=fl.L,
+                          alpha=fl.alpha, f_min=fl.f_min, f_max=fl.f_max,
+                          e_cons=fl.e_cons, N0=fl.N0)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    assert isinstance(old, Fleet)
+    assert isinstance(old.select(np.arange(2)), Fleet)
+
+
+# ---------------------------------------------------------------------------
+# pinned: static channel ≡ current pipeline, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_static_fleetspec_pipeline_bit_identical():
+    legacy = build_experiment(ExperimentSpec(**TINY))
+    h_legacy = legacy.run()
+    scenario = build_experiment(
+        ExperimentSpec(**TINY, fleet=FleetSpec()))
+    h_scenario = scenario.run()
+    assert h_scenario.accuracy == h_legacy.accuracy
+    assert h_scenario.T_k == h_legacy.T_k
+    assert h_scenario.E_k == h_legacy.E_k
+    for a, b in zip(h_scenario.selected, h_legacy.selected):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# rayleigh-block: per-round fading redrawn inside the scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_rayleigh_block_runs_traced_and_refuses_host_loop():
+    spec = ExperimentSpec(**{**TINY, "rounds": 3},
+                          fleet=FleetSpec(channel="rayleigh-block"))
+    exp = build_experiment(spec)
+    assert exp.channel.registry_name == "rayleigh-block"
+    assert exp.traceable()
+    hist = exp.run()                     # scanned path, fading per round
+    assert len(hist.T_k) == 4
+    assert all(np.isfinite(hist.T_k)) and all(t > 0 for t in hist.T_k)
+    # fading redraws must actually vary the round delays
+    assert len({round(t, 9) for t in hist.T_k}) > 1
+
+    forced = build_experiment(spec)
+    forced.traceable = lambda *a, **k: False
+    with pytest.raises(ValueError, match="rayleigh-block"):
+        forced.run()
+
+
+@pytest.mark.slow
+def test_static_channel_unchanged_by_channel_hook():
+    """The channel hook must not perturb the PRNG stream: a static-channel
+    scanned run equals the legacy-loop run exactly (the PR-2 pin, now with
+    the channel plumbing in between)."""
+    spec = ExperimentSpec(**TINY, fleet=FleetSpec())
+    traced = build_experiment(spec)
+    h_t = traced.run()
+    legacy = build_experiment(spec)
+    legacy.traceable = lambda *a, **k: False
+    h_l = legacy.run()
+    assert h_t.accuracy == h_l.accuracy
+    np.testing.assert_allclose(h_t.T_k, h_l.T_k, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# multicell-interference: ≥2 cells end-to-end on the cohort engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_multicell_sweep_on_cohort_runner():
+    spec = ExperimentSpec(**TINY, fleet=multicell_fleet_spec(2))
+    runner = build_cohort(spec)
+    ch = runner.run()                    # (1 seed × 2 cells) lanes, one scan
+    assert ch.cells == 2
+    assert ch.lane_cells == [0, 1]
+    assert ch.accuracy.shape == (2, TINY["rounds"] + 1)
+    assert np.all(np.isfinite(ch.accuracy))
+    assert np.all(np.asarray(ch.T_k) > 0)
+    # every lane's experiment really is its own cell with interference
+    assert [e.cell for e in runner.experiments] == [0, 1]
+    for e in runner.experiments:
+        assert np.all(e.fleet.inr > 0.0)
+    # cells partition data with decorrelated streams
+    assert not np.array_equal(runner.experiments[0].fed.labels,
+                              runner.experiments[1].fed.labels)
+
+
+@pytest.mark.slow
+def test_multicell_cohort_stacks_cells_next_to_seeds():
+    spec = ExperimentSpec(**TINY, cohort=2, fleet=multicell_fleet_spec(2))
+    ch = build_cohort(spec).run()
+    assert len(ch.seeds) == 4
+    assert ch.seeds == [0, 0, 1, 1]
+    assert ch.lane_cells == [0, 1, 0, 1]
+    assert ch.accuracy.shape == (4, TINY["rounds"] + 1)
+
+
+# ---------------------------------------------------------------------------
+# property: masked + vmapped SAO keeps the Theorem-1 residuals on
+# randomized FleetSpec fleets
+# ---------------------------------------------------------------------------
+
+
+@slow_settings
+@given(seed=st.integers(0, 40), n=st.integers(4, 12))
+def test_kkt_residuals_masked_vmapped_from_fleetspec(seed, n):
+    fs = FleetSpec(cells=(CellSpec(devices=n + 4,
+                                   e_cons_range=(0.03, 0.06)),))
+    arr = fleet_arrays(build_fleet(fs, seed).select(np.arange(n)))
+    # pad with duplicated masked-out lanes, then vmap over two instances
+    pad = {k: jnp.concatenate([v, v[:2]]) for k, v in arr.items()}
+    mask = jnp.asarray([True] * n + [False] * 2)
+    arr_b = fleet_arrays(build_fleet(fs, seed + 1000).select(np.arange(n)))
+    pad_b = {k: jnp.concatenate([v, v[:2]]) for k, v in arr_b.items()}
+    stacked = {k: jnp.stack([pad[k], pad_b[k]]) for k in pad}
+    sols = jax.vmap(lambda a: solve_sao(a, 20.0, mask=mask))(stacked)
+    for i, base in enumerate((arr, arr_b)):
+        if not bool(sols.converged[i]):
+            continue                     # infeasible channel draw
+        sol_i = jax.tree_util.tree_map(lambda x, i=i: x[i][:n], sols)
+        r = kkt_residuals(sol_i, base, 20.0)
+        assert float(jnp.max(-r["energy_slack"])) < 1e-4      # (19a)
+        assert float(jnp.sum(sol_i.b)) <= 20.0 * (1 + 1e-4)   # (19c)
+        assert bool(jnp.all(sol_i.f >= base["f_min"] - 1e-6)) # (19d)
+        assert bool(jnp.all(sol_i.f <= base["f_max"] + 1e-6))
+        assert abs(float(jnp.max(r["t"])) - float(sol_i.T)) < 1e-4
+        # padded lanes stayed inert
+        assert np.all(np.asarray(sols.b[i][n:]) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# traced FEDL: masked solve ≡ unpadded solve; λ bisection inside jit
+# ---------------------------------------------------------------------------
+
+
+def test_fedl_masked_padding_matches_unpadded():
+    arr = fleet_arrays(sample_fleet(6, seed=2))
+    want = fedl_lambda(arr, 20.0, 1.0)
+    pad = {k: jnp.concatenate([v, v[:2]]) for k, v in arr.items()}
+    mask = jnp.asarray([True] * 6 + [False] * 2)
+    got = fedl_lambda(pad, 20.0, 1.0, mask=mask)
+    np.testing.assert_allclose(float(got.T), float(want.T), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.b[:6]), np.asarray(want.b),
+                               rtol=1e-4, atol=1e-5)
+    assert np.all(np.asarray(got.b[6:]) == 0.0)
+    assert np.all(np.asarray(got.f[6:]) == 0.0)
+
+
+def test_tune_fedl_lambda_traces_and_matches_host_protocol():
+    arr = fleet_arrays(sample_fleet(30, seed=0).select(np.arange(8)))
+    lam = tune_fedl_lambda(arr, 20.0, iters=16, n_grid=60)
+    assert np.isfinite(float(lam)) and float(lam) > 0
+    # the tuned point satisfies the §VI-A criterion: no device over budget
+    res = fedl_lambda(arr, 20.0, lam, n_grid=60)
+    assert float(jnp.max(res.e - arr["e_cons"])) <= 1e-4
+    # and it really is traced (jit-compiled, no host callbacks)
+    jitted = jax.jit(lambda a: tune_fedl_lambda(a, 20.0, iters=4, n_grid=24))
+    assert np.isfinite(float(jitted(arr)))
+
+
+def test_fedl_auto_allocator_traced_contract():
+    alloc = ALLOCATORS.resolve("fedl_auto:6")
+    assert alloc.iters == 6 and alloc.traceable
+    arr = fleet_arrays(sample_fleet(12, seed=1).select(np.arange(5)))
+    pad = {k: jnp.concatenate([v, v[:1]]) for k, v in arr.items()}
+    mask = jnp.asarray([True] * 5 + [False])
+    T, E, b, f = alloc.allocate_traced(pad, 20.0, mask)
+    assert np.isfinite(float(T)) and float(T) > 0
+    assert np.isfinite(float(E)) and float(E) > 0
+    assert float(b[-1]) == 0.0
+
+
+@pytest.mark.slow
+def test_fedl_scanned_run_matches_python_loop():
+    """The FEDL baseline now runs inside the scan (ROADMAP item): the
+    device-resident path reproduces the host loop exactly."""
+    spec = ExperimentSpec(**TINY, allocator="fedl:1.0")
+    traced = build_experiment(spec)
+    assert traced.traceable()
+    h_t = traced.run()
+    legacy = build_experiment(spec)
+    legacy.traceable = lambda *a, **k: False
+    h_l = legacy.run()
+    assert h_t.accuracy == h_l.accuracy
+    np.testing.assert_allclose(h_t.T_k, h_l.T_k, rtol=1e-5)
+    np.testing.assert_allclose(h_t.E_k, h_l.E_k, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CLI round-trip: --dump-spec → --spec reproduces the run exactly
+# ---------------------------------------------------------------------------
+
+_CLI_TINY = ["--dataset", "fashion", "--clients", "6", "--per-round", "3",
+             "--rounds", "1", "--local-iters", "1", "--cells", "1"]
+
+
+@pytest.mark.slow
+def test_fl_sim_dump_spec_roundtrip(tmp_path, capsys):
+    from repro.launch import fl_sim
+
+    fl_sim.main(_CLI_TINY + ["--dump-spec"])
+    dumped = capsys.readouterr().out
+    spec_file = tmp_path / "spec.json"
+    spec_file.write_text(dumped)
+    # the dumped spec parses back to the exact same value (fleet included)
+    spec = ExperimentSpec.from_json(dumped)
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert spec.fleet is not None        # --cells materialized a FleetSpec
+
+    out_a, out_b = tmp_path / "a.jsonl", tmp_path / "b.jsonl"
+    fl_sim.main(_CLI_TINY + ["--out", str(out_a)])
+    capsys.readouterr()
+    fl_sim.main(["--spec", str(spec_file), "--out", str(out_b)])
+    capsys.readouterr()
+    rec_a = json.loads(out_a.read_text())
+    rec_b = json.loads(out_b.read_text())
+    assert rec_a["spec"] == rec_b["spec"]
+    assert rec_a["accuracy"] == rec_b["accuracy"]
+    assert rec_a["total_T_s"] == rec_b["total_T_s"]
+    assert rec_a["total_E_J"] == rec_b["total_E_J"]
+
+
+def test_cells_flag_builds_interference_fleet():
+    from repro.launch.fl_sim import spec_from_args
+    import argparse
+    ns = argparse.Namespace(spec=None, dataset="mnist",
+                            selection="divergence", allocator="sao",
+                            box_correct=False, rounds=2, clients=8,
+                            per_round=4, sigma="0.8", local_iters=2,
+                            lr=0.05, target_acc=0.0, seed=0, cohort=1,
+                            fleet_spec=None, cells=2, channel=None)
+    spec = spec_from_args(ns)
+    assert spec.num_cells == 2
+    assert spec.fleet.channel["name"] == "multicell-interference"

@@ -236,6 +236,23 @@ def test_cohort_matches_per_seed_runs():
 
 @pytest.mark.slow
 def test_cohort_rejects_untraceable_bundle():
-    spec = ExperimentSpec(**TINY, cohort=2, allocator="fedl:1.0")
-    with pytest.raises(ValueError, match="all-traceable"):
-        build_cohort(spec).run()
+    # every built-in allocator is traceable now (FEDL's λ tuning moved into
+    # the scan), so pin the rejection path with an ad-hoc host-only one
+    from dataclasses import dataclass
+
+    from repro.api import ALLOCATORS, Strategy
+
+    @ALLOCATORS.register("test_host_only")
+    @dataclass(frozen=True)
+    class HostOnly(Strategy):
+        traceable = False
+
+        def allocate(self, arr, B):
+            raise NotImplementedError
+
+    try:
+        spec = ExperimentSpec(**TINY, cohort=2, allocator="test_host_only")
+        with pytest.raises(ValueError, match="all-traceable"):
+            build_cohort(spec).run()
+    finally:
+        ALLOCATORS._classes.pop("test_host_only")
