@@ -78,12 +78,17 @@ class RoundState(NamedTuple):
       key           : jax PRNG key driving selection + local SGD
       labels        : [N] int32 K-means cluster labels (Alg. 2; zeros until
                       the initial round has run)
+      channel       : channel-model state riding in the scan carry (e.g. the
+                      Gauss-Markov complex fading amplitude; the model's
+                      ``init_state`` defines it — ``None`` for memoryless
+                      channels, populated INSIDE the traced program)
     """
     params: Any
     client_params: Any
     opt_state: Any
     key: Any
     labels: Any
+    channel: Any = None
 
 
 @dataclass(frozen=True)
@@ -143,27 +148,49 @@ class ChannelModel(Protocol):
     """Pluggable physical channel (registry: ``CHANNELS`` /
     ``@register_channel``).
 
-    Two hooks, two time scales:
+    Hooks, by time scale:
 
     * ``sample_gains(rng, d_km)`` — host-side large-scale fading at fleet
       build time (path loss + shadowing from BS–device distance); consumed
       by ``repro.api.scenario.build_fleet``.
-    * ``apply_traced(key, arr)`` — per-round small-scale fading INSIDE the
-      scanned round pipeline: transform the round's ``fleet_arrays`` dict
-      (e.g. redraw a Rayleigh block-fading multiplier on J). Pure jnp; the
-      engine splits ``key`` off the round PRNG stream only when
-      ``needs_rng`` — a model with ``needs_rng = False`` leaves the stream
-      (and the compiled program) untouched, bit-identical to no channel
-      hook at all.
+    * ``apply_traced(key, arr)`` — MEMORYLESS per-round small-scale fading
+      INSIDE the scanned round pipeline: transform the round's
+      ``fleet_arrays`` dict (e.g. redraw a Rayleigh block-fading multiplier
+      on J). Pure jnp; the engine splits ``key`` off the round PRNG stream
+      only when ``needs_rng`` — a model with ``needs_rng = False`` leaves
+      the stream (and the compiled program) untouched, bit-identical to no
+      channel hook at all.
+    * ``init_state(key, arr)`` / ``step_traced(key, state, arr)`` —
+      ROUND-COUPLED channel dynamics for models with ``stateful = True``:
+      the state pytree returned by ``init_state`` rides in the
+      ``RoundState.channel`` slot of the ``lax.scan`` carry, and every
+      round the engine calls ``step_traced`` (instead of ``apply_traced``)
+      to evolve it and produce that round's faded arrays — e.g. the
+      Gauss-Markov AR(1) complex amplitude h_t = ρ·h_{t−1} + √(1−ρ²)·w_t.
+      Models without the attribute (``stateful`` defaults False via
+      ``getattr``) keep the memoryless contract, so pre-existing custom
+      channels are untouched.
+
+    Build-time cross-cell geometry is a fourth, optional hook: a channel
+    exposing ``cross_gain_matrix(...)`` (see ``multicell-dynamic``) makes
+    ``build_fleet`` precompute the per-device interference contribution at
+    every BS, and the engine folds the *selected* devices' contributions
+    into each cell's rate every round.
     """
 
     traceable: bool
     needs_rng: bool                   # split a per-round fading key?
+    stateful: bool                    # carry channel state through the scan?
 
     def sample_gains(self, rng: np.random.Generator,
                      d_km: np.ndarray) -> np.ndarray: ...
 
     def apply_traced(self, key, arr: Dict[str, Any]) -> Dict[str, Any]: ...
+
+    def init_state(self, key, arr: Dict[str, Any]) -> Any: ...
+
+    def step_traced(self, key, state: Any,
+                    arr: Dict[str, Any]) -> Tuple[Any, Dict[str, Any]]: ...
 
 
 @runtime_checkable

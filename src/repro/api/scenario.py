@@ -5,7 +5,8 @@ host-side sampling.
     FleetSpec                       # topology: cells × device distributions
       └── CellSpec × C              # per-cell geometry, counts, power/energy
     ChannelModel registry           # @register_channel: static | rayleigh-
-                                    # block | multicell-interference | yours
+                                    # block | gauss-markov:<rho> | multicell-
+                                    # interference | multicell-dynamic | yours
     build_fleet(spec, seed)         # → pytree-native Fleet (traces through
                                     #   engine.run_rounds / CohortRunner)
 
@@ -34,7 +35,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api.registry import CHANNELS, Strategy, register_channel
+from repro.api.registry import (CHANNELS, Strategy, StrategyError,
+                                register_channel)
 from repro.core.wireless import (CELL_RADIUS_KM, DEFAULT_ALPHA, DEFAULT_B_MHZ,
                                  DEFAULT_CYCLES_RANGE, DEFAULT_E_CONS_RANGE,
                                  DEFAULT_F_MAX_GHZ, DEFAULT_F_MIN_GHZ,
@@ -53,7 +55,8 @@ CELL_SEED_STRIDE = 7919
 
 __all__ = ["CellSpec", "FleetSpec", "build_fleet", "CHANNELS",
            "register_channel", "StaticChannel", "RayleighBlockChannel",
-           "MulticellInterferenceChannel"]
+           "GaussMarkovChannel", "MulticellInterferenceChannel",
+           "MulticellDynamicChannel"]
 
 
 # ---------------------------------------------------------------------------
@@ -69,6 +72,30 @@ def _largescale_gains(rng, d_km, shadow_db):
     return 10.0 ** (-pl_db / 10.0)
 
 
+_SQRT_HALF = float(np.sqrt(0.5))
+
+
+def _gm_init(key, arr):
+    """CN(0,1) complex fading amplitude h_0 as a trailing-[2] real array
+    (re, im), so E|h|² = 1 and the state pytree stays real-dtype."""
+    J = arr["J"]
+    return jax.random.normal(key, J.shape + (2,), J.dtype) * _SQRT_HALF
+
+
+def _gm_step(rho, floor, key, h, arr):
+    """One AR(1) step h_t = ρ·h_{t−1} + √(1−ρ²)·w_t (w ~ CN(0,1)); the
+    round's power gain is |h_t|², unit-mean at every lag. Shared by
+    ``gauss-markov`` and ``rayleigh-block`` (its ρ = 0 special case), which
+    is what makes the ``gauss-markov:0 ≡ rayleigh-block`` pin bit-exact."""
+    J = arr["J"]
+    w = jax.random.normal(key, J.shape + (2,), J.dtype) * _SQRT_HALF
+    h = rho * h + np.sqrt(max(1.0 - rho * rho, 0.0)) * w
+    gain = jnp.sum(jnp.square(h), axis=-1)
+    out = dict(arr)
+    out["J"] = J * jnp.maximum(gain, floor)
+    return h, out
+
+
 @register_channel("static")
 @dataclass(frozen=True)
 class StaticChannel(Strategy):
@@ -80,6 +107,7 @@ class StaticChannel(Strategy):
 
     traceable = True
     needs_rng = False
+    stateful = False
 
     def sample_gains(self, rng, d_km):
         return _largescale_gains(rng, d_km, self.shadow_db)
@@ -88,29 +116,75 @@ class StaticChannel(Strategy):
         return arr
 
 
-@register_channel("rayleigh-block")
+@register_channel("gauss-markov")
 @dataclass(frozen=True)
-class RayleighBlockChannel(Strategy):
-    """Block Rayleigh fading: the large-scale gain of :class:`StaticChannel`
-    times a unit-mean exponential power coefficient |g|² redrawn EVERY
-    round inside the scanned program — no host round-trips. ``floor``
-    clamps deep fades so the SAO bisection brackets stay finite.
-    Spelled ``rayleigh-block:<floor>`` in compact form."""
+class GaussMarkovChannel(Strategy):
+    """First-order Gauss-Markov (Jakes-like) time-correlated fading: the
+    complex amplitude evolves as h_t = ρ·h_{t−1} + √(1−ρ²)·w_t with
+    w ~ CN(0,1) and h_0 ~ CN(0,1), so the per-round power coefficient
+    |h_t|² is unit-mean exponential at every lag with round-to-round
+    correlation ρ² — the fading STATE rides in the ``lax.scan`` carry
+    (``RoundState.channel``), making selection-policy memory matter.
 
+    ``rho = 0`` is memoryless block-Rayleigh (``rayleigh-block`` is exactly
+    this special case); ``rho = 1`` freezes the first draw for the whole
+    run. ``floor`` clamps deep fades so the SAO bisection brackets stay
+    finite. Spelled ``gauss-markov:<rho>`` in compact form."""
+
+    rho: float = 0.9
     floor: float = 1e-3
     shadow_db: float = SHADOW_STD_DB
 
     traceable = True
     needs_rng = True
+    stateful = True
+
+    def __post_init__(self):
+        if not 0.0 <= self.rho <= 1.0:
+            raise ValueError(f"gauss-markov rho must be in [0, 1]; "
+                             f"got {self.rho}")
 
     def sample_gains(self, rng, d_km):
         return _largescale_gains(rng, d_km, self.shadow_db)
 
+    def init_state(self, key, arr):
+        return _gm_init(key, arr)
+
+    def step_traced(self, key, state, arr):
+        return _gm_step(self.rho, self.floor, key, state, arr)
+
     def apply_traced(self, key, arr):
-        fade = jax.random.exponential(key, arr["J"].shape, arr["J"].dtype)
-        out = dict(arr)
-        out["J"] = arr["J"] * jnp.maximum(fade, self.floor)
-        return out
+        # memoryless fallback (a ρ=0 draw) for callers outside the stateful
+        # engine path; the scanned pipeline uses init_state/step_traced
+        return _gm_step(0.0, self.floor, key, 0.0, arr)[1]
+
+
+@register_channel("rayleigh-block")
+@dataclass(frozen=True)
+class RayleighBlockChannel(GaussMarkovChannel):
+    """Block Rayleigh fading: the large-scale gain of :class:`StaticChannel`
+    times a unit-mean |CN(0,1)|² power coefficient redrawn EVERY round
+    inside the scanned program — no host round-trips. Re-expressed as the
+    ρ = 0 special case of :class:`GaussMarkovChannel` (same draws, pinned
+    bit-identical), so the fading state machinery has exactly one
+    implementation. ``floor`` clamps deep fades so the SAO bisection
+    brackets stay finite. Spelled ``rayleigh-block:<floor>`` in compact
+    form."""
+
+    rho: float = dataclasses.field(default=0.0, init=False)
+    floor: float = 1e-3
+    shadow_db: float = SHADOW_STD_DB
+
+    @classmethod
+    def from_string(cls, arg):
+        if arg in (None, ""):
+            return cls()
+        try:
+            return cls(floor=float(arg))
+        except ValueError:
+            raise StrategyError(
+                f"rayleigh-block:{arg}: expected a number for "
+                "'floor'") from None
 
 
 @register_channel("multicell-interference")
@@ -135,6 +209,7 @@ class MulticellInterferenceChannel(Strategy):
 
     traceable = True
     needs_rng = False
+    stateful = False
 
     def sample_gains(self, rng, d_km):
         return _largescale_gains(rng, d_km, self.shadow_db)
@@ -163,6 +238,86 @@ class MulticellInterferenceChannel(Strategy):
                 psd += float(np.mean(g * p_watt[k])) / (bandwidth_mhz * 1e6)
             inr[cell_ids == c] = self.load * psd / N0
         return inr
+
+
+@register_channel("multicell-dynamic")
+@dataclass(frozen=True)
+class MulticellDynamicChannel(Strategy):
+    """Multi-cell uplink with SELECTION-DRIVEN interference: instead of the
+    build-time average-load PSD of ``multicell-interference``, each round's
+    ``inr`` at BS c is the sum of the contributions of the devices the
+    OTHER cells actually selected that round — computed inside the scanned
+    round pipeline, so scheduling policies feel the interference their
+    neighbors cause (and cause interference in turn).
+
+    ``build_fleet`` precomputes the cross-gain matrix via
+    :meth:`cross_gain_matrix` (deterministic path loss on cross links, like
+    the static model, so serving-link RNG streams stay identical to
+    ``static``); the engine folds the selected rows into each cell's rate
+    before spectrum allocation. ``load`` scales every contribution (an
+    activity/duty factor). With one cell the cross matrix is empty and the
+    model is bit-identical to ``static``. Device selection itself sees the
+    pre-interference gains — a cell cannot observe the other cells'
+    simultaneous choices before they are made (causal scheduling).
+    Spelled ``multicell-dynamic:<load>`` in compact form.
+
+    ``rho`` (None → off) additionally runs :class:`GaussMarkovChannel`
+    AR(1) correlated fading on each device's SERVING link — dynamic
+    interference + time-correlated channels in ONE scanned program
+    (``{"name": "multicell-dynamic", "params": {"rho": 0.9}}``). Cross
+    links stay large-scale only: interference at a BS sums many devices,
+    so per-link fading averages out there first.
+    """
+
+    load: float = 1.0
+    shadow_db: float = SHADOW_STD_DB
+    rho: Optional[float] = None       # serving-link Gauss-Markov fading
+    floor: float = 1e-3
+
+    traceable = True
+    dynamic = True                    # per-round inr from actual selections
+
+    def __post_init__(self):
+        if self.rho is not None and not 0.0 <= self.rho <= 1.0:
+            raise ValueError(f"multicell-dynamic rho must be in [0, 1]; "
+                             f"got {self.rho}")
+
+    @property
+    def needs_rng(self):
+        return self.rho is not None
+
+    @property
+    def stateful(self):
+        return self.rho is not None
+
+    def sample_gains(self, rng, d_km):
+        return _largescale_gains(rng, d_km, self.shadow_db)
+
+    def apply_traced(self, key, arr):
+        return arr
+
+    def init_state(self, key, arr):
+        return _gm_init(key, arr)
+
+    def step_traced(self, key, state, arr):
+        return _gm_step(self.rho, self.floor, key, state, arr)
+
+    def cross_gain_matrix(self, pos_km, p_watt, cell_ids, centers_km,
+                          bandwidth_mhz: float, N0: float) -> np.ndarray:
+        """``X[n, c]`` — the inr contribution device ``n`` adds at BS ``c``
+        when it transmits: ``load · g_{n→c} · p_n / (B·1e6 · N0)``
+        (dimensionless, same normalization as the static model's PSD). The
+        own-cell column is zero, so a per-round reduction over the selected
+        rows directly yields each BS's I/N0 from the *other* cells."""
+        cell_ids = np.asarray(cell_ids)
+        n = len(cell_ids)
+        X = np.zeros((n, len(centers_km)))
+        for c, (cx, cy) in enumerate(centers_km):
+            d = np.hypot(pos_km[:, 0] - cx, pos_km[:, 1] - cy)
+            g = 10.0 ** (-PATHLOSS_DB(d) / 10.0)
+            X[:, c] = self.load * g * p_watt / (bandwidth_mhz * 1e6) / N0
+        X[np.arange(n), cell_ids] = 0.0
+        return X
 
 
 # ---------------------------------------------------------------------------
@@ -346,7 +501,14 @@ def build_fleet(spec: FleetSpec, seed: int = 0, *,
     pos = cat.pop("pos")
     N0 = dbm_to_watt(spec.noise_dbm_per_hz)
     inr = np.zeros(len(cat["h"]))
-    if hasattr(channel, "cross_cell_inr"):
+    xgain = None
+    if hasattr(channel, "cross_gain_matrix"):
+        # dynamic interference: precompute each device's per-BS inr
+        # contribution; the per-round I/N0 is reduced from the actual
+        # selections inside the scanned program (build-time inr stays 0)
+        xgain = channel.cross_gain_matrix(pos, cat["p"], cat["cell"],
+                                          centers, bandwidth_mhz, N0)
+    elif hasattr(channel, "cross_cell_inr"):
         inr = channel.cross_cell_inr(pos, cat["p"], cat["cell"], centers,
                                      bandwidth_mhz, N0)
-    return Fleet(L=spec.local_iters, N0=N0, inr=inr, **cat)
+    return Fleet(L=spec.local_iters, N0=N0, inr=inr, xgain=xgain, **cat)

@@ -2,9 +2,8 @@
 K-means device clustering (Alg. 2-3), weight-divergence selection (Alg. 4),
 the FedAvg loop (Alg. 1), the wireless system model (eqs. 5-11), and the
 compared baselines."""
-from repro.core.wireless import (DeviceFleet, Fleet, effective_arrays,
-                                 sample_fleet, fleet_arrays, round_totals,
-                                 rate_mbps)
+from repro.core.wireless import (Fleet, effective_arrays, sample_fleet,
+                                 fleet_arrays, round_totals, rate_mbps)
 from repro.core.sao import solve_sao, kkt_residuals, SAOSolution
 from repro.core.baselines import (equal_bandwidth, fedl_lambda,
                                   tune_fedl_lambda, AllocResult)

@@ -63,10 +63,12 @@ def equal_bandwidth(arr: Dict[str, jnp.ndarray], B: float,
     t = arr["z"] / _Q(b_q, arr["J"]) + arr["U"] / f
     e = arr["G"] * jnp.square(f) + ecom
     if mask is not None:
-        t = jnp.where(mask, t, -jnp.inf)
         e = jnp.where(mask, e, 0.0)
         f = jnp.where(mask, f, 0.0)
-    return AllocResult(T=jnp.max(t), b=b, f=f, e=e,
+    # masked_max guards the empty-selection edge: an all-False mask (a
+    # participation policy that admitted nobody) yields T = 0, not the
+    # -inf that would poison the scanned history
+    return AllocResult(T=masked_max(t, mask), b=b, f=f, e=e,
                        feasible=e <= arr["e_cons"] + 1e-6)
 
 
@@ -184,9 +186,9 @@ def _fedl_solve(arr, B, lam, n_grid: int, mask):
     b_q = b if mask is None else jnp.where(mask, b, 1.0)
     t = arr["z"] / _Q(b_q, arr["J"]) + arr["U"] / f
     if mask is not None:
-        t = jnp.where(mask, t, -jnp.inf)
         b, f, e = (jnp.where(mask, v, 0.0) for v in (b, f, e))
-    return AllocResult(T=jnp.max(t), b=b, f=f, e=e,
+    # masked_max: empty selections return T = 0 instead of -inf
+    return AllocResult(T=masked_max(t, mask), b=b, f=f, e=e,
                        feasible=e <= arr["e_cons"] + 1e-6)
 
 

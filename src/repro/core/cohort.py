@@ -9,11 +9,14 @@ maps the scanned multi-round run over it, and ``jax.sharding`` splits that
 axis across the local devices. One dispatch, one device→host transfer for
 the entire cohort history.
 
-Multi-cell ``FleetSpec`` scenarios stack the cells axis next to the cohort
-axis: lane ``s·C + c`` is (seed ``s``, cell ``c``) — each cell an
-independent FL system whose fleet carries the cross-cell interference term
-— so an interference sweep is the SAME single scanned program, just vmapped
-over more lanes.
+Multi-cell ``FleetSpec`` scenarios with a dynamic-interference channel
+(``multicell-dynamic``) vmap over SEEDS only: each seed's cells ride an
+inner ``[C]`` axis INSIDE the traced program (``engine``'s cells axis),
+where one cross-cell reduction per round couples their selections.
+Uncoupled multi-cell sweeps (build-time interference) keep the flat
+(seed, cell) lane layout so the mesh shards every lane across devices.
+Either way the history exposes the flat lane layout ``s·C + c`` (seed
+``s``, cell ``c``) and the sweep is ONE scanned program.
 
     runner = CohortRunner(ExperimentSpec(..., cohort=8))
     ch = runner.run()                  # 8 seeds (× cells), one XLA program
@@ -41,15 +44,27 @@ def _tree_stack(trees):
 
 
 def cohort_mesh(cohort_size: int):
-    """A 1-axis ``("cohort",)`` mesh over the largest local-device count
-    dividing the cohort, or None on a single-device host (plain vmap)."""
+    """A 1-axis ``("cohort",)`` mesh over ``min(local devices, cohort)``
+    devices, or None on a single-device host (plain vmap).
+
+    The cohort axis need not divide the device count: the runner PADS it up
+    to the next multiple (``_mesh_pad``) and strips the pad lanes from the
+    history, so no local device idles. (The old behavior — shrink to the
+    largest divisor — silently serialized awkward sizes: 5 lanes on 4
+    devices degenerated to a single-device vmap running all 5
+    sequentially.)"""
     devs = jax.devices()
-    n = len(devs)
-    while n > 1 and cohort_size % n:
-        n -= 1
+    n = min(len(devs), cohort_size)
     if n <= 1:
         return None
     return jax.sharding.Mesh(np.array(devs[:n]), ("cohort",))
+
+
+def _mesh_pad(lanes: int, mesh) -> int:
+    """How many pad lanes make ``lanes`` divide the mesh's device count."""
+    if mesh is None:
+        return 0
+    return (-lanes) % mesh.devices.size
 
 
 def _shard_cohort(tree, mesh):
@@ -77,6 +92,9 @@ class CohortHistory:
     with_init: bool
     num_devices: int
     cells: int = 1                    # cells per seed (lane = s·cells + c)
+    inr: Optional[np.ndarray] = None  # [B, rounds] per-round selection-
+                                      # driven I/N0 at each lane's BS
+                                      # (dynamic-interference channels only)
 
     @property
     def lane_cells(self) -> List[int]:
@@ -143,10 +161,18 @@ class CohortRunner:
 
     def run(self, seeds: Optional[Sequence[int]] = None,
             rounds: Optional[int] = None,
-            reuse_experiments: bool = False) -> CohortHistory:
+            reuse_experiments: bool = False,
+            transfer_guard: bool = False) -> CohortHistory:
         """Execute the cohort. ``reuse_experiments=True`` skips rebuilding
         the per-seed datasets/fleets when this runner already holds them
-        (benchmarking repeat runs; training state continues where it was)."""
+        (benchmarking repeat runs; training state continues where it was).
+
+        ``transfer_guard=True`` wraps the single program dispatch in
+        ``jax.transfer_guard_device_to_host("disallow")`` — the CI bench
+        gate proving the whole multi-round cohort really executes as ONE
+        scanned program with no per-round host round-trips (any mid-run
+        device→host sync raises instead of silently serializing).
+        """
         if seeds is None:
             seeds = [self.spec.seed + i
                      for i in range(max(int(getattr(self.spec, "cohort", 1)),
@@ -168,27 +194,47 @@ class CohortRunner:
                 f"aggregator={e0.aggregator.registry_name!r}, "
                 f"compressor={e0.compressor.registry_name!r}")
 
-        # per-lane pytrees, stacked on the cohort axis and device-sharded
-        B = len(lane_seeds)
-        mesh = cohort_mesh(B)
-        state = _shard_cohort(_tree_stack([e.traced_state() for e in exps]),
-                              mesh)
-        images = _shard_cohort(jnp.stack([e._images for e in exps]), mesh)
-        labels = _shard_cohort(jnp.stack([e._labels for e in exps]), mesh)
-        sizes = _shard_cohort(jnp.stack([e._sizes for e in exps]), mesh)
-        arr = _shard_cohort(
-            _tree_stack([fleet_arrays(e.fleet) for e in exps]), mesh)
+        # A dynamic-interference channel needs the cells of one seed INSIDE
+        # one program instance (the engine's cells axis) so their per-round
+        # selections can couple — then the cohort axis is SEEDS. Uncoupled
+        # multi-cell sweeps keep the flat (seed, cell) lane layout so the
+        # mesh can still shard every lane across devices. Pad lanes
+        # replicate the last group up to a device-count multiple and are
+        # stripped from the history.
+        dynamic = cells > 1 and getattr(e0.channel, "dynamic", False)
+        prog_cells = cells if dynamic else 1
+        if dynamic:
+            groups = [exps[i * cells:(i + 1) * cells]
+                      for i in range(len(seeds))]
+        else:
+            groups = [[e] for e in exps]
+        mesh = cohort_mesh(len(groups))
+        pad = _mesh_pad(len(groups), mesh)
+        groups = groups + [groups[-1]] * pad
+
+        def stack(fn):
+            per_lane = [(_tree_stack([fn(e) for e in g]) if prog_cells > 1
+                         else fn(g[0])) for g in groups]
+            return _shard_cohort(_tree_stack(per_lane), mesh)
+
+        state = stack(lambda e: e.traced_state())
+        images = stack(lambda e: e._images)
+        labels = stack(lambda e: e._labels)
+        sizes = stack(lambda e: e._sizes)
+        arr = stack(lambda e: fleet_arrays(e.fleet))
         # the evaluation set is shared across the cohort iff every seed
-        # resolves the same test data (the common sweep protocol)
+        # resolves the same test data (the common sweep protocol); it is
+        # stacked per outer lane — never on the inner cells axis, which a
+        # seed's cells always share
         test_shared = len({e.spec.resolved_test_seed if hasattr(e, "spec")
                            else id(e) for e in exps}) == 1
         if test_shared:
             test_images, test_labels = e0.test_images, e0.test_labels
         else:
             test_images = _shard_cohort(
-                jnp.stack([e.test_images for e in exps]), mesh)
+                jnp.stack([g[0].test_images for g in groups]), mesh)
             test_labels = _shard_cohort(
-                jnp.stack([e.test_labels for e in exps]), mesh)
+                jnp.stack([g[0].test_labels for g in groups]), mesh)
 
         fn = run_rounds(e0.engine.cfg, selector=e0.selector,
                         allocator=e0.allocator, aggregator=e0.aggregator,
@@ -196,29 +242,48 @@ class CohortRunner:
                         feature_layer=e0.fl.feature_layer, rounds=rounds,
                         with_init=True, cohort=True,
                         test_shared=test_shared, mesh=mesh,
-                        channel=e0.channel)
-        res: TracedRunResult = fn(state, images, labels, sizes, arr,
-                                  test_images, test_labels)
+                        channel=e0.channel, cells=prog_cells)
+        if transfer_guard:
+            with jax.transfer_guard_device_to_host("disallow"):
+                res: TracedRunResult = fn(state, images, labels, sizes, arr,
+                                          test_images, test_labels)
+        else:
+            res = fn(state, images, labels, sizes, arr,
+                     test_images, test_labels)
 
-        # sync each lane's final state back into its host experiment
+        # sync each real lane's final state back into its host experiment
+        # (pad lanes are dropped)
         for i, e in enumerate(exps):
-            e.load_traced_state(jax.tree_util.tree_map(lambda x, i=i: x[i],
-                                                       res.state))
+            s, c = divmod(i, prog_cells)
+            pick = ((lambda x, s=s, c=c: x[s, c]) if prog_cells > 1
+                    else (lambda x, s=s: x[s]))
+            e.load_traced_state(jax.tree_util.tree_map(pick, res.state))
         return self._history(lane_seeds, res, e0.fed.num_clients,
-                             cells=cells)
+                             cells=cells, prog_cells=prog_cells)
 
     @staticmethod
-    def _history(seeds, res: TracedRunResult,
-                 num_devices: int, cells: int = 1) -> CohortHistory:
-        accs, Ts, Es, sel, msk = (np.asarray(x) for x in (
+    def _history(seeds, res: TracedRunResult, num_devices: int,
+                 cells: int = 1, prog_cells: int = 1) -> CohortHistory:
+        if prog_cells > 1:
+            def lanes_first(x):
+                """[S, R, C, ...] → [S·C, R, ...] (lane = s·cells + c)."""
+                x = np.moveaxis(np.asarray(x), 2, 1)
+                return x.reshape((-1,) + x.shape[2:])
+        else:
+            lanes_first = np.asarray
+        accs, Ts, Es, sel, msk = (lanes_first(x) for x in (
             res.rounds.accuracy, res.rounds.T, res.rounds.E,
             res.rounds.selected, res.rounds.mask))
-        acc0, T0, E0 = (np.asarray(x)[:, None] for x in (
+        acc0, T0, E0 = (np.asarray(x).reshape(-1)[:, None] for x in (
             res.init_accuracy, res.init_T, res.init_E))
+        inr = (None if res.rounds.inr is None
+               else lanes_first(res.rounds.inr))
+        B = len(seeds)                 # true lane count; pads sliced off
         return CohortHistory(
             seeds=list(seeds),
-            accuracy=np.concatenate([acc0, accs], axis=1),
-            T_k=np.concatenate([T0, Ts], axis=1),
-            E_k=np.concatenate([E0, Es], axis=1),
-            selected=sel, mask=msk, with_init=True,
-            num_devices=num_devices, cells=cells)
+            accuracy=np.concatenate([acc0, accs], axis=1)[:B],
+            T_k=np.concatenate([T0, Ts], axis=1)[:B],
+            E_k=np.concatenate([E0, Es], axis=1)[:B],
+            selected=sel[:B], mask=msk[:B], with_init=True,
+            num_devices=num_devices, cells=cells,
+            inr=None if inr is None else inr[:B])

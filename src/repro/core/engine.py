@@ -149,12 +149,16 @@ def _eval_fn(params, test_images, test_labels, *, cnn_cfg: CNNConfig):
 
 
 class RoundOutputs(NamedTuple):
-    """Per-round stacked history a traced run produces ([R] / [R, S_pad])."""
+    """Per-round stacked history a traced run produces ([R] / [R, S_pad];
+    a cells>1 program inserts a cells axis after R). ``inr`` is the round's
+    selection-driven I/N0 per cell (dynamic-interference channels only,
+    None otherwise)."""
     accuracy: Any
     T: Any
     E: Any
     selected: Any
     mask: Any
+    inr: Any = None
 
 
 class TracedRunResult(NamedTuple):
@@ -171,7 +175,7 @@ class TracedRunResult(NamedTuple):
 def _traced_round_program(cfg: EngineConfig, selector, allocator,
                           agg_name: str, agg_params: tuple, compressor,
                           tctx: TracedContext, feature_layer: str,
-                          channel=None):
+                          channel=None, cells: int = 1):
     """The pure (unjitted) traced experiment fn for one strategy bundle.
 
     All arguments are hashable trace-time constants: ``selector`` /
@@ -181,9 +185,19 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
     closure → one XLA program per (rounds, with_init, cohort) variant.
 
     ``channel`` (a registered ``ChannelModel``) redraws per-round fading
-    INSIDE the scan via ``apply_traced``; a model with ``needs_rng=False``
-    (``static``, ``multicell-interference``) leaves both the PRNG stream
-    and the compiled program untouched.
+    INSIDE the scan — memoryless models via ``apply_traced``, stateful
+    models (``gauss-markov``) via ``init_state``/``step_traced`` with the
+    fading state riding in the ``RoundState.channel`` carry slot; a model
+    with ``needs_rng=False`` and ``stateful=False`` (``static``,
+    ``multicell-interference``) leaves both the PRNG stream and the
+    compiled program untouched.
+
+    ``cells > 1`` gives every per-cell argument (state, data, fleet
+    arrays) a leading cells axis INSIDE one traced program: each round is
+    an inner vmap over per-cell select → allocate → train → aggregate,
+    with one cross-cell reduction in between when the channel is dynamic
+    (``multicell-dynamic``) — each BS's I/N0 is summed from the cross-gain
+    rows of the devices the OTHER cells actually selected that round.
     """
     from repro.api.registry import AGGREGATORS
     from repro.core.clustering import extract_features, kmeans_fit
@@ -201,13 +215,34 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
     vmapped_update = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
     N, B = tctx.num_devices, tctx.bandwidth_mhz
     channel_rng = channel is not None and getattr(channel, "needs_rng", False)
+    channel_stateful = (channel is not None
+                        and getattr(channel, "stateful", False))
+    dynamic = (cells > 1 and channel is not None
+               and getattr(channel, "dynamic", False))
 
-    def draw_channel(state, arr):
-        """Per-round fading draw (one key split, only for rng channels)."""
-        if not channel_rng:
+    def init_channel(state, arr):
+        """Populate the carry's channel-state slot (one key split, only
+        for stateful models — keyless/memoryless channels leave the PRNG
+        stream untouched)."""
+        if not channel_stateful:
+            return state
+        key, k0 = jax.random.split(state.key)
+        return state._replace(key=key, channel=channel.init_state(k0, arr))
+
+    def step_channel(state, arr):
+        """Per-round fading: evolve the carried state (stateful models) or
+        draw memorylessly (rng models); a no-op for everything else."""
+        if not (channel_rng or channel_stateful):
             return state, arr
-        key, k_ch = jax.random.split(state.key)
-        return state._replace(key=key), channel.apply_traced(k_ch, arr)
+        if channel_rng:
+            key, k_ch = jax.random.split(state.key)
+            state = state._replace(key=key)
+        else:
+            k_ch = None
+        if channel_stateful:
+            ch_state, arr = channel.step_traced(k_ch, state.channel, arr)
+            return state._replace(channel=ch_state), arr
+        return state, channel.apply_traced(k_ch, arr)
 
     def train_aggregate(state, idx, mask, images, labels, sizes):
         """Local training of ``idx`` + store + aggregate (masked weights).
@@ -233,10 +268,12 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         return state._replace(params=new_global, client_params=new_client,
                               opt_state=opt_state, key=key)
 
-    def init_round(state, images, labels, sizes, arr, test_images,
-                   test_labels):
+    def init_round(state, images, labels, sizes, arr, inr_round,
+                   test_images, test_labels):
         """Round 0 (Alg. 1 line 1 + Alg. 2): all devices train, aggregate,
-        K-means-cluster on the chosen feature layer, evaluate + allocate."""
+        K-means-cluster on the chosen feature layer, evaluate + allocate.
+        ``inr_round`` (dynamic interference, all devices active) folds into
+        the allocation's rate; None otherwise."""
         all_idx = jnp.arange(N)
         state = train_aggregate(state, all_idx, None, images, labels, sizes)
         feats = extract_features(state.client_params, feature_layer)
@@ -245,16 +282,18 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         state = state._replace(key=key, labels=k_labels.astype(jnp.int32))
         acc0, _ = _eval_fn(state.params, test_images, test_labels,
                            cnn_cfg=cfg.cnn_cfg)
-        state, arr = draw_channel(state, arr)
+        state, arr = step_channel(state, arr)
+        if inr_round is not None:
+            arr = dict(arr)
+            arr["inr"] = arr["inr"] + inr_round
         T0, E0, _, _ = allocator.allocate_traced(arr, B, None)
         return state, (acc0, T0, E0)
 
-    def round_step(state, images, labels, sizes, arr, test_images,
-                   test_labels):
-        """One full FL round: (fade →) select → allocate → train →
-        aggregate → eval. The fading draw precedes selection so
-        channel-aware policies (icas, rra) see the round's actual gains."""
-        state, arr = draw_channel(state, arr)
+    def select_phase(state, arr):
+        """(fade →) divergence → select. The fading draw precedes
+        selection so channel-aware policies (icas, rra) see the round's
+        actual gains; returns the faded ``arr`` for the allocation."""
+        state, arr = step_channel(state, arr)
         if selector.needs_divergence:
             div = weight_divergence(state.client_params, state.params)
         else:
@@ -266,24 +305,80 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
             k_sel = None
         idx, mask = selector.select_traced(k_sel, div, state.labels, arr,
                                            tctx)
+        return state, arr, idx, mask
+
+    def finish_phase(state, arr, idx, mask, inr_round, images, labels,
+                     sizes, test_images, test_labels):
+        """allocate → train → aggregate → eval for one cell's selection.
+        ``inr_round`` adds the round's selection-driven interference on top
+        of any build-time ``inr`` before the solvers fold it into J."""
         arr_sel = {k: v[idx] for k, v in arr.items()}
+        if inr_round is not None:
+            arr_sel["inr"] = arr_sel["inr"] + inr_round
         T, E, _, _ = allocator.allocate_traced(arr_sel, B, mask)
         state = train_aggregate(state, idx, mask, images, labels, sizes)
         acc, _ = _eval_fn(state.params, test_images, test_labels,
                           cnn_cfg=cfg.cnn_cfg)
-        return state, RoundOutputs(accuracy=acc, T=T, E=E, selected=idx,
-                                   mask=mask)
+        return state, RoundOutputs(
+            accuracy=acc, T=T, E=E, selected=idx, mask=mask,
+            inr=None if inr_round is None else inr_round[0])
 
     def run(state, images, labels, sizes, arr, test_images, test_labels,
             rounds: int, with_init: bool):
-        init_out = None
-        if with_init:
-            state, init_out = init_round(state, images, labels, sizes, arr,
-                                         test_images, test_labels)
+        arr = dict(arr)
+        xg = arr.pop("xgain", None)          # [(cells,) N, C] cross gains
 
-        def step(s, _):
-            return round_step(s, images, labels, sizes, arr, test_images,
-                              test_labels)
+        if cells == 1:
+            # ---- single-cell layout (the PR-2 scanned program) --------
+            state = init_channel(state, arr)
+            init_out = None
+            if with_init:
+                state, init_out = init_round(state, images, labels, sizes,
+                                             arr, None, test_images,
+                                             test_labels)
+
+            def step(s, _):
+                s, arr_f, idx, mask = select_phase(s, arr)
+                return finish_phase(s, arr_f, idx, mask, None, images,
+                                    labels, sizes, test_images, test_labels)
+        else:
+            # ---- cells axis inside the program: inner vmap over cells,
+            # one cross-cell interference reduction per round ------------
+            state = jax.vmap(init_channel)(state, arr)
+
+            def cell_inr(part):
+                """[C, N] participation → [C, 1] I/N0 at each BS (summed
+                selected cross-gain rows; own-cell columns are 0)."""
+                return jnp.einsum("cn,cnk->k", part, xg)[:, None]
+
+            def dense_part(idx, mask):
+                """Scatter each cell's padded selection to a dense [C, N]
+                participation map (the OOB sentinel lanes drop)."""
+                return jax.vmap(
+                    lambda i, m: jnp.zeros((N,), jnp.float32)
+                    .at[i].add(m.astype(jnp.float32), mode="drop"))(idx, mask)
+
+            sel_v = jax.vmap(select_phase)
+            fin_v = jax.vmap(finish_phase,
+                             in_axes=(0, 0, 0, 0, 0 if dynamic else None,
+                                      0, 0, 0, None, None))
+            init_v = jax.vmap(init_round,
+                              in_axes=(0, 0, 0, 0, 0,
+                                       0 if dynamic else None, None, None))
+
+            init_out = None
+            if with_init:
+                inr0 = (cell_inr(jnp.ones((cells, N), jnp.float32))
+                        if dynamic else None)
+                state, init_out = init_v(state, images, labels, sizes, arr,
+                                         inr0, test_images, test_labels)
+
+            def step(s, _):
+                s, arr_f, idx, mask = sel_v(s, arr)
+                inr_r = (cell_inr(dense_part(idx, mask))
+                         if dynamic else None)
+                return fin_v(s, arr_f, idx, mask, inr_r, images, labels,
+                             sizes, test_images, test_labels)
 
         state, outs = lax.scan(step, state, None, length=rounds)
         if init_out is None:
@@ -310,7 +405,8 @@ def aggregator_cache_key(aggregator) -> tuple:
 def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
                compressor, tctx: TracedContext, feature_layer: str,
                rounds: int, with_init: bool, cohort: bool = False,
-               test_shared: bool = True, mesh=None, channel=None):
+               test_shared: bool = True, mesh=None, channel=None,
+               cells: int = 1):
     """The compiled multi-round experiment fn for one strategy bundle.
 
     Returns a jitted callable
@@ -320,6 +416,12 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
     ``cohort=True`` every data/state argument gains a leading cohort axis
     (vmapped) — the ``CohortRunner`` path; ``test_shared`` keeps the
     evaluation set un-mapped (one copy across the cohort).
+
+    ``cells > 1`` declares a cells axis INSIDE the program, right after
+    the cohort axis: per-cell state/data leaves are ``[C, ...]`` (or
+    ``[cohort, C, ...]``), each round inner-vmaps over the cells, and a
+    dynamic-interference channel couples them through one cross-cell
+    reduction per round. The evaluation set is always cell-shared.
 
     ``mesh`` (a 1-axis ``jax.sharding.Mesh`` named ``"cohort"``) splits the
     cohort axis across local devices via ``shard_map``: each device runs
@@ -333,13 +435,13 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
                 else tuple(d.id for d in mesh.devices.flat))
     key = (cfg, selector, allocator, aggregator_cache_key(aggregator),
            compressor, tctx, feature_layer, rounds, with_init, cohort,
-           test_shared, mesh_key, channel)
+           test_shared, mesh_key, channel, cells)
     fn = _RUN_FN_CACHE.get(key)
     if fn is None:
         prog = _traced_round_program(
             cfg, selector, allocator, aggregator.registry_name,
             tuple(sorted(aggregator.params().items())), compressor, tctx,
-            feature_layer, channel)
+            feature_layer, channel, cells)
         core = functools.partial(prog, rounds=rounds, with_init=with_init)
         if cohort:
             test_ax = None if test_shared else 0

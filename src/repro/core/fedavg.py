@@ -274,6 +274,13 @@ class FLExperiment:
         rounds = rounds or self.fl.max_rounds
         target = (self.fl.target_accuracy
                   if target_accuracy is None else target_accuracy)
+        if (getattr(self.channel, "dynamic", False)
+                and self.fleet.num_cells > 1):
+            raise ValueError(
+                f"channel {self.channel.registry_name!r} computes per-round "
+                "interference from the OTHER cells' selections; a single-"
+                "cell FLExperiment cannot see them — run the multi-cell "
+                "spec through CohortRunner (build_cohort / fl_sim --cells)")
         selector = (self.selector if method is None
                     else SELECTORS.resolve(method))
         bit_parity = not getattr(selector, "needs_rng", True)

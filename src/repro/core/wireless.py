@@ -15,7 +15,6 @@ device-resident round pipeline) as plain arrays. Declarative construction
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, fields
 
 import jax
@@ -59,11 +58,12 @@ class Fleet:
     """Per-device physical parameters for N devices.
 
     A registered pytree: the per-device arrays are leaves (so a ``Fleet``
-    passes through ``jit``/``vmap``/``lax.scan`` directly), while ``L`` and
-    ``N0`` are static aux data. Constructed either by :func:`sample_fleet`
-    (the paper's §VI single-cell draw) or declaratively from a
-    ``FleetSpec`` via ``repro.api.scenario.build_fleet`` (multi-cell
-    topologies, pluggable channel models).
+    passes through ``jit``/``vmap``/``lax.scan`` directly), while ``L``,
+    ``N0`` and ``n_cells`` are static aux data. Constructed either by
+    :func:`sample_fleet` (the paper's §VI single-cell draw) or
+    declaratively from a ``FleetSpec`` via
+    ``repro.api.scenario.build_fleet`` (multi-cell topologies, pluggable
+    channel models).
     """
     h: np.ndarray            # channel gain (linear)
     p: np.ndarray            # transmit power [W]
@@ -78,12 +78,21 @@ class Fleet:
     N0: float                # noise PSD [W/Hz]
     cell: np.ndarray = None  # serving-cell index per device (0 for single cell)
     inr: np.ndarray = None   # interference-to-noise ratio I/N0 at the serving BS
+    xgain: np.ndarray = None  # [N, C] per-device inr contribution at every BS
+                              # when the device transmits (dynamic-interference
+                              # channels; own-cell column is 0), else None
+    n_cells: int = None      # topology cell count — STATIC aux metadata, so
+                              # ``num_cells`` is trace-safe (no np.max on a
+                              # possibly-traced ``cell`` leaf, no host sync)
 
     def __post_init__(self):
         if self.cell is None:
             self.cell = np.zeros(np.shape(self.h), np.int32)
         if self.inr is None:
             self.inr = np.zeros(np.shape(self.h), np.float64)
+        if self.n_cells is None and not isinstance(self.cell, jax.core.Tracer):
+            n = int(np.max(np.asarray(self.cell))) + 1 if len(self.h) else 1
+            object.__setattr__(self, "n_cells", n)
 
     @property
     def num_devices(self) -> int:
@@ -91,7 +100,14 @@ class Fleet:
 
     @property
     def num_cells(self) -> int:
-        return int(np.max(np.asarray(self.cell))) + 1 if len(self.h) else 1
+        """Cell count of the topology this fleet was drawn from (host
+        metadata; a sub-fleet keeps its parent topology's count)."""
+        if self.n_cells is None:
+            raise ValueError(
+                "Fleet.num_cells is unknown: this Fleet was constructed "
+                "from traced arrays without n_cells= metadata; pass "
+                "n_cells explicitly when building fleets inside jit")
+        return self.n_cells
 
     # --- the paper's composite constants, eqs (15)-(18), scaled units ---
     def J_mhz(self):
@@ -117,46 +133,48 @@ class Fleet:
             D=self.D[idx], L=self.L, alpha=self.alpha[idx],
             f_min=self.f_min[idx], f_max=self.f_max[idx],
             e_cons=self.e_cons[idx], N0=self.N0, cell=self.cell[idx],
-            inr=self.inr[idx])
+            inr=self.inr[idx],
+            xgain=None if self.xgain is None else self.xgain[idx],
+            n_cells=self.n_cells)
 
     def cell_fleet(self, c: int) -> "Fleet":
-        """The sub-fleet served by cell ``c`` (device order preserved)."""
+        """The sub-fleet served by cell ``c`` (device order preserved;
+        ``num_cells`` stays the parent topology's count)."""
         return self.select(np.flatnonzero(np.asarray(self.cell) == c))
 
     def with_power(self, p_watt) -> "Fleet":
+        p = np.broadcast_to(np.asarray(p_watt, np.float64),
+                            self.h.shape).copy()
+        # xgain rows are proportional to the device's transmit power
+        # (X[n, c] = load·g·p_n / (B·N0)), so rescale them with it
+        xgain = (None if self.xgain is None
+                 else self.xgain * (p / self.p)[:, None])
         return Fleet(
-            h=self.h, p=np.broadcast_to(np.asarray(p_watt, np.float64),
-                                        self.h.shape).copy(),
+            h=self.h, p=p,
             z=self.z, C=self.C, D=self.D, L=self.L, alpha=self.alpha,
             f_min=self.f_min, f_max=self.f_max, e_cons=self.e_cons,
-            N0=self.N0, cell=self.cell, inr=self.inr)
+            N0=self.N0, cell=self.cell, inr=self.inr, xgain=xgain,
+            n_cells=self.n_cells)
 
 
 _FLEET_LEAVES = tuple(f.name for f in fields(Fleet)
-                      if f.name not in ("L", "N0"))
+                      if f.name not in ("L", "N0", "n_cells"))
 
 
 def _fleet_flatten(fl: Fleet):
-    return tuple(getattr(fl, n) for n in _FLEET_LEAVES), (fl.L, fl.N0)
+    return (tuple(getattr(fl, n) for n in _FLEET_LEAVES),
+            (fl.L, fl.N0, fl.n_cells))
 
 
 def _fleet_unflatten(aux, children):
     kw = dict(zip(_FLEET_LEAVES, children))
-    return Fleet(L=aux[0], N0=aux[1], **kw)
+    return Fleet(L=aux[0], N0=aux[1], n_cells=aux[2], **kw)
 
 
 jax.tree_util.register_pytree_node(Fleet, _fleet_flatten, _fleet_unflatten)
 
-
-class DeviceFleet(Fleet):
-    """Deprecated alias of :class:`Fleet` (kept importable one release)."""
-
-    def __post_init__(self):
-        warnings.warn(
-            "DeviceFleet is deprecated; use repro.core.wireless.Fleet "
-            "(same fields — DeviceFleet will be removed next release)",
-            DeprecationWarning, stacklevel=2)
-        super().__post_init__()
+# NOTE: the ``DeviceFleet`` deprecation alias promised for one release was
+# removed here — use :class:`Fleet` (identical fields).
 
 
 def sample_fleet(num_devices: int = 100, seed: int = 0, *,
@@ -237,11 +255,20 @@ def effective_arrays(arr):
     return out
 
 
-def masked_max(x, mask=None):
+def masked_max(x, mask=None, empty=0.0):
     """Max over the real lanes of a fixed-size padded selection (the one
-    padding convention every solver shares: pads are -inf for maxes)."""
-    return jnp.max(x) if mask is None else \
-        jnp.max(jnp.where(mask, x, -jnp.inf))
+    padding convention every solver shares: pads are -inf for maxes).
+
+    An all-False ``mask`` (empty selection — e.g. a participation policy
+    that admitted nobody this round) returns ``empty`` instead of the
+    ``-inf`` that would otherwise poison every downstream scanned-history
+    reduction. ``jnp.where(True, v, empty)`` is exactly ``v``, so
+    non-empty selections are bit-identical to the unguarded form.
+    """
+    if mask is None:
+        return jnp.max(x)
+    return jnp.where(jnp.any(mask), jnp.max(jnp.where(mask, x, -jnp.inf)),
+                     empty)
 
 
 def masked_sum(x, mask=None):
@@ -266,8 +293,11 @@ def fleet_arrays(fleet: Fleet):
 
     ``inr`` rides along so the solvers can fold interference into J
     (:func:`effective_arrays`); it is zeros for single-cell fleets.
+    ``xgain`` ([N, C] per-device inr contribution at each BS) rides along
+    only for dynamic-interference fleets; the scanned round pipeline pops
+    it before any solver sees the dict.
     """
-    return {
+    out = {
         "J": jnp.asarray(fleet.J_mhz(), jnp.float32),
         "U": jnp.asarray(fleet.U_gcycles(), jnp.float32),
         "G": jnp.asarray(fleet.G_joule_per_ghz2(), jnp.float32),
@@ -278,3 +308,6 @@ def fleet_arrays(fleet: Fleet):
         "f_max": jnp.asarray(fleet.f_max, jnp.float32),
         "inr": jnp.asarray(fleet.inr, jnp.float32),
     }
+    if fleet.xgain is not None:
+        out["xgain"] = jnp.asarray(fleet.xgain, jnp.float32)
+    return out

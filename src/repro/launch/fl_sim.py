@@ -133,8 +133,10 @@ def main(argv=None):
                          "topology + channel model (repro.api.scenario)")
     ap.add_argument("--cells", type=int, default=0,
                     help="shorthand: N default cells on the auto layout "
-                         "(N>1 implies the multicell-interference channel); "
-                         "runs (seeds × cells) lanes on the cohort engine")
+                         "(N>1 implies the multicell-interference channel; "
+                         "add --channel multicell-dynamic for selection-"
+                         "driven per-round interference); runs (seeds × "
+                         "cells) lanes on the cohort engine")
     ap.add_argument("--channel", default=None,
                     help=f"channel model override, one of {CHANNELS.names()} "
                          "(':arg' allowed, e.g. 'rayleigh-block:0.01')")

@@ -43,7 +43,10 @@ class SAOAllocator(Strategy):
 
     def allocate_traced(self, arr, B: float, mask):
         # fold interference BEFORE the energy accounting too — the rate the
-        # solver allocated against is the degraded one
+        # solver allocated against is the degraded one. solve_sao folds
+        # again at its own entry; that nesting is exactly-once ONLY because
+        # effective_arrays pops the "inr" key (pinned by
+        # tests/test_channel_dynamics.py)
         arr = effective_arrays(arr)
         s = solve_sao(arr, B, mask=mask, box_correct=self.box_correct)
         e = arr["G"] * jnp.square(s.f) + arr["H"] / _Q(s.b, arr["J"])

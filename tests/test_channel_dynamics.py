@@ -1,0 +1,377 @@
+"""Round-coupled channel dynamics: Gauss-Markov fading state in the scan
+carry, selection-driven cross-cell interference inside one traced program,
+the interference-folding exactly-once invariant, and the cohort/channel
+bugfix sweep (trace-safe Fleet.num_cells, empty-selection masked_max,
+cohort-axis padding)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (ALLOCATORS, CHANNELS, ExperimentSpec, FleetSpec,
+                       build_cohort, build_experiment, build_fleet,
+                       multicell_fleet_spec)
+from repro.api.scenario import _gm_init, _gm_step
+from repro.core.baselines import equal_bandwidth, fedl_lambda
+from repro.core.cohort import _mesh_pad, cohort_mesh
+from repro.core.sao import solve_sao
+from repro.core.wireless import (effective_arrays, fleet_arrays, masked_max,
+                                 sample_fleet)
+
+TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
+            train_samples=160, test_samples=80, local_iters=2, batch_size=8,
+            rounds=2, devices_per_round=4, num_clusters=4,
+            learning_rate=0.05)
+
+
+# ---------------------------------------------------------------------------
+# gauss-markov: AR(1) fading state
+# ---------------------------------------------------------------------------
+
+
+def test_gauss_markov_resolve_and_validation():
+    gm = CHANNELS.resolve("gauss-markov:0.7")
+    assert gm.rho == 0.7 and gm.traceable and gm.needs_rng and gm.stateful
+    with pytest.raises(ValueError, match="rho"):
+        CHANNELS.resolve("gauss-markov:1.5")
+    # rayleigh-block is the pinned rho=0 special case; its ':arg' is floor
+    rb = CHANNELS.resolve("rayleigh-block:0.01")
+    assert rb.rho == 0.0 and rb.floor == 0.01 and rb.stateful
+    assert "rho" not in rb.params()          # init=False field, spec-stable
+
+
+def test_gauss_markov_unit_mean_and_correlation():
+    arr = {"J": jnp.ones((4000,), jnp.float32)}
+    key = jax.random.PRNGKey(0)
+    h = _gm_init(key, arr)
+    assert h.shape == (4000, 2)
+    # stationary unit-mean power at every lag
+    gains = []
+    for i in range(6):
+        h, out = _gm_step(0.9, 0.0, jax.random.PRNGKey(i + 1), h, arr)
+        gains.append(np.asarray(out["J"]))
+    for g in gains:
+        assert abs(float(np.mean(g)) - 1.0) < 0.1
+    # rho=0.9 -> strong round-to-round correlation; rho=0 -> none
+    corr_hi = np.corrcoef(gains[-2], gains[-1])[0, 1]
+    h0 = _gm_init(key, arr)
+    _, a = _gm_step(0.0, 0.0, jax.random.PRNGKey(11), h0, arr)
+    _, b = _gm_step(0.0, 0.0, jax.random.PRNGKey(12), h0, arr)
+    corr_lo = np.corrcoef(np.asarray(a["J"]), np.asarray(b["J"]))[0, 1]
+    assert corr_hi > 0.6 and abs(corr_lo) < 0.1
+
+
+@pytest.mark.slow
+def test_gauss_markov_zero_rho_is_rayleigh_block_bit_identical():
+    """Parity pin: gauss-markov:0 and rayleigh-block share one
+    implementation, so the scanned histories match bit for bit."""
+    gm = ExperimentSpec(**{**TINY, "rounds": 3},
+                        fleet=FleetSpec(channel="gauss-markov:0.0"))
+    rb = ExperimentSpec(**{**TINY, "rounds": 3},
+                        fleet=FleetSpec(channel="rayleigh-block"))
+    h_gm = build_experiment(gm).run()
+    h_rb = build_experiment(rb).run()
+    assert h_gm.accuracy == h_rb.accuracy
+    assert h_gm.T_k == h_rb.T_k
+    assert h_gm.E_k == h_rb.E_k
+
+
+@pytest.mark.slow
+def test_gauss_markov_correlated_fading_in_the_scan():
+    spec = ExperimentSpec(**{**TINY, "rounds": 4},
+                          fleet=FleetSpec(channel="gauss-markov:0.9"))
+    exp = build_experiment(spec)
+    assert exp.traceable()
+    hist = exp.run()                       # scanned path, state in carry
+    assert len(hist.T_k) == 5
+    assert all(np.isfinite(hist.T_k)) and all(t > 0 for t in hist.T_k)
+    assert len({round(t, 9) for t in hist.T_k}) > 1
+    # host loop has no stateful-channel equivalent
+    forced = build_experiment(spec)
+    forced.traceable = lambda *a, **k: False
+    with pytest.raises(ValueError, match="gauss-markov"):
+        forced.run()
+
+
+@pytest.mark.slow
+def test_gauss_markov_runs_on_cohort_engine():
+    spec = ExperimentSpec(**TINY, cohort=2,
+                          fleet=FleetSpec(channel="gauss-markov:0.8"))
+    ch = build_cohort(spec).run(transfer_guard=True)
+    assert ch.accuracy.shape == (2, TINY["rounds"] + 1)
+    assert np.all(np.isfinite(ch.accuracy)) and np.all(ch.T_k > 0)
+
+
+# ---------------------------------------------------------------------------
+# multicell-dynamic: selection-driven interference inside the scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_single_cell_dynamic_is_static_bit_identical():
+    """Parity pin: with one cell there is nobody to interfere — the
+    dynamic channel must be bit-identical to ``static``."""
+    dyn = build_experiment(ExperimentSpec(
+        **TINY, fleet=FleetSpec(channel="multicell-dynamic")))
+    sta = build_experiment(ExperimentSpec(**TINY, fleet=FleetSpec()))
+    h_d, h_s = dyn.run(), sta.run()
+    assert h_d.accuracy == h_s.accuracy
+    assert h_d.T_k == h_s.T_k
+    assert h_d.E_k == h_s.E_k
+
+
+@pytest.mark.slow
+def test_multicell_dynamic_full_participation_matches_static_load():
+    """Parity pin: when every device of every cell participates each
+    round, the per-round interference sum equals the build-time
+    average-load model at load = N (sum = N · mean)."""
+    n = 6
+    shared = {**TINY, "clients": n, "devices_per_round": n,
+              "num_clusters": 2}
+    dyn = ExperimentSpec(**shared, selection="random",
+                         fleet=multicell_fleet_spec(
+                             2, channel="multicell-dynamic"))
+    sta = ExperimentSpec(**shared, selection="random",
+                         fleet=multicell_fleet_spec(
+                             2, channel=f"multicell-interference:{n}.0"))
+    ch_d = build_cohort(dyn).run()
+    ch_s = build_cohort(sta).run()
+    # same PRNG stream, same selections, same training -> same accuracy
+    np.testing.assert_array_equal(ch_d.accuracy, ch_s.accuracy)
+    # and the dynamically-summed inr reproduces the static delays/energy
+    np.testing.assert_allclose(ch_d.T_k, ch_s.T_k, rtol=1e-4)
+    np.testing.assert_allclose(ch_d.E_k, ch_s.E_k, rtol=1e-4)
+    assert ch_d.inr is not None and np.all(ch_d.inr > 0)
+
+
+@pytest.mark.slow
+def test_multicell_dynamic_inr_responds_to_selections():
+    """Acceptance: geometry and gains are frozen (no fading), so any
+    round-to-round inr variation can only come from which devices the
+    other cells selected."""
+    spec = ExperimentSpec(**{**TINY, "rounds": 4}, selection="random",
+                          fleet=multicell_fleet_spec(
+                              2, channel="multicell-dynamic"))
+    ch = build_cohort(spec).run(transfer_guard=True)
+    assert ch.inr is not None and ch.inr.shape == (2, 4)
+    assert np.all(ch.inr > 0)
+    # a 4-of-8 random draw varies round to round -> so must the inr
+    assert len({round(float(v), 9) for v in ch.inr[0]}) > 1
+    # ... and the delays feel it
+    assert np.all(np.isfinite(ch.T_k)) and np.all(np.asarray(ch.T_k) > 0)
+
+
+@pytest.mark.slow
+def test_dynamic_interference_plus_gauss_markov_one_program():
+    """Acceptance: a ≥2-cell experiment with BOTH selection-driven
+    interference and Gauss-Markov correlated fading runs as a single
+    compiled scan on the cohort engine — the transfer guard turns any
+    per-round host round-trip into an error."""
+    fleet = multicell_fleet_spec(2, channel={
+        "name": "multicell-dynamic", "params": {"rho": 0.9}})
+    ch_model = CHANNELS.resolve(fleet.channel)
+    assert ch_model.stateful and ch_model.needs_rng and ch_model.dynamic
+    spec = ExperimentSpec(**{**TINY, "rounds": 3}, fleet=fleet)
+    ch = build_cohort(spec).run(transfer_guard=True)
+    assert ch.accuracy.shape == (2, 4)
+    assert np.all(np.isfinite(ch.accuracy))
+    assert ch.inr is not None and ch.inr.shape == (2, 3)
+    assert np.all(ch.inr > 0)
+    # fading varies T round-to-round on top of the interference coupling
+    assert len({round(float(t), 9) for t in np.asarray(ch.T_k)[0]}) > 1
+    # spec round-trips with the combined channel params
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+
+
+@pytest.mark.slow
+def test_multicell_static_lane_matches_single_cell_run():
+    """The cells axis moved INSIDE the traced program; each static-
+    interference cell must still reproduce its stand-alone single run."""
+    spec = ExperimentSpec(**TINY, fleet=multicell_fleet_spec(2))
+    ch = build_cohort(spec).run()
+    for c in range(2):
+        single = build_experiment(spec, cell=c).run()
+        lane = ch.history(c)
+        assert lane.accuracy == single.accuracy
+        np.testing.assert_allclose(lane.T_k, single.T_k, rtol=1e-6)
+        np.testing.assert_allclose(lane.E_k, single.E_k, rtol=1e-6)
+
+
+@pytest.mark.slow
+def test_dynamic_channel_refuses_single_cell_view_of_multicell_fleet():
+    spec = ExperimentSpec(**TINY, fleet=multicell_fleet_spec(
+        2, channel="multicell-dynamic"))
+    exp = build_experiment(spec, cell=0)
+    with pytest.raises(ValueError, match="CohortRunner"):
+        exp.run()
+
+
+# ---------------------------------------------------------------------------
+# interference folding: exactly once, everywhere (the pop invariant)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["sao", "equal", "fedl:1.0", "fedl_auto:4"])
+def test_interference_folded_exactly_once(name):
+    """``SAOAllocator.allocate_traced`` folds at entry and ``solve_sao``
+    folds again — safe ONLY because ``effective_arrays`` pops the ``inr``
+    key. Pin that invariant for every allocator, host and traced."""
+    fl = build_fleet(multicell_fleet_spec(2), 1, clients=8)
+    # 5 of cell 0's devices: a selection every baseline can satisfy
+    arr = fleet_arrays(fl.cell_fleet(0).select(np.arange(5)))
+    assert float(jnp.max(arr["inr"])) > 0
+    alloc = ALLOCATORS.resolve(name)
+
+    T_a, E_a, _, _ = alloc.allocate_traced(arr, 20.0, None)
+    pre = effective_arrays(arr)            # manually pre-folded
+    assert "inr" not in pre
+    T_b, E_b, _, _ = alloc.allocate_traced(pre, 20.0, None)
+    np.testing.assert_allclose(float(T_a), float(T_b), rtol=1e-6)
+    np.testing.assert_allclose(float(E_a), float(E_b), rtol=1e-6)
+    # the host contract applies the same single fold
+    host = alloc.allocate(arr, 20.0)
+    np.testing.assert_allclose(float(host.T), float(T_a), rtol=1e-6)
+    # a genuine double fold is NOT a no-op — the popped key is what
+    # prevents it from ever happening
+    double = dict(arr)
+    double["J"] = pre["J"]
+    T_d, _, _, _ = alloc.allocate_traced(double, 20.0, None)
+    assert not np.isclose(float(T_d), float(T_a), rtol=1e-4)
+
+
+def test_effective_arrays_idempotent():
+    fl = build_fleet(multicell_fleet_spec(2), 0, clients=6)
+    arr = fleet_arrays(fl.cell_fleet(0))
+    once = effective_arrays(arr)
+    twice = effective_arrays(dict(once))
+    assert set(once) == set(twice) and "inr" not in once
+    np.testing.assert_array_equal(np.asarray(once["J"]),
+                                  np.asarray(twice["J"]))
+    # dicts without inr (hand-built, pre-scenario) pass through untouched
+    plain = {k: v for k, v in arr.items() if k != "inr"}
+    assert effective_arrays(plain) is plain
+
+
+# ---------------------------------------------------------------------------
+# bugfix: empty-selection guard (masked_max / equal_bandwidth)
+# ---------------------------------------------------------------------------
+
+
+def test_masked_max_empty_guard():
+    x = jnp.asarray([1.0, 2.0])
+    assert float(masked_max(x)) == 2.0
+    assert float(masked_max(x, jnp.asarray([True, False]))) == 1.0
+    assert float(masked_max(x, jnp.zeros(2, bool))) == 0.0
+    assert float(masked_max(x, jnp.zeros(2, bool), empty=-1.0)) == -1.0
+
+
+def test_empty_selection_does_not_poison_allocators():
+    arr = fleet_arrays(sample_fleet(5, seed=0))
+    none = jnp.zeros(5, bool)
+    r = equal_bandwidth(arr, 20.0, mask=none)
+    # pre-fix this returned T = -inf and poisoned the scanned history
+    assert float(r.T) == 0.0 and float(jnp.sum(r.e)) == 0.0
+    s = solve_sao(arr, 20.0, mask=none)
+    assert np.isfinite(float(s.T))
+    assert np.all(np.asarray(s.b) == 0) and np.all(np.asarray(s.f) == 0)
+    f = fedl_lambda(arr, 20.0, 1.0, mask=none)
+    assert np.isfinite(float(f.T))
+
+
+# ---------------------------------------------------------------------------
+# bugfix: Fleet.num_cells is trace-safe host metadata
+# ---------------------------------------------------------------------------
+
+
+def test_with_power_rescales_cross_gains():
+    """xgain bakes the transmit power in (X ∝ p_n); a power sweep on a
+    dynamic fleet must not interfere with stale powers."""
+    fl = build_fleet(multicell_fleet_spec(2, channel="multicell-dynamic"),
+                     0, clients=4)
+    doubled = fl.with_power(fl.p * 2.0)
+    np.testing.assert_allclose(doubled.xgain, fl.xgain * 2.0)
+    # single-cell / static fleets keep xgain=None through the sweep
+    assert sample_fleet(3).with_power(0.1).xgain is None
+
+
+def test_fleet_num_cells_trace_safe():
+    fl = build_fleet(multicell_fleet_spec(2), 0, clients=6)
+    assert fl.num_cells == 2
+    # jitted functions taking a Fleet can consult num_cells: pre-fix this
+    # raised (np.max on a tracer) / forced a host sync
+    out = jax.jit(lambda f: jnp.asarray(f.inr) * f.num_cells)(fl)
+    assert out.shape == (12,)
+    # vmapped too (all leaves are tracers; the count rides the static aux)
+    stacked = jax.tree_util.tree_map(lambda *x: jnp.stack(x), fl, fl)
+    r = jax.vmap(lambda f: jnp.sum(jnp.asarray(f.h)) * f.num_cells)(stacked)
+    assert r.shape == (2,)
+    # sub-fleets keep the parent topology's count
+    assert fl.cell_fleet(1).num_cells == 2
+    assert fl.select(np.arange(3)).num_cells == 2
+    assert sample_fleet(4, seed=0).num_cells == 1
+
+
+# ---------------------------------------------------------------------------
+# bugfix: cohort axis pads up to the device count (no idle devices)
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_pad_arithmetic():
+    class Stub:
+        devices = np.zeros(6)
+
+    assert _mesh_pad(8, Stub()) == 4       # the ISSUE's 8-lanes-6-devices
+    assert _mesh_pad(12, Stub()) == 0
+    assert _mesh_pad(5, Stub()) == 1
+    assert _mesh_pad(3, None) == 0
+    # single-device hosts (this container) never build a mesh
+    if len(jax.devices()) == 1:
+        assert cohort_mesh(8) is None
+
+
+@pytest.mark.slow
+def test_cohort_pads_and_strips_on_forced_multi_device():
+    """3 seeds on 2 forced host devices: pre-fix the mesh degenerated to a
+    single device (largest divisor of 3 is 1) and ran all seeds
+    sequentially; now the axis pads to 4, shards over both devices, and
+    the pad lane is stripped from the history."""
+    code = textwrap.dedent("""
+        import numpy as np
+        import jax
+        assert len(jax.devices()) == 2, jax.devices()
+        import repro.core.cohort as cohort
+        from repro.api import ExperimentSpec, build_cohort
+        mesh = cohort.cohort_mesh(3)
+        assert mesh is not None and mesh.devices.size == 2
+        assert cohort._mesh_pad(3, mesh) == 1
+        TINY = dict(dataset="fashion", clients=6, samples_per_client=8,
+                    train_samples=96, test_samples=48, local_iters=1,
+                    batch_size=4, rounds=1, devices_per_round=3,
+                    num_clusters=3, learning_rate=0.05)
+        spec = ExperimentSpec(**TINY, cohort=3)
+        ch = build_cohort(spec).run()
+        assert ch.accuracy.shape == (3, 2), ch.accuracy.shape
+        assert ch.seeds == [0, 1, 2]
+        assert np.all(np.isfinite(ch.accuracy))
+        # the sharded+padded program reproduces the plain vmap
+        cohort.cohort_mesh = lambda *a, **k: None
+        ch2 = build_cohort(spec).run()
+        np.testing.assert_allclose(ch.accuracy, ch2.accuracy, atol=1e-6)
+        np.testing.assert_allclose(ch.T_k, ch2.T_k, rtol=1e-5)
+        print("PAD-OK")
+    """)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "PAD-OK" in out.stdout, out.stdout + "\n" + out.stderr

@@ -4,7 +4,6 @@ Rayleigh fading inside the scan, multi-cell interference sweeps on the
 cohort engine, the traced FEDL λ bisection, and the fl_sim CLI round-trip
 through --dump-spec/--spec."""
 import json
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -18,8 +17,8 @@ from repro.api import (ALLOCATORS, CHANNELS, CellSpec, ExperimentSpec,
 from repro.api.registry import StrategyError
 from repro.core.baselines import fedl_lambda, tune_fedl_lambda
 from repro.core.sao import kkt_residuals, solve_sao
-from repro.core.wireless import (DeviceFleet, Fleet, effective_arrays,
-                                 fleet_arrays, sample_fleet)
+from repro.core.wireless import (Fleet, effective_arrays, fleet_arrays,
+                                 sample_fleet)
 
 TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
             train_samples=160, test_samples=80, local_iters=2, batch_size=8,
@@ -68,8 +67,9 @@ def test_experiment_spec_carries_fleet():
 
 
 def test_channel_registry_and_custom_model():
-    assert {"static", "rayleigh-block",
-            "multicell-interference"} <= set(CHANNELS.names())
+    assert {"static", "rayleigh-block", "gauss-markov",
+            "multicell-interference",
+            "multicell-dynamic"} <= set(CHANNELS.names())
 
     @register_channel("test_mirror")
     class Mirror:
@@ -152,20 +152,18 @@ def test_sao_allocator_energy_uses_interference_folded_rate():
     assert float(jnp.sum(e_clean)) < float(E)
 
 
-def test_fleet_is_pytree_and_devicefleet_deprecated():
+def test_fleet_is_pytree_and_devicefleet_removed():
     fl = sample_fleet(5, seed=0)
     leaves, treedef = jax.tree_util.tree_flatten(fl)
     again = jax.tree_util.tree_unflatten(treedef, leaves)
     np.testing.assert_array_equal(again.h, fl.h)
     assert again.L == fl.L
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        old = DeviceFleet(h=fl.h, p=fl.p, z=fl.z, C=fl.C, D=fl.D, L=fl.L,
-                          alpha=fl.alpha, f_min=fl.f_min, f_max=fl.f_max,
-                          e_cons=fl.e_cons, N0=fl.N0)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    assert isinstance(old, Fleet)
-    assert isinstance(old.select(np.arange(2)), Fleet)
+    assert isinstance(fl.select(np.arange(2)), Fleet)
+    # the one-release deprecation alias is gone (PR-3 promise kept)
+    import repro.core
+    import repro.core.wireless
+    assert not hasattr(repro.core.wireless, "DeviceFleet")
+    assert not hasattr(repro.core, "DeviceFleet")
 
 
 # ---------------------------------------------------------------------------
