@@ -30,8 +30,13 @@ workflow uploads) plus the usual CSV rows.
 ``--smoke`` is the per-PR CI gate: the quick workload, a printed summary,
 and a NON-ZERO EXIT when the scanned path has regressed below
 ``SMOKE_MIN_SPEEDUP`` × the python loop — so a pipeline slowdown fails the
-tier-1 workflow instead of hiding in an artifact. The threshold is far
-under the measured 1.9-2.1× so shared-runner noise doesn't flake.
+tier-1 workflow instead of hiding in an artifact. NOTE the flat parameter
+plane (PR 5) roughly doubled the PYTHON loop's rounds/sec (its per-round
+tree ops collapsed to fused row ops and its stores donate in place), so
+on a single CPU device the two tiers now run neck and neck (~0.85-1.9×
+depending on load) — the floor sits below that band to catch only a
+genuine scanned-path collapse; absolute scanned rps is tracked in
+``BENCH_flat.json``'s gate instead.
 
     PYTHONPATH=src:. python benchmarks/bench_cohort_scaling.py [--quick|--smoke]
 """
@@ -48,7 +53,9 @@ from benchmarks.common import emit, fl_spec
 from repro.api import build_cohort, build_experiment
 
 COHORT = 8
-SMOKE_MIN_SPEEDUP = 0.8        # scanned/python rounds-per-sec floor (gate)
+SMOKE_MIN_SPEEDUP = 0.6        # scanned/python rounds-per-sec floor (gate;
+                               # see module docstring — the flat plane sped
+                               # the python loop up to near-parity on CPU)
 
 
 def _workload(clients: int, rounds: int):

@@ -10,7 +10,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import BENCH_DEFAULTS, emit, fl_experiment, time_fn
-from repro.core.clustering import (kmeans_fit, extract_features,
+from repro.core.clustering import (kmeans_fit,
                                    adjusted_rand_index)
 from repro.data import make_dataset
 
@@ -42,7 +42,7 @@ def run(quick: bool = False):
                                     local_iters=40, seed=0)
         stag = str(sigma)
         for layer in LAYERS:
-            feats = extract_features(exp.client_params, layer)
+            feats = exp.client_features(layer)
             key = jax.random.PRNGKey(0)
 
             def fit():
@@ -56,8 +56,8 @@ def run(quick: bool = False):
             emit(f"fig9/ari_{layer}_sigma{stag}", us, f"{ari:.3f}")
 
         # the paper's headline: w_fc2 ≈ best ARI, much cheaper than 'all'
-        f_fc2 = extract_features(exp.client_params, "w_fc2")
-        f_all = extract_features(exp.client_params, "all")
+        f_fc2 = exp.client_features("w_fc2")
+        f_all = exp.client_features("all")
         emit(f"fig8/dim_reduction_sigma{stag}", 0.0,
              f"{f_all.shape[1]/f_fc2.shape[1]:.0f}x")
 

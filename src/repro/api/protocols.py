@@ -69,12 +69,23 @@ class RoundState(NamedTuple):
     """The carried pytree of the scanned round loop — everything one FL
     round reads and writes, device-resident.
 
+    The traced pipeline keeps model weights on the FLAT PARAMETER PLANE:
+    one model is a length-``P`` fp32 row (layout =
+    ``repro.utils.trees.StackFlattenSpec``), so the carry's weight leaves
+    are dense buffers, every per-round reduction (divergence, aggregation,
+    K-means features, compression) is a single fused row op, and the whole
+    carry can be donated (``donate_argnums``) so the ``[cohort, N, P]``
+    buffer updates in place across dispatches. The host driver
+    (``FLExperiment``) converts to/from pytrees at the trace boundary
+    (``traced_state`` / ``load_traced_state``).
+
     Leaves:
-      params        : global model pytree
-      client_params : per-client model pytree, stacked on a leading N axis
-      opt_state     : server-optimizer state (e.g. FedAvgM momentum; the
-                      aggregator's ``init_traced_state`` defines it — may be
-                      ``None`` for stateless aggregation)
+      params        : flat [P] global model row (host boundary unflattens
+                      it back to the model pytree)
+      client_params : [N, P] flat client-weight buffer (row n = client n)
+      opt_state     : server-optimizer state (the aggregator's
+                      ``init_flat_state`` defines it — ``None`` for
+                      stateless aggregation, a flat [P] row for FedAvgM)
       key           : jax PRNG key driving selection + local SGD
       labels        : [N] int32 K-means cluster labels (Alg. 2; zeros until
                       the initial round has run)
@@ -211,7 +222,15 @@ class Allocator(Protocol):
 @runtime_checkable
 class Aggregator(Protocol):
     """Server-side model aggregation, eq. (4) and variants. May be
-    stateful (e.g. server momentum); ``reset`` clears that state."""
+    stateful (e.g. server momentum); ``reset`` clears that state.
+
+    Traceable aggregators additionally implement the FLAT contract the
+    scanned pipeline drives: ``init_flat_state(global_vec)`` builds the
+    ``RoundState.opt_state`` leaf (``None`` or a flat [P] row) and
+    ``aggregate_flat(global_vec, rows, weights, opt_state)`` reduces the
+    round's ``[S, P]`` client rows in one masked weighted row op
+    (``repro.kernels.ops.flat_aggregate``); ``load_flat_state(opt, spec)``
+    syncs a finished scan back into the host object."""
 
     def aggregate(self, global_params: Any, stacked_params: Any,
                   weights: np.ndarray) -> Any: ...
@@ -233,6 +252,13 @@ class Compressor(Protocol):
 
     def apply(self, stacked_new: Any, global_params: Any) -> Any:
         """Compress the stacked client *deltas* against the global model."""
+        ...
+
+    def apply_flat(self, rows: Any, global_vec: Any, spec: Any) -> Any:
+        """Flat-plane form of ``apply``: rows is the round's ``[S, P]``
+        slab of the client-weight buffer, ``global_vec`` the flat [P]
+        global row and ``spec`` the ``StackFlattenSpec`` giving each
+        leaf's column segment (per-leaf scales/thresholds stay exact)."""
         ...
 
     def payload_mbit(self, num_params: int,

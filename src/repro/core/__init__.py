@@ -9,10 +9,12 @@ from repro.core.baselines import (equal_bandwidth, fedl_lambda,
                                   tune_fedl_lambda, AllocResult)
 from repro.core.power import optimal_transmit_power
 from repro.core.clustering import (kmeans_fit, kmeans_predict, extract_features,
-                                   clusters_from_labels, adjusted_rand_index)
-from repro.core.divergence import weight_divergence, pairwise_divergence_matrix
+                                   extract_features_flat, clusters_from_labels,
+                                   adjusted_rand_index)
+from repro.core.divergence import (weight_divergence, weight_divergence_flat,
+                                   pairwise_divergence_matrix)
 from repro.core import selection
 from repro.core.engine import (EngineConfig, RoundEngine, RoundResult,
-                               TracedRunResult, run_rounds)
+                               TracedRunResult, model_flat_spec, run_rounds)
 from repro.core.fedavg import FLExperiment, FLHistory, make_local_update
 from repro.core.cohort import CohortHistory, CohortRunner

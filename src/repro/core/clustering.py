@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils.trees import tree_flatten_vector
+from repro.kernels import ops
+from repro.utils.trees import StackFlattenSpec
 
 
 # ---------------------------------------------------------------------------
@@ -60,18 +61,49 @@ def _lookup(tree, name):
     raise KeyError(name)
 
 
+def _resolve_flat_layer(spec: StackFlattenSpec, layer: str):
+    """Bare leaf name -> full spec name (nested specs use ``a/b`` paths;
+    mirror :func:`_lookup`'s bare-key recursion by suffix matching)."""
+    if layer in spec.names:
+        return layer
+    hits = [n for n in spec.names if n.endswith("/" + layer)]
+    return hits[0] if hits else None
+
+
+def extract_features_flat(client_flat: jnp.ndarray, layer: str,
+                          spec: StackFlattenSpec) -> jnp.ndarray:
+    """Feature matrix from the ``[N, P]`` flat client plane — a zero-copy
+    column slice of the buffer (``layer="all"`` IS the buffer), replacing
+    the per-round leaf concatenate of :func:`extract_features`.
+
+    Column ranges come from the static flatten spec, so the slice matches
+    ``extract_features`` on the equivalent stacked pytree bit for bit
+    (bare leaf names resolve through nested paths like ``_lookup`` does).
+    """
+    if layer == "all":
+        return client_flat
+    if layer == "auto":
+        layer = (_resolve_flat_layer(spec, "w_fc2")
+                 or _resolve_flat_layer(spec, "lm_head")
+                 or spec.names[-1])     # fall back to the last leaf
+    else:
+        resolved = _resolve_flat_layer(spec, layer)
+        if resolved is None:
+            raise KeyError(layer)
+        layer = resolved
+    return client_flat[:, spec.columns(layer)]
+
+
 # ---------------------------------------------------------------------------
 # K-means (Lloyd + k-means++), jitted
 # ---------------------------------------------------------------------------
 
 
 def _pairwise_sq_dists(x, c):
-    """[N, F] × [C, F] -> [N, C] squared Euclidean distances."""
-    # streaming-friendly expansion; the Pallas pairwise_l2 kernel implements
-    # the fused single-read version for TPU (repro.kernels)
-    xn = jnp.sum(jnp.square(x), axis=1, keepdims=True)
-    cn = jnp.sum(jnp.square(c), axis=1)[None, :]
-    return jnp.maximum(xn + cn - 2.0 * x @ c.T, 0.0)
+    """[N, F] × [C, F] -> [N, C] squared Euclidean distances — the shared
+    ``repro.kernels.ops`` implementation (Pallas kernel on TPU, clamped
+    streaming expansion elsewhere)."""
+    return ops.pairwise_sq_dists(x, c)
 
 
 def kmeans_plus_plus_init(key, x, c: int):

@@ -22,6 +22,11 @@ Either way the history exposes the flat lane layout ``s·C + c`` (seed
     ch = runner.run()                  # 8 seeds (× cells), one XLA program
     ch.accuracy                        # [8·C, rounds+1]
     ch.history(3)                      # lane 3's FLHistory view
+
+The scanned program DONATES its state argument (the stacked
+``[cohort, N, P]`` flat client plane updates in place); ``stack`` builds
+fresh stacked buffers per dispatch and every experiment's references are
+rebound from the result, so the donation is invisible to callers.
 """
 from __future__ import annotations
 

@@ -2,11 +2,19 @@
 
 d_n = ‖w_n − w_global‖₂ over ALL layers (the paper: "we consider the model
 weights of all the layers during calculating the weight divergence").
+
+Two equivalent entry points: :func:`weight_divergence_flat` is the round
+hot path — one fused row-norm reduction over the ``[N, P]`` flat client
+plane, routed through ``repro.kernels.ops`` (Pallas ``pairwise_l2`` on
+TPU, fused jnp elsewhere). :func:`weight_divergence` keeps the stacked-
+pytree form for callers that hold per-leaf trees.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import ops
 
 
 def weight_divergence(stacked_client_params, global_params) -> jnp.ndarray:
@@ -22,8 +30,17 @@ def weight_divergence(stacked_client_params, global_params) -> jnp.ndarray:
     return jnp.sqrt(total)
 
 
+def weight_divergence_flat(client_flat: jnp.ndarray,
+                           global_vec: jnp.ndarray) -> jnp.ndarray:
+    """[N] divergences over the flat plane: client_flat [N, P], global [P].
+
+    The traced round pipeline and the host driver both call THIS form, so
+    the two execution paths consume identical selection signals bit for
+    bit (per-leaf partial sums would differ from the single fused
+    reduction in the last ulp — enough to flip a top-k tie)."""
+    return ops.client_divergence(client_flat, global_vec)
+
+
 def pairwise_divergence_matrix(features: jnp.ndarray) -> jnp.ndarray:
     """[N, N] Euclidean distance matrix (Fig. 4's visualization)."""
-    sq = jnp.sum(jnp.square(features), axis=1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * features @ features.T
-    return jnp.sqrt(jnp.maximum(d2, 0.0))
+    return jnp.sqrt(ops.pairwise_sq_dists(features, features))

@@ -19,6 +19,11 @@ the ENTIRE experiment — initial all-device round + K-means clustering
 aggregate → eval — compiles to a single ``lax.scan`` program. The whole
 ``FLHistory`` comes back as stacked arrays in one device→host transfer, and
 the same program vmaps over a cohort axis (``repro.core.cohort``).
+
+Model weights travel on the FLAT PARAMETER PLANE (one [P] global row, one
+[N, P] client buffer; ``model_flat_spec``), every per-round reduction is a
+single fused row op routed through ``repro.kernels.ops``, and the scanned
+carry is donated — see ``docs/PERF.md``.
 """
 from __future__ import annotations
 
@@ -35,8 +40,20 @@ from jax import lax
 from repro.api.protocols import RoundState, TracedContext
 from repro.configs.paper_cnn import CNNConfig
 from repro.core.algorithms import make_fedprox_local_update
+from repro.kernels import ops
 from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
-from repro.utils.trees import tree_weighted_mean_stacked
+from repro.utils.trees import (StackFlattenSpec, flatten_stacked,
+                               stack_flatten_spec, unflatten_vector)
+
+
+@functools.lru_cache(maxsize=64)
+def model_flat_spec(cnn_cfg: CNNConfig) -> StackFlattenSpec:
+    """The flat-parameter-plane layout of ``cnn_cfg``'s model — derived
+    from shapes only (``eval_shape``), cached per config so every engine,
+    driver, and traced program shares one spec object."""
+    template = jax.eval_shape(functools.partial(init_cnn, cnn_cfg),
+                              jax.ShapeDtypeStruct((2,), jnp.uint32))
+    return stack_flatten_spec(template)
 
 
 def make_local_update(cnn_cfg: CNNConfig, lr: float, local_iters: int,
@@ -77,8 +94,11 @@ class RoundResult:
     E_k: float                        # round energy [J]
     accuracy: float                   # test accuracy after aggregation
     per_class: np.ndarray             # per-class test accuracy
-    params: Any = None                # new global model
-    stacked_params: Any = None        # the clients' post-training models
+    params: Any = None                # new global model pytree (a copy —
+                                      # safe to hold across rounds)
+    stacked_params: Any = None        # the clients' post-training models as
+                                      # flat [S, P] rows of the parameter
+                                      # plane (unflatten_rows for pytrees)
 
 
 class RoundEngine:
@@ -101,10 +121,20 @@ class RoundEngine:
                 cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters,
                 cfg.batch_size)
         self._vmapped_update = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
+        self.flat_spec = model_flat_spec(cfg.cnn_cfg)
+        # train_clients has no input/output buffer alias to donate (its
+        # output rows are param-shaped, its inputs are data-shaped); the
+        # donation that stops the legacy path double-buffering the client
+        # stack lives on scatter_rows, the store half of the round trip.
         self.train_clients = jax.jit(self._vmapped_update)
         self.evaluate = jax.jit(functools.partial(_eval_fn,
                                                   cnn_cfg=cfg.cnn_cfg))
-        self.round_step = jax.jit(self._round_step)
+        # donate the global params: the new global aliases them in place
+        self.round_step = jax.jit(self._round_step, donate_argnums=(0,))
+        # donated in-place row scatter into the [N, P] client-weight plane
+        self.scatter_rows = jax.jit(
+            lambda buf, idx, rows: buf.at[idx].set(rows),
+            donate_argnums=(0,))
 
     @classmethod
     def shared(cls, cfg: EngineConfig) -> "RoundEngine":
@@ -125,12 +155,20 @@ class RoundEngine:
     # -- fused fast path -----------------------------------------------
     def _round_step(self, global_params, images, labels, keys, weights,
                     test_images, test_labels):
-        """Train the selected clients, aggregate (eq. 4), evaluate."""
+        """Train the selected clients, aggregate (eq. 4), evaluate.
+
+        Returns the clients' post-training models as flat ``[S, P]`` rows
+        of the parameter plane; aggregation is the single fused
+        ``ops.flat_aggregate`` row-reduction (same numerics as the traced
+        pipeline, so fused host rounds and scanned rounds agree bit for
+        bit)."""
         stacked = self._vmapped_update(global_params, images, labels, keys)
-        new_global = tree_weighted_mean_stacked(stacked, weights)
+        rows = flatten_stacked(stacked)
+        new_global = unflatten_vector(self.flat_spec,
+                                      ops.flat_aggregate(rows, weights))
         acc, per_class = _eval_fn(new_global, test_images, test_labels,
                                   cnn_cfg=self.cfg.cnn_cfg)
-        return stacked, new_global, acc, per_class
+        return rows, new_global, acc, per_class
 
 
 def _eval_fn(params, test_images, test_labels, *, cnn_cfg: CNNConfig):
@@ -198,10 +236,20 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
     with one cross-cell reduction in between when the channel is dynamic
     (``multicell-dynamic``) — each BS's I/N0 is summed from the cross-gain
     rows of the devices the OTHER cells actually selected that round.
+
+    Model weights travel on the FLAT PARAMETER PLANE: the carry holds the
+    global model as one [P] row and all N client models as one [N, P]
+    buffer (layout = ``model_flat_spec(cfg.cnn_cfg)``). Local training
+    gathers the selected rows' data, unflattens the global row to the CNN
+    pytree for the vmapped SGD steps, then flattens the results back — so
+    weight divergence is ONE fused row-norm reduction, eq.-(4) aggregation
+    ONE masked weighted row-reduction (``ops.flat_aggregate``), K-means
+    features a zero-copy column slice, and compression a per-row segment
+    op; no per-leaf ``tree_map`` survives in the round body.
     """
     from repro.api.registry import AGGREGATORS
-    from repro.core.clustering import extract_features, kmeans_fit
-    from repro.core.divergence import weight_divergence
+    from repro.core.clustering import extract_features_flat, kmeans_fit
+    from repro.core.divergence import weight_divergence_flat
 
     aggregator = AGGREGATORS.resolve({"name": agg_name,
                                       "params": dict(agg_params)})
@@ -213,6 +261,7 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         local_update = make_local_update(
             cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size)
     vmapped_update = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
+    spec = model_flat_spec(cfg.cnn_cfg)
     N, B = tctx.num_devices, tctx.bandwidth_mhz
     channel_rng = channel is not None and getattr(channel, "needs_rng", False)
     channel_stateful = (channel is not None
@@ -253,19 +302,23 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         """
         key, sub = jax.random.split(state.key)
         tkeys = jax.random.split(sub, idx.shape[0])
+        # the one pytree excursion of the round: the CNN forward/backward
+        # wants named leaves, so unflatten the global row for the vmapped
+        # SGD steps and flatten the results straight back onto the plane
+        params = unflatten_vector(spec, state.params)
         # gathers clamp the out-of-bounds padding sentinel; masked below
-        stacked = vmapped_update(state.params, images[idx], labels[idx], tkeys)
-        stacked = compressor.apply(stacked, state.params)
+        stacked = vmapped_update(params, images[idx], labels[idx], tkeys)
+        rows = flatten_stacked(stacked)                       # [S_pad, P]
+        rows = compressor.apply_flat(rows, state.params, spec)
         w = sizes[idx]
         if mask is not None:
             w = jnp.where(mask, w, 0.0)
-        new_global, opt_state = aggregator.aggregate_traced(
-            state.params, stacked, w, state.opt_state)
-        # scatter back: the sentinel rows are out of bounds -> dropped
-        new_client = jax.tree_util.tree_map(
-            lambda all_, new: all_.at[idx].set(new),
-            state.client_params, stacked)
-        return state._replace(params=new_global, client_params=new_client,
+        new_gvec, opt_state = aggregator.aggregate_flat(
+            state.params, rows, w, state.opt_state)
+        # ONE scatter into the [N, P] plane; sentinel rows are out of
+        # bounds -> dropped
+        new_client = state.client_params.at[idx].set(rows)
+        return state._replace(params=new_gvec, client_params=new_client,
                               opt_state=opt_state, key=key)
 
     def init_round(state, images, labels, sizes, arr, inr_round,
@@ -276,12 +329,13 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         the allocation's rate; None otherwise."""
         all_idx = jnp.arange(N)
         state = train_aggregate(state, all_idx, None, images, labels, sizes)
-        feats = extract_features(state.client_params, feature_layer)
+        feats = extract_features_flat(state.client_params, feature_layer,
+                                      spec)
         key, sub = jax.random.split(state.key)
         _, k_labels, _ = kmeans_fit(sub, feats, tctx.num_clusters)
         state = state._replace(key=key, labels=k_labels.astype(jnp.int32))
-        acc0, _ = _eval_fn(state.params, test_images, test_labels,
-                           cnn_cfg=cfg.cnn_cfg)
+        acc0, _ = _eval_fn(unflatten_vector(spec, state.params),
+                           test_images, test_labels, cnn_cfg=cfg.cnn_cfg)
         state, arr = step_channel(state, arr)
         if inr_round is not None:
             arr = dict(arr)
@@ -295,7 +349,7 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         actual gains; returns the faded ``arr`` for the allocation."""
         state, arr = step_channel(state, arr)
         if selector.needs_divergence:
-            div = weight_divergence(state.client_params, state.params)
+            div = weight_divergence_flat(state.client_params, state.params)
         else:
             div = jnp.zeros((N,), jnp.float32)
         if selector.needs_rng:
@@ -317,8 +371,8 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
             arr_sel["inr"] = arr_sel["inr"] + inr_round
         T, E, _, _ = allocator.allocate_traced(arr_sel, B, mask)
         state = train_aggregate(state, idx, mask, images, labels, sizes)
-        acc, _ = _eval_fn(state.params, test_images, test_labels,
-                          cnn_cfg=cfg.cnn_cfg)
+        acc, _ = _eval_fn(unflatten_vector(spec, state.params),
+                          test_images, test_labels, cnn_cfg=cfg.cnn_cfg)
         return state, RoundOutputs(
             accuracy=acc, T=T, E=E, selected=idx, mask=mask,
             inr=None if inr_round is None else inr_round[0])
@@ -430,6 +484,11 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
 
     Compiled callables are cached process-wide, so sweeps that differ only
     in seed/data reuse one executable.
+
+    The ``state`` argument is DONATED (``donate_argnums=(0,)``): its
+    buffers — notably the ``[cohort, N, P]`` flat client plane — are
+    reused in place for the returned state, so pass freshly-built (or
+    no-longer-needed) arrays and rebind every reference from the result.
     """
     mesh_key = (None if mesh is None
                 else tuple(d.id for d in mesh.devices.flat))
@@ -455,7 +514,12 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
                     core, mesh=mesh,
                     in_specs=(data_spec,) * 5 + (test_spec, test_spec),
                     out_specs=data_spec, check_rep=False)
-        fn = _RUN_FN_CACHE[key] = jax.jit(core)
+        # donate the carry: the (possibly [cohort, N, P]-sized) RoundState
+        # buffers update in place across dispatches instead of double-
+        # buffering — callers must treat the passed-in state as consumed
+        # (FLExperiment/CohortRunner immediately replace their references
+        # from the returned state)
+        fn = _RUN_FN_CACHE[key] = jax.jit(core, donate_argnums=(0,))
         while len(_RUN_FN_CACHE) > _RUN_FN_CACHE_MAX:
             _RUN_FN_CACHE.popitem(last=False)
     else:

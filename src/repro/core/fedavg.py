@@ -34,14 +34,16 @@ import repro.api.scenario  # noqa: F401  (populate the channel registry)
 import repro.strategies  # noqa: F401  (populate the registries)
 from repro.configs.base import FLConfig
 from repro.configs.paper_cnn import CNNConfig
-from repro.core.clustering import (kmeans_fit, extract_features,
+from repro.core.clustering import (kmeans_fit, extract_features_flat,
                                    clusters_from_labels)
-from repro.core.divergence import weight_divergence
+from repro.core.divergence import weight_divergence_flat
 from repro.core.engine import (EngineConfig, RoundEngine, RoundResult,
                                TracedRunResult, make_local_update, run_rounds)
 from repro.core.wireless import Fleet, fleet_arrays
 from repro.data.partition import FederatedData
-from repro.utils.trees import tree_num_params
+from repro.utils.trees import (flatten_stacked, tree_flatten_vector,
+                               tree_num_params, unflatten_rows,
+                               unflatten_vector)
 
 __all__ = ["FLExperiment", "FLHistory", "RoundResult", "make_local_update"]
 
@@ -125,10 +127,12 @@ class FLExperiment:
             fedprox_mu=fedprox_mu))
 
         self.global_params = self.engine.init_params(self._next_key())
-        # all-client stacked copies (updated lazily for selected clients)
-        self.client_params = jax.tree_util.tree_map(
-            lambda l: jnp.broadcast_to(l, (fed.num_clients,) + l.shape).copy(),
-            self.global_params)
+        # the flat parameter plane: all N client models as one [N, P]
+        # buffer (row layout = engine.flat_spec; updated in place for the
+        # selected rows each round via the engine's donated scatter)
+        gvec = tree_flatten_vector(self.global_params)
+        self.client_params = jnp.broadcast_to(
+            gvec, (fed.num_clients, gvec.shape[0])).copy()
         self.clusters: Optional[List[np.ndarray]] = None
         self.cluster_labels: Optional[np.ndarray] = None
 
@@ -177,10 +181,36 @@ class FLExperiment:
             self.global_params, stacked_params, weights)
 
     def store_clients(self, stacked_params, idx: np.ndarray):
-        idx = jnp.asarray(np.asarray(idx))
-        self.client_params = jax.tree_util.tree_map(
-            lambda all_, new: all_.at[idx].set(new),
-            self.client_params, stacked_params)
+        """Write the clients' new models into the flat [N, P] plane.
+
+        Accepts flat ``[S, P]`` rows (the fused round step's output) or a
+        stacked pytree (flattened here). The scatter jit donates the old
+        buffer, so the plane updates in place instead of double-buffering
+        45 MB per round — external holders of ``client_params`` must copy
+        (see ``client_tree``)."""
+        rows = (stacked_params
+                if isinstance(stacked_params, jnp.ndarray)
+                and stacked_params.ndim == 2
+                else flatten_stacked(stacked_params))
+        self.client_params = self.engine.scatter_rows(
+            self.client_params, jnp.asarray(np.asarray(idx)), rows)
+
+    def client_tree(self):
+        """The client plane as a stacked pytree (leaves ``[N, ...]``) —
+        a COPY for external consumers; the buffer itself is donation-
+        managed by the round loop."""
+        return unflatten_rows(self.engine.flat_spec, self.client_params)
+
+    def client_features(self, layer: Optional[str] = None) -> jnp.ndarray:
+        """K-means feature view of the flat plane (zero-copy column
+        slice; Alg. 2's input). ``layer="all"``'s view IS the buffer, so
+        it is copied here — the next round's donated store would delete
+        it out from under the caller otherwise."""
+        feats = extract_features_flat(
+            self.client_params,
+            self.fl.feature_layer if layer is None else layer,
+            self.engine.flat_spec)
+        return jnp.array(feats) if feats is self.client_params else feats
 
     # ------------------------------------------------------------------
     def initial_round(self):
@@ -189,14 +219,14 @@ class FLExperiment:
         new_params = self.train_clients(idx)
         self.store_clients(new_params, idx)
         self.aggregate(new_params, idx)
-        feats = extract_features(self.client_params, self.fl.feature_layer)
+        feats = self.client_features()
         _, labels, _ = kmeans_fit(self._next_key(), feats, self.fl.num_clusters)
         self.cluster_labels = np.asarray(labels)
         self.clusters = clusters_from_labels(labels, self.fl.num_clusters)
 
     def divergences(self) -> np.ndarray:
-        return np.asarray(weight_divergence(self.client_params,
-                                            self.global_params))
+        return np.asarray(weight_divergence_flat(
+            self.client_params, tree_flatten_vector(self.global_params)))
 
     def selection_context(self) -> SelectionContext:
         return SelectionContext(
@@ -239,20 +269,27 @@ class FLExperiment:
                  and getattr(self.compressor, "identity", False))
         if fused:
             keys = jax.random.split(self._next_key(), len(idx))
-            stacked, new_global, acc, per_class = self.engine.round_step(
+            # round_step donates the global params (the new global reuses
+            # their buffers) and returns the clients as flat [S, P] rows
+            rows, new_global, acc, per_class = self.engine.round_step(
                 self.global_params, self._images[idx], self._labels[idx],
                 keys, self._sizes[idx], self.test_images, self.test_labels)
-            self.store_clients(stacked, idx)
+            self.store_clients(rows, idx)
             self.global_params = new_global
             acc, per_class = float(acc), np.asarray(per_class)
         else:
             stacked = self.train_clients(idx)
-            self.store_clients(stacked, idx)
+            rows = flatten_stacked(stacked)
+            self.store_clients(rows, idx)
             self.aggregate(stacked, idx)
             acc, per_class = self.evaluate()
+        # params is COPIED: the next fused round donates self.global_params,
+        # which would silently invalidate an earlier RoundResult's tree
         return RoundResult(selected=np.asarray(idx), T_k=alloc.T, E_k=alloc.E,
                            accuracy=acc, per_class=per_class,
-                           params=self.global_params, stacked_params=stacked)
+                           params=jax.tree_util.tree_map(jnp.copy,
+                                                         self.global_params),
+                           stacked_params=rows)
 
     def run(self, method: Any = None, rounds: Optional[int] = None,
             target_accuracy: Optional[float] = None,
@@ -315,11 +352,19 @@ class FLExperiment:
     # ------------------------------------------------------------------
     def traceable(self, selector: Any = None) -> bool:
         """True when the configured strategy bundle supports the scanned
-        device-resident pipeline."""
+        device-resident pipeline. The pipeline drives the FLAT-plane
+        contract, so aggregators/compressors must implement it on top of
+        ``traceable=True`` — a strategy written against the pre-flat
+        stacked contract falls back to the host loop instead of failing
+        mid-trace."""
         selector = self.selector if selector is None else selector
-        return all(getattr(s, "traceable", False)
-                   for s in (selector, self.allocator, self.aggregator,
-                             self.compressor, self.channel))
+        return (all(getattr(s, "traceable", False)
+                    for s in (selector, self.allocator, self.aggregator,
+                              self.compressor, self.channel))
+                and all(hasattr(self.aggregator, m)
+                        for m in ("aggregate_flat", "init_flat_state",
+                                  "load_flat_state"))
+                and hasattr(self.compressor, "apply_flat"))
 
     def traced_context(self) -> TracedContext:
         return TracedContext(num_devices=self.fed.num_clients,
@@ -329,23 +374,29 @@ class FLExperiment:
                              bandwidth_mhz=self.B)
 
     def traced_state(self) -> RoundState:
-        """Snapshot the experiment's mutable state as the scan carry."""
+        """Snapshot the experiment's mutable state as the scan carry —
+        weights on the flat parameter plane (global as one [P] row, the
+        client buffer as-is). The scanned program DONATES this state, so
+        every leaf handed over here is consumed; ``load_traced_state``
+        rebinds the driver's references from the result."""
         labels = (jnp.zeros((self.fed.num_clients,), jnp.int32)
                   if self.cluster_labels is None
                   else jnp.asarray(self.cluster_labels, jnp.int32))
+        gvec = tree_flatten_vector(self.global_params)
         return RoundState(
-            params=self.global_params, client_params=self.client_params,
-            opt_state=self.aggregator.init_traced_state(self.global_params),
+            params=gvec, client_params=self.client_params,
+            opt_state=self.aggregator.init_flat_state(gvec),
             key=self.key, labels=labels)
 
     def load_traced_state(self, state: RoundState, *,
                           clusters_valid: bool = True):
         """Sync a (final) scan carry back into the host driver, so a traced
         run can be inspected or continued by the Python loop."""
-        self.global_params = state.params
+        spec = self.engine.flat_spec
+        self.global_params = unflatten_vector(spec, state.params)
         self.client_params = state.client_params
         self.key = state.key
-        self.aggregator.load_traced_state(state.opt_state)
+        self.aggregator.load_flat_state(state.opt_state, spec)
         if clusters_valid:
             self.cluster_labels = np.asarray(state.labels)
             self.clusters = clusters_from_labels(self.cluster_labels,

@@ -2,10 +2,12 @@
 oracles in ref.py and jit'd dispatch wrappers in ops.py.
 
   pairwise_l2     — K-means assignment / weight-divergence distance matrix
+  flat_aggregate  — eq.-(4) aggregation GEMV over the [N, P] client plane
   flash_attention — blocked online-softmax attention (causal / SWA)
   ssd_scan        — Mamba2 SSD chunked scan (MXU-dense intra-chunk form)
 """
 from repro.kernels import ops, ref
 from repro.kernels.pairwise_l2 import pairwise_l2
+from repro.kernels.flat_aggregate import flat_aggregate
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.ssd_scan import ssd_scan

@@ -7,13 +7,12 @@ for validation, not speed.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.flat_aggregate import flat_aggregate as _flat_agg
 from repro.kernels.pairwise_l2 import pairwise_l2 as _pairwise
 from repro.kernels.ssd_scan import ssd_scan as _ssd
 
@@ -23,11 +22,62 @@ def _on_tpu() -> bool:
 
 
 def pairwise_sq_dists(x, c, *, use_pallas: bool | None = None):
-    """[N, F] × [M, F] -> [N, M] squared L2 (K-means / Fig. 4 hot spot)."""
+    """[N, F] × [M, F] -> [N, M] squared L2 (K-means / Fig. 4 hot spot).
+
+    THE pairwise-distance implementation — K-means assignment
+    (``repro.core.clustering``) and the Fig.-4 divergence matrix
+    (``repro.core.divergence``) both route here. Off-TPU it is the
+    streaming ‖x‖²+‖c‖²−2x·c expansion; both paths clamp at zero so no
+    call site can see a negative squared distance from fp roundoff.
+    """
     use_pallas = _on_tpu() if use_pallas is None else use_pallas
     if use_pallas:
         return _pairwise(x, c, interpret=not _on_tpu())
-    return ref.pairwise_l2_ref(x, c)
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    xn = jnp.sum(jnp.square(x), axis=1, keepdims=True)
+    cn = jnp.sum(jnp.square(c), axis=1)[None, :]
+    return jnp.maximum(xn + cn - 2.0 * x @ c.T, 0.0)
+
+
+def flat_aggregate(flat, weights, *, mask=None, normalize: bool = True,
+                   use_pallas: bool | None = None):
+    """Masked weighted row-reduction over the flat client plane:
+    ``[N, P] × [N] -> [P]`` — FedAvg aggregation (eq. 4) as one fused op.
+
+    ``mask`` zeroes padding lanes' weights; ``normalize`` divides by the
+    (masked) weight sum, giving the eq.-(4) weighted mean. On TPU this is
+    the ``flat_aggregate`` Pallas GEMV kernel; elsewhere the jnp reference
+    whose summation order matches the pytree ``tree_weighted_mean_stacked``
+    bit for bit in fp32.
+    """
+    w = weights.astype(jnp.float32)
+    if mask is not None:
+        w = jnp.where(mask, w, 0.0)
+    if normalize:
+        # the max() guard only bites when every lane is masked out (sum=0):
+        # an empty round then aggregates to zeros instead of poisoning the
+        # scan carry with 0/0 NaNs; real weight sums are untouched bitwise
+        w = w / jnp.maximum(jnp.sum(w), 1e-12)
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        return _flat_agg(flat, w, interpret=not _on_tpu())
+    return ref.flat_aggregate_ref(flat, w)
+
+
+def client_divergence(flat, gvec, *, use_pallas: bool | None = None):
+    """[N] weight divergences ‖flat_n − g‖₂ of the flat client plane
+    against the flat global row — §IV-C's selection signal as one fused
+    row-norm reduction (the Pallas ``pairwise_l2`` kernel with the global
+    model as a single centroid on TPU; a fused subtract-square-reduce
+    elsewhere, numerically stronger than the expansion for near-identical
+    rows)."""
+    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    if use_pallas:
+        d2 = _pairwise(flat, gvec[None, :], interpret=not _on_tpu())[:, 0]
+        return jnp.sqrt(d2)
+    diff = flat.astype(jnp.float32) - gvec.astype(jnp.float32)[None, :]
+    return jnp.sqrt(jnp.sum(jnp.square(diff), axis=1))
 
 
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,

@@ -12,11 +12,28 @@ from jax import lax
 
 
 def pairwise_l2_ref(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
-    """Squared Euclidean distances. x: [N, F]; c: [M, F] -> [N, M] fp32."""
+    """Squared Euclidean distances. x: [N, F]; c: [M, F] -> [N, M] fp32.
+
+    Naive O(N·M·F)-memory difference form — the kernel-test oracle only.
+    Production call sites go through ``repro.kernels.ops.pairwise_sq_dists``
+    (the streaming ‖x‖²+‖c‖²−2x·c expansion, clamped at zero).
+    """
     x = x.astype(jnp.float32)
     c = c.astype(jnp.float32)
     diff = x[:, None, :] - c[None, :, :]
     return jnp.sum(jnp.square(diff), axis=-1)
+
+
+def flat_aggregate_ref(flat: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Weighted row sum over the flat client plane: [N, P] × [N] -> [P].
+
+    Spelled as an elementwise multiply + axis-0 reduce (NOT a dot) so the
+    summation order matches ``tree_weighted_mean_stacked`` column for
+    column — the flat FedAvg path stays bit-identical to the pytree path
+    in fp32. Doubles as the production jnp path off-TPU.
+    """
+    w = weights.astype(jnp.float32)
+    return jnp.sum(flat.astype(jnp.float32) * w[:, None], axis=0)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,

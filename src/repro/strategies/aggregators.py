@@ -1,23 +1,30 @@
 """Registered server-side aggregation strategies: eq. (4) FedAvg and the
 beyond-paper FedAvgM server-momentum variant.
 
-Both implement the traced contract used by the scanned round pipeline:
-``init_traced_state(params)`` builds the server-optimizer pytree carried in
-``RoundState.opt_state`` and ``aggregate_traced`` is a pure function
-``(global, stacked, weights, opt_state) -> (new_global, new_opt_state)``.
-``load_traced_state`` syncs the final scanned state back into the stateful
-host object so a traced run can be continued by the Python loop.
+Both implement the FLAT traced contract the scanned round pipeline
+drives: the engine hands the aggregator the round's client rows as a
+``[S, P]`` slab of the flat parameter plane plus the flat ``[P]`` global
+row, and ``aggregate_flat`` lowers eq. (4) to ONE masked weighted
+row-reduction (``repro.kernels.ops.flat_aggregate`` — the Pallas GEMV
+kernel on TPU, its bit-matching jnp reference elsewhere).
+``init_flat_state`` builds the server-optimizer state carried in
+``RoundState.opt_state`` (``None``, or a flat ``[P]`` row for FedAvgM);
+``load_flat_state`` syncs a finished scan back into the stateful host
+object so a traced run can be continued by the Python loop. (The PR-2
+stacked-pytree traced contract is gone — a custom aggregator without the
+flat methods simply keeps the host loop, see ``FLExperiment.traceable``.)
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
-import numpy as np
+import jax.numpy as jnp
 
 from repro.api.registry import AGGREGATORS, Strategy
 from repro.core.algorithms import ServerMomentum
-from repro.utils.trees import (tree_add, tree_scale, tree_sub,
-                               tree_weighted_mean_stacked, tree_zeros_like)
+from repro.kernels import ops
+from repro.utils.trees import (tree_flatten_vector,
+                               tree_weighted_mean_stacked, unflatten_vector)
 
 
 @AGGREGATORS.register("fedavg")
@@ -35,15 +42,14 @@ class FedAvgAggregator(Strategy):
     def reset(self):
         pass
 
-    # -- traced contract ------------------------------------------------
-    def init_traced_state(self, global_params):
+    # -- flat-plane traced contract (the scanned hot path) --------------
+    def init_flat_state(self, global_vec):
         return None
 
-    def aggregate_traced(self, global_params, stacked_params, weights,
-                         opt_state):
-        return tree_weighted_mean_stacked(stacked_params, weights), opt_state
+    def aggregate_flat(self, global_vec, rows, weights, opt_state):
+        return ops.flat_aggregate(rows, weights), opt_state
 
-    def load_traced_state(self, opt_state):
+    def load_flat_state(self, opt_state, spec):
         pass
 
 
@@ -69,19 +75,17 @@ class FedAvgMAggregator(Strategy):
     def reset(self):
         self._opt = ServerMomentum(self.beta, self.lr)
 
-    # -- traced contract ------------------------------------------------
-    def init_traced_state(self, global_params):
+    # -- flat-plane traced contract (the scanned hot path) --------------
+    def init_flat_state(self, global_vec):
         if self._opt.v is not None:      # continue from host-loop momentum
-            return self._opt.v
+            return tree_flatten_vector(self._opt.v)
         # fresh v starts at zeros: β·0 + Δ ≡ Δ matches the lazy-None init
-        return tree_zeros_like(global_params)
+        return jnp.zeros_like(global_vec)
 
-    def aggregate_traced(self, global_params, stacked_params, weights,
-                         opt_state):
-        agg = tree_weighted_mean_stacked(stacked_params, weights)
-        delta = tree_sub(global_params, agg)            # pseudo-gradient
-        v = tree_add(tree_scale(opt_state, self.beta), delta)
-        return tree_sub(global_params, tree_scale(v, self.lr)), v
+    def aggregate_flat(self, global_vec, rows, weights, opt_state):
+        agg = ops.flat_aggregate(rows, weights)
+        v = self.beta * opt_state + (global_vec - agg)  # pseudo-gradient
+        return global_vec - self.lr * v, v
 
-    def load_traced_state(self, opt_state):
-        self._opt.v = opt_state
+    def load_flat_state(self, opt_state, spec):
+        self._opt.v = unflatten_vector(spec, opt_state)

@@ -9,6 +9,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from repro.api.registry import COMPRESSORS, Strategy
 from repro.core.compression import (compress_int8, compress_topk,
@@ -20,7 +21,11 @@ class _DeltaCompressor(Strategy):
     (w_new − w_global), then re-add the global model.
 
     ``apply`` is pure jnp over static shapes, so every built-in compressor
-    is ``traceable`` inside the scanned round pipeline."""
+    is ``traceable`` inside the scanned round pipeline. ``apply_flat`` is
+    the flat-plane form: rows are ``[S, P]`` slabs of the client-weight
+    buffer and the per-leaf quantizers run on the spec's column segments —
+    the same values in the same reduction order as the pytree leaves, so
+    the two forms quantize bit-identically."""
 
     identity = False
     traceable = True
@@ -34,6 +39,18 @@ class _DeltaCompressor(Strategy):
         deltas = self.compress(deltas)
         return jax.tree_util.tree_map(
             lambda d, g: g[None] + d, deltas, global_params)
+
+    def apply_flat(self, rows, global_vec, spec):
+        """Compress flat client rows [S, P] against the flat global [P].
+
+        One subtract / add on the whole plane; the quantizer sees each
+        leaf's column segment as a ``[S, size]`` block (scales and top-k
+        thresholds stay per-leaf, matching the payload model)."""
+        deltas = rows - global_vec[None, :]
+        blocks = {n: deltas[:, spec.columns(n)] for n in spec.names}
+        blocks = self.compress(blocks)
+        return global_vec[None, :] + jnp.concatenate(
+            [blocks[n] for n in spec.names], axis=1)
 
 
 @COMPRESSORS.register("none")
@@ -49,6 +66,9 @@ class NoCompression(Strategy):
 
     def apply(self, stacked_new, global_params):
         return stacked_new
+
+    def apply_flat(self, rows, global_vec, spec):
+        return rows
 
     def payload_mbit(self, num_params: int, num_leaves: int) -> Optional[float]:
         return None

@@ -1,4 +1,9 @@
 from repro.utils.trees import (
+    StackFlattenSpec,
+    stack_flatten_spec,
+    flatten_stacked,
+    unflatten_rows,
+    unflatten_vector,
     tree_flatten_vector,
     tree_unflatten_vector,
     tree_global_norm,

@@ -3,12 +3,113 @@
 All helpers are pure functions over JAX pytrees so they can be jitted,
 vmapped over a client axis (federated aggregation), and differentiated
 through where that makes sense.
+
+The flat parameter plane
+------------------------
+The FL round treats every client model as one Euclidean point: selection
+reduces over ‖w_n − w_g‖, K-means over a feature slice, aggregation over a
+weighted mean, compression over per-entry magnitudes. ``StackFlattenSpec``
+makes that literal: a static (hashable, trace-time) description of how one
+model pytree maps into a length-``P`` row, so N client models live in a
+single ``[N, P]`` buffer and each phase is one fused row op instead of a
+per-leaf ``tree_map`` (see ``repro.core.engine`` and ``docs/PERF.md``).
 """
 from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+@dataclass(frozen=True)
+class StackFlattenSpec:
+    """Static layout of one model pytree inside a flat length-``P`` row.
+
+    Leaves appear in ``tree_flatten`` order; leaf ``i`` occupies columns
+    ``[offsets[i], offsets[i] + sizes[i])``. Hashable, so it can be closed
+    over by cached traced programs (it is derived purely from shapes).
+    """
+    treedef: Any                       # jax PyTreeDef (hashable)
+    names: Tuple[str, ...]             # best-effort leaf names (dict keys)
+    shapes: Tuple[Tuple[int, ...], ...]
+    dtypes: Tuple[str, ...]
+    offsets: Tuple[int, ...]
+    sizes: Tuple[int, ...]
+    total: int                         # P = sum(sizes)
+
+    def columns(self, name: str) -> slice:
+        """Column slice of leaf ``name`` — a zero-copy feature view of the
+        ``[N, P]`` plane (K-means feature extraction, compressor segments)."""
+        i = self.names.index(name)
+        return slice(self.offsets[i], self.offsets[i] + self.sizes[i])
+
+
+def _leaf_name(path) -> str:
+    """Full path as a plain string — the bare key for a flat dict (our
+    models: ``"w_fc2"``), ``/``-joined components for nested trees
+    (``"block1/w"``), so names stay unique per leaf."""
+    parts = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    return "/".join(parts)
+
+
+def stack_flatten_spec(template) -> StackFlattenSpec:
+    """Build the static flatten spec from a template model pytree (real
+    arrays or ``ShapeDtypeStruct``s — only shapes/dtypes are read)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    names, shapes, dtypes, offsets, sizes = [], [], [], [], []
+    off = 0
+    for path, leaf in flat:
+        size = int(np.prod(leaf.shape)) if leaf.shape else 1
+        names.append(_leaf_name(path))
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(jnp.dtype(leaf.dtype).name)
+        offsets.append(off)
+        sizes.append(size)
+        off += size
+    if len(set(names)) != len(names):    # columns()/apply_flat key on name
+        dup = sorted({n for n in names if names.count(n) > 1})
+        raise ValueError(f"duplicate leaf names in flatten spec: {dup}")
+    return StackFlattenSpec(treedef=treedef, names=tuple(names),
+                            shapes=tuple(shapes), dtypes=tuple(dtypes),
+                            offsets=tuple(offsets), sizes=tuple(sizes),
+                            total=off)
+
+
+def flatten_stacked(stacked_tree, dtype=jnp.float32) -> jnp.ndarray:
+    """[K, ...]-leaved pytree -> one ``[K, P]`` buffer (row per client).
+
+    Column order matches :func:`stack_flatten_spec` of the per-client
+    template: leaves in ``tree_flatten`` order, each reshaped row-major —
+    so ``flatten_stacked(t)[:, spec.columns(name)]`` is exactly
+    ``t[name].reshape(K, -1)``, bit for bit.
+    """
+    leaves = jax.tree_util.tree_leaves(stacked_tree)
+    if not leaves:
+        return jnp.zeros((0, 0), dtype=dtype)
+    return jnp.concatenate(
+        [l.reshape(l.shape[0], -1).astype(dtype) for l in leaves], axis=1)
+
+
+def unflatten_rows(spec: StackFlattenSpec, rows: jnp.ndarray):
+    """Inverse of :func:`flatten_stacked`: ``[K, P]`` -> stacked pytree."""
+    out = []
+    for off, size, shape, dt in zip(spec.offsets, spec.sizes, spec.shapes,
+                                    spec.dtypes):
+        out.append(rows[:, off:off + size]
+                   .reshape((rows.shape[0],) + shape).astype(dt))
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
+def unflatten_vector(spec: StackFlattenSpec, vec: jnp.ndarray):
+    """One flat ``[P]`` row -> the model pytree (global params)."""
+    out = []
+    for off, size, shape, dt in zip(spec.offsets, spec.sizes, spec.shapes,
+                                    spec.dtypes):
+        out.append(vec[off:off + size].reshape(shape).astype(dt))
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
 
 
 def tree_flatten_vector(tree, dtype=jnp.float32):

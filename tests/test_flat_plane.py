@@ -1,0 +1,352 @@
+"""Flat parameter plane: spec round-trips, flat ≡ pytree parity pins
+(fedavg bit-identical, fedavgm/compressors tolerance), kernel-vs-ref
+parity for ``flat_aggregate``, and donated-carry semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build_experiment
+from repro.core.clustering import extract_features, extract_features_flat
+from repro.core.divergence import weight_divergence, weight_divergence_flat
+from repro.kernels import ops, ref
+from repro.kernels.flat_aggregate import flat_aggregate
+from repro.utils.trees import (flatten_stacked, stack_flatten_spec,
+                               tree_flatten_vector,
+                               tree_weighted_mean_stacked, unflatten_rows,
+                               unflatten_vector)
+
+TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
+            train_samples=160, test_samples=80, local_iters=2, batch_size=8,
+            rounds=2, devices_per_round=4, num_clusters=4,
+            learning_rate=0.05)
+
+
+def _stacked_tree(key, n=6):
+    ks = jax.random.split(key, 4)
+    return {
+        "w_a": jax.random.normal(ks[0], (n, 3, 4)),
+        "b_a": jax.random.normal(ks[1], (n, 4)),
+        "w_b": jax.random.normal(ks[2], (n, 4, 2)),
+        "b_b": jax.random.normal(ks[3], (n, 2)),
+    }
+
+
+def _template(stacked):
+    return jax.tree_util.tree_map(lambda l: l[0], stacked)
+
+
+# ---------------------------------------------------------------------------
+# spec + flatten/unflatten round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_spec_roundtrip_rows_and_vector():
+    stacked = _stacked_tree(jax.random.PRNGKey(0))
+    spec = stack_flatten_spec(_template(stacked))
+    assert spec.total == 3 * 4 + 4 + 4 * 2 + 2
+    rows = flatten_stacked(stacked)
+    assert rows.shape == (6, spec.total)
+    back = unflatten_rows(spec, rows)
+    for a, b in zip(jax.tree_util.tree_leaves(stacked),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    vec = tree_flatten_vector(_template(stacked))
+    np.testing.assert_array_equal(np.asarray(rows[0]), np.asarray(vec))
+    one = unflatten_vector(spec, vec)
+    for a, b in zip(jax.tree_util.tree_leaves(_template(stacked)),
+                    jax.tree_util.tree_leaves(one)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spec_nested_names_are_path_unique():
+    tree = {"block1": {"w": jnp.zeros((2, 3))},
+            "block2": {"w": jnp.zeros((3,))}}
+    spec = stack_flatten_spec(tree)
+    assert spec.names == ("block1/w", "block2/w")
+    assert spec.columns("block1/w") == slice(0, 6)
+    assert spec.columns("block2/w") == slice(6, 9)
+
+
+def test_spec_is_hashable_and_column_slices_match_leaves():
+    stacked = _stacked_tree(jax.random.PRNGKey(1))
+    spec = stack_flatten_spec(_template(stacked))
+    hash(spec)                          # trace-time constant
+    rows = flatten_stacked(stacked)
+    for name in spec.names:
+        want = stacked[name].reshape(6, -1)
+        np.testing.assert_array_equal(
+            np.asarray(rows[:, spec.columns(name)]), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# flat ops ≡ pytree ops
+# ---------------------------------------------------------------------------
+
+
+def test_flat_aggregate_matches_tree_weighted_mean_bitwise():
+    stacked = _stacked_tree(jax.random.PRNGKey(2))
+    w = jnp.asarray(np.random.default_rng(0).uniform(1.0, 9.0, 6),
+                    jnp.float32)
+    tree_avg = tree_weighted_mean_stacked(stacked, w)
+    flat_avg = ops.flat_aggregate(flatten_stacked(stacked), w)
+    np.testing.assert_array_equal(
+        np.asarray(tree_flatten_vector(tree_avg)), np.asarray(flat_avg))
+
+
+def test_flat_aggregate_mask_drops_padding_lanes():
+    stacked = _stacked_tree(jax.random.PRNGKey(3))
+    rows = flatten_stacked(stacked)
+    w = jnp.arange(1.0, 7.0)
+    want = ops.flat_aggregate(rows[:4], w[:4])
+    mask = jnp.asarray([True] * 4 + [False] * 2)
+    got = ops.flat_aggregate(rows, w, mask=mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_flat_aggregate_all_masked_yields_zeros_not_nan():
+    rows = flatten_stacked(_stacked_tree(jax.random.PRNGKey(9)))
+    w = jnp.arange(1.0, 7.0)
+    out = ops.flat_aggregate(rows, w, mask=jnp.zeros((6,), bool))
+    assert np.all(np.isfinite(np.asarray(out)))
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_extract_features_flat_resolves_nested_bare_names():
+    tree = {"block": {"w_fc2": jnp.arange(12.0).reshape(2, 2, 3),
+                      "b": jnp.zeros((2, 2))}}
+    spec = stack_flatten_spec(jax.tree_util.tree_map(lambda l: l[0], tree))
+    rows = flatten_stacked(tree)
+    got = extract_features_flat(rows, "w_fc2", spec)      # bare name
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(tree["block"]["w_fc2"]
+                                             .reshape(2, -1)))
+    auto = extract_features_flat(rows, "auto", spec)      # auto -> w_fc2
+    np.testing.assert_array_equal(np.asarray(auto), np.asarray(got))
+    with pytest.raises(KeyError):
+        extract_features_flat(rows, "nope", spec)
+
+
+def test_weight_divergence_flat_matches_tree():
+    stacked = _stacked_tree(jax.random.PRNGKey(4))
+    g = _template(_stacked_tree(jax.random.PRNGKey(5)))
+    want = weight_divergence(stacked, g)
+    got = weight_divergence_flat(flatten_stacked(stacked),
+                                 tree_flatten_vector(g))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_extract_features_flat_matches_tree():
+    stacked = _stacked_tree(jax.random.PRNGKey(6))
+    spec = stack_flatten_spec(_template(stacked))
+    rows = flatten_stacked(stacked)
+    for layer in ("w_a", "b_b", "all"):
+        want = extract_features(stacked, layer)
+        got = extract_features_flat(rows, layer, spec)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # auto falls back to the last leaf for non-CNN trees
+    np.testing.assert_array_equal(
+        np.asarray(extract_features_flat(rows, "auto", spec)),
+        np.asarray(rows[:, spec.columns(spec.names[-1])]))
+
+
+@pytest.mark.parametrize("name", ["int8", "topk:0.05"])
+def test_compressor_apply_flat_matches_tree(name):
+    from repro.api import COMPRESSORS
+    comp = COMPRESSORS.resolve(name)
+    stacked = _stacked_tree(jax.random.PRNGKey(7))
+    g = _template(_stacked_tree(jax.random.PRNGKey(8)))
+    spec = stack_flatten_spec(g)
+    want = flatten_stacked(comp.apply(stacked, g))
+    got = comp.apply_flat(flatten_stacked(stacked),
+                          tree_flatten_vector(g), spec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# pairwise dedupe: ops.pairwise_sq_dists is THE implementation
+# ---------------------------------------------------------------------------
+
+
+def test_pairwise_sq_dists_clamped_nonnegative():
+    # near-identical points make the ‖x‖²+‖c‖²−2x·c expansion go negative
+    # without the clamp
+    x = jnp.ones((5, 64)) * 1e3 + jax.random.normal(
+        jax.random.PRNGKey(0), (5, 64)) * 1e-4
+    d = ops.pairwise_sq_dists(x, x)
+    assert float(jnp.min(d)) >= 0.0
+    from repro.core.clustering import _pairwise_sq_dists
+    assert float(jnp.min(_pairwise_sq_dists(x, x))) >= 0.0
+    from repro.core.divergence import pairwise_divergence_matrix
+    m = pairwise_divergence_matrix(x)
+    assert np.all(np.isfinite(np.asarray(m)))
+
+
+def test_pairwise_sq_dists_matches_oracle():
+    kx, kc = jax.random.split(jax.random.PRNGKey(2))
+    x = jax.random.normal(kx, (17, 33))
+    c = jax.random.normal(kc, (5, 33))
+    np.testing.assert_allclose(np.asarray(ops.pairwise_sq_dists(x, c)),
+                               np.asarray(ref.pairwise_l2_ref(x, c)),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# flat_aggregate kernel: Pallas (interpret) vs jnp reference
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,p", [(7, 33), (100, 777), (128, 512),
+                                 (65, 1000), (1, 8), (10, 2240)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flat_aggregate_kernel_matches_ref(n, p, dtype):
+    kx, kw = jax.random.split(jax.random.PRNGKey(n * 100 + p))
+    flat = jax.random.normal(kx, (n, p), dtype)
+    w = jax.random.uniform(kw, (n,), jnp.float32)
+    out = flat_aggregate(flat, w)
+    want = ref.flat_aggregate_ref(flat, w)
+    tol = dict(rtol=3e-2, atol=3e-1) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), **tol)
+
+
+def test_ops_flat_aggregate_pallas_path_interpret():
+    flat = jax.random.normal(jax.random.PRNGKey(0), (20, 300))
+    w = jnp.arange(1.0, 21.0)
+    got = ops.flat_aggregate(flat, w, use_pallas=True)
+    want = ops.flat_aggregate(flat, w, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_ops_client_divergence_pallas_path_interpret():
+    flat = jax.random.normal(jax.random.PRNGKey(1), (12, 200))
+    g = jax.random.normal(jax.random.PRNGKey(2), (200,))
+    got = ops.client_divergence(flat, g, use_pallas=True)
+    want = ops.client_divergence(flat, g, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: flat traced pipeline ≡ pytree host loop
+# ---------------------------------------------------------------------------
+
+
+def _legacy(exp):
+    exp.traceable = lambda *a, **k: False
+    return exp
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("kw,exact", [
+    (dict(), True),                                   # fedavg: bit-identical
+    (dict(aggregator="fedavgm:0.9"), False),          # fedavgm: tolerance
+    (dict(compressor="int8"), False),                 # compressors: tolerance
+    (dict(compressor="topk:0.05"), False),
+])
+def test_flat_traced_matches_pytree_host_loop(kw, exact):
+    spec = ExperimentSpec(**TINY, **kw)
+    traced = build_experiment(spec)
+    assert traced.traceable()
+    h_t = traced.run(rounds=2)
+    h_l = _legacy(build_experiment(spec)).run(rounds=2)
+    if exact:
+        assert h_t.accuracy == h_l.accuracy
+    else:
+        np.testing.assert_allclose(h_t.accuracy, h_l.accuracy,
+                                   rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(h_t.T_k, h_l.T_k, rtol=1e-6)
+    np.testing.assert_allclose(h_t.E_k, h_l.E_k, rtol=1e-6)
+    for a, b in zip(h_t.selected, h_l.selected):
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.slow
+def test_host_state_stays_pytree_after_traced_run():
+    exp = build_experiment(ExperimentSpec(**TINY))
+    exp.run(rounds=1)
+    # global params sync back as the named-leaf pytree...
+    assert set(exp.global_params.keys()) == {
+        "w_c1", "b_c1", "w_c2", "b_c2", "w_fc1", "b_fc1", "w_fc2", "b_fc2"}
+    # ...while the client plane is the flat [N, P] buffer
+    assert exp.client_params.ndim == 2
+    assert exp.client_params.shape[0] == TINY["clients"]
+    assert exp.client_params.shape[1] == exp.engine.flat_spec.total
+    # and the pytree view round-trips
+    tree = exp.client_tree()
+    np.testing.assert_array_equal(
+        np.asarray(flatten_stacked(tree)), np.asarray(exp.client_params))
+
+
+@pytest.mark.slow
+def test_pre_flat_contract_aggregator_falls_back_to_host_loop():
+    # a strategy written against the pre-flat stacked contract (traceable
+    # but no aggregate_flat) must fall back to the host loop, not crash
+    # mid-trace on a missing flat method
+    from dataclasses import dataclass
+
+    from repro.api import AGGREGATORS, Strategy
+    from repro.utils.trees import tree_weighted_mean_stacked
+
+    @AGGREGATORS.register("test_stacked_only")
+    @dataclass
+    class StackedOnly(Strategy):
+        traceable = True
+        fuses_with_engine = False
+
+        def aggregate(self, global_params, stacked_params, weights):
+            return tree_weighted_mean_stacked(stacked_params, weights)
+
+        def reset(self):
+            pass
+
+    try:
+        exp = build_experiment(
+            ExperimentSpec(**TINY, aggregator="test_stacked_only"))
+        assert not exp.traceable()
+        hist = exp.run(rounds=1)
+        assert len(hist.accuracy) == 2
+    finally:
+        AGGREGATORS._classes.pop("test_stacked_only")
+
+
+@pytest.mark.slow
+def test_client_features_all_survives_next_round():
+    exp = build_experiment(ExperimentSpec(**TINY))
+    exp.run(rounds=1)
+    feats = exp.client_features("all")      # view of the whole plane
+    exp.run(rounds=1)                       # donates the old buffer
+    assert not feats.is_deleted()
+    float(feats[0, 0])
+
+
+@pytest.mark.slow
+def test_round_result_survives_next_donated_round():
+    # round_step donates the global params; an earlier RoundResult must
+    # hold a COPY, not the buffers the next round consumes — and
+    # stacked_params is flat [S, P] rows on every configuration
+    exp = _legacy(build_experiment(ExperimentSpec(**TINY)))
+    exp.initial_round()
+    r1 = exp.round()
+    exp.round()
+    leaf = jax.tree_util.tree_leaves(r1.params)[0]
+    assert not leaf.is_deleted()
+    float(leaf.reshape(-1)[0])
+    assert r1.stacked_params.ndim == 2
+    assert r1.stacked_params.shape[1] == exp.engine.flat_spec.total
+
+
+@pytest.mark.slow
+def test_traced_state_is_donated_and_rebound():
+    exp = build_experiment(ExperimentSpec(**TINY))
+    buf_before = exp.client_params
+    exp.run(rounds=1)
+    # the old buffer was consumed by the donated carry...
+    assert buf_before.is_deleted()
+    # ...and the driver rebound a live result
+    assert not exp.client_params.is_deleted()
+    float(exp.client_params[0, 0])
