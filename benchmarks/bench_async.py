@@ -1,0 +1,142 @@
+"""Buffered-async CI gate: the tick loop stays ONE scanned program.
+
+The async engine replaces the round barrier with a virtual-time tick loop
+(``repro.core.async_engine``) — the easiest thing for a refactor to
+silently break is the "rounds are events, yet still one compiled
+``lax.scan``" property (e.g. by reintroducing a host loop over ticks or a
+mid-tick device→host sync for the buffer decision). This bench proves it
+structurally, not by timing:
+
+  * the whole multi-tick cohort must go through EXACTLY ONE
+    compiled-callable dispatch (``engine.run_rounds`` wrapped with a
+    counter), and
+  * that dispatch runs under ``jax.transfer_guard_device_to_host
+    ("disallow")`` (``CohortRunner.run(transfer_guard=True)``) — any
+    mid-program sync raises instead of silently serializing;
+  * staleness sanity: with the buffer smaller than the padded selection
+    (M < K) stragglers must age, so the mean fired-age trace is positive;
+
+plus the usual ticks/sec measurement for the perf trajectory. Writes
+``results/BENCH_async.json`` (uploaded as a CI artifact); ``--smoke`` is
+the per-PR gate with a NON-ZERO EXIT on a structural failure.
+
+    PYTHONPATH=src:. python benchmarks/bench_async.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import emit, fl_spec
+from repro.api import build_cohort
+
+
+def _workload(rounds: int):
+    # buffer M=3 < padded selection 6: every tick leaves stragglers in
+    # flight (staleness must grow), with mild churn flipping the fleet
+    return fl_spec(clients=10, rounds=rounds, samples_per_client=8,
+                   train_samples=400, test_samples=100, local_iters=1,
+                   batch_size=4, devices_per_round=6, num_clusters=4,
+                   cohort=2, test_seed=91_000,
+                   aggregator="fedbuff:3:0.5",
+                   churn_leave=0.05, churn_join=0.2)
+
+
+def run(rounds: int = 6, out: str | None = None):
+    spec = _workload(rounds)
+    runner = build_cohort(spec)
+
+    # count compiled-callable dispatches: the whole cohort must be ONE
+    import repro.core.cohort as cohort_mod
+    import repro.core.engine as engine_mod
+    calls = {"n": 0}
+    real_run_rounds = engine_mod.run_rounds
+
+    def counting_run_rounds(*a, **kw):
+        fn = real_run_rounds(*a, **kw)
+
+        def counted(*fa, **fkw):
+            calls["n"] += 1
+            return fn(*fa, **fkw)
+
+        return counted
+
+    cohort_mod.run_rounds = counting_run_rounds
+    try:
+        # warmup (build + compile), then the guarded, counted run
+        runner.run(transfer_guard=True)
+        calls["n"] = 0
+        t0 = time.perf_counter()
+        ch = runner.run(reuse_experiments=True, transfer_guard=True)
+        jax.block_until_ready(ch.accuracy)
+        dt = time.perf_counter() - t0
+    finally:
+        cohort_mod.run_rounds = real_run_rounds
+
+    lanes = len(ch.seeds)
+    single_program = calls["n"] == 1
+    mean_staleness = float(ch.staleness.mean())
+    staleness_positive = bool(ch.staleness.max() > 0)
+    buffer_bounded = bool((ch.participation <= 3).all())
+    rps = lanes * (rounds + 1) / dt
+
+    payload = {
+        "benchmark": "async_engine",
+        "environment": {"devices": len(jax.devices()),
+                        "backend": jax.default_backend(),
+                        "cpu_count": os.cpu_count()},
+        "workload": {"cohort": 2, "rounds": rounds, "clients": 10,
+                     "aggregator": "fedbuff:3:0.5",
+                     "churn": [0.05, 0.2]},
+        "single_scanned_program": single_program,
+        "dispatches": calls["n"],
+        "no_host_round_trips": True,       # transfer guard would have raised
+        "staleness_positive": staleness_positive,
+        "buffer_bounded": buffer_bounded,
+        "mean_staleness": round(mean_staleness, 4),
+        "mean_participation": round(float(ch.participation.mean()), 4),
+        "mean_active": round(float(ch.active.mean()), 4),
+        "cohort_ticks_per_sec": round(rps, 3),
+    }
+    emit("async/fedbuff_tps", 1e6 / rps, f"{rps:.2f}")
+    emit("async/dispatches", 0.0, str(calls["n"]))
+    out = out or os.path.join(os.path.dirname(__file__), "..", "results",
+                              "BENCH_async.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(out)}")
+    return payload
+
+
+def smoke(out: str | None = None) -> bool:
+    """Per-PR CI gate: structural properties of the buffered-async path."""
+    payload = run(rounds=4, out=out)
+    ok = True
+    for key in ("single_scanned_program", "staleness_positive",
+                "buffer_bounded"):
+        verdict = "ok" if payload[key] else "FAIL"
+        print(f"smoke {key}: {payload[key]} ... {verdict}")
+        ok &= bool(payload[key])
+    print(json.dumps(payload, indent=1))
+    return ok
+
+
+if __name__ == "__main__":
+    import sys
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="structural gate: one scanned program, no host "
+                         "round-trips, positive staleness under M < K "
+                         "(non-zero exit on failure; the tier-1 CI step)")
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    if args.smoke:
+        sys.exit(0 if smoke(out=args.out) else 1)
+    run(rounds=args.rounds, out=args.out)

@@ -128,7 +128,8 @@ def build_experiment(spec: ExperimentSpec, *, cell: int = 0,
         channel=channel,
         seed=spec.seed,
         batch_size=spec.batch_size,
-        fedprox_mu=spec.fedprox_mu)
+        fedprox_mu=spec.fedprox_mu,
+        churn=(spec.churn_leave, spec.churn_join))
     exp.spec = spec
     exp.cell = cell
     return exp

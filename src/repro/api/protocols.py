@@ -65,6 +65,33 @@ class Allocation(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
+class AsyncState(NamedTuple):
+    """Per-client bookkeeping of the buffered-asynchronous tick loop
+    (``repro.core.async_engine``), riding in the ``RoundState.sched`` slot
+    of the ``lax.scan`` carry.
+
+    Virtual time is event-driven: a tick dispatches clients, prices their
+    completion with the allocator's delay model, and advances ``t_now`` to
+    the moment the aggregation buffer fires (the M-th earliest in-flight
+    completion). All leaves are dense ``[N]`` vectors so the whole
+    bookkeeping stays single fused row ops on the flat plane.
+
+    Leaves:
+      age    : [N] float32 — server updates folded since this client was
+               dispatched (its staleness if it fired right now); 0 when idle
+      t_done : [N] float32 — absolute completion time of the in-flight
+               update, +inf when the client is not in flight
+      avail  : [N] bool — churn availability mask; selectors never dispatch
+               unavailable clients, and a departure cancels the in-flight
+               update
+      t_now  : scalar float32 — the virtual clock (last buffer-fire time)
+    """
+    age: Any
+    t_done: Any
+    avail: Any
+    t_now: Any
+
+
 class RoundState(NamedTuple):
     """The carried pytree of the scanned round loop — everything one FL
     round reads and writes, device-resident.
@@ -93,6 +120,11 @@ class RoundState(NamedTuple):
                       Gauss-Markov complex fading amplitude; the model's
                       ``init_state`` defines it — ``None`` for memoryless
                       channels, populated INSIDE the traced program)
+      sched         : :class:`AsyncState` (per-client age / in-flight
+                      completion-time / availability vectors + the virtual
+                      clock) when the buffered-asynchronous tick loop is
+                      driving the scan (``repro.core.async_engine``);
+                      ``None`` for the synchronous round barrier
     """
     params: Any
     client_params: Any
@@ -100,6 +132,7 @@ class RoundState(NamedTuple):
     key: Any
     labels: Any
     channel: Any = None
+    sched: Any = None
 
 
 @dataclass(frozen=True)
@@ -230,7 +263,19 @@ class Aggregator(Protocol):
     ``aggregate_flat(global_vec, rows, weights, opt_state)`` reduces the
     round's ``[S, P]`` client rows in one masked weighted row op
     (``repro.kernels.ops.flat_aggregate``); ``load_flat_state(opt, spec)``
-    syncs a finished scan back into the host object."""
+    syncs a finished scan back into the host object.
+
+    ASYNC contract (buffered aggregation, ``repro.core.async_engine``): an
+    aggregator advertising ``async_capable = True`` additionally exposes
+    ``buffer_size`` (M — the engine fires the server update once M
+    in-flight client updates have landed) and ``staleness_weights(age)``
+    (the per-update discount ``(1 + age)^(-alpha)`` folded into the
+    aggregation weights). The engine routes the whole experiment through
+    the virtual-time tick loop instead of the round barrier whenever the
+    configured aggregator is async-capable; ``aggregate_flat`` itself is
+    unchanged — the engine hands it the fired buffer's rows and the
+    discounted weights, so ``fedbuff:M:0`` with a full buffer degenerates
+    bit-identically to the synchronous ``fedavg`` round."""
 
     def aggregate(self, global_params: Any, stacked_params: Any,
                   weights: np.ndarray) -> Any: ...

@@ -66,6 +66,10 @@ class ExperimentSpec:
     feature_layer: str = "auto"            # K-means feature (Alg. 2)
     fedprox_mu: float = 0.0                # >0 → FedProx client objective
 
+    # ---- client churn (buffered-asynchronous engine only) ------------
+    churn_leave: float = 0.0               # per-tick P(available → gone)
+    churn_join: float = 0.0                # per-tick P(gone → available)
+
     # ---- cohort (vmapped multi-seed execution) -----------------------
     cohort: int = 1                        # seeds seed..seed+cohort-1 run as
                                            # ONE compiled program (CohortRunner)

@@ -1,0 +1,281 @@
+"""The buffered-asynchronous tick loop — FL rounds as EVENTS, not
+barriers, compiled into the same single ``lax.scan`` program as the
+synchronous pipeline.
+
+Production FL has no round barrier: clients are dispatched, train at their
+own pace, and the server folds updates as they land. This engine replaces
+``repro.core.engine._traced_round_program``'s barrier with a FedBuff-style
+(Nguyen et al. 2022) virtual-time loop:
+
+  * every dispatched client's finish time is priced by the PAPER's delay
+    model — ``completion_times`` (eqs. 5+8) under the round's SAO/allocator
+    bandwidth+frequency assignment and the PR-4 channel-fading carry;
+  * the aggregation buffer fires when the ``M`` earliest in-flight
+    completions land (``fedbuff:M[:alpha]``), folding them into the global
+    row with staleness-discounted weights ``w ∝ (1 + age)^(-alpha)``
+    through the same ``ops.flat_aggregate`` masked row-reduction;
+    stragglers stay in flight and age;
+  * Bernoulli churn streams flip a per-client availability mask riding the
+    carry — departures cancel in-flight work, arrivals rejoin the pool —
+    and selection/allocation never touch an unavailable client.
+
+One scan iteration = one buffer fire = one history row, so the
+``FLHistory`` plumbing (cohort vmap, shard_map, donation) is untouched;
+``RoundOutputs`` simply gains participation / staleness / active-fleet
+traces.
+
+The engine builds its tick from the SAME phase closures as the
+synchronous program (``engine.build_round_phases``), and the degenerate
+config — buffer at least the padded selection size, no churn — takes a
+static branch that IS the synchronous round body op for op: the
+sync-degeneracy parity pin (``fedbuff:M>=K, alpha=0`` ≡ scanned fedavg)
+holds bit-identically by construction, not by numerical luck.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.api.protocols import AsyncState, TracedContext
+from repro.core.engine import (EngineConfig, RoundOutputs, TracedRunResult,
+                               _eval_fn, build_round_phases)
+from repro.core.wireless import completion_times, masked_max
+from repro.utils.trees import unflatten_vector
+
+
+def parse_churn(churn):
+    """Normalize a churn spec to the ``(p_leave, p_join)`` float pair.
+
+    Accepts ``None`` (no churn), a single number / ``"0.3"`` (leave-only),
+    a ``"p_leave:p_join"`` string (the CLI spelling), or a 2-sequence.
+    Both entries are per-tick Bernoulli probabilities in [0, 1].
+    """
+    if churn is None:
+        return (0.0, 0.0)
+    if isinstance(churn, str):
+        leave_s, _, join_s = churn.partition(":")
+        parts = (leave_s, join_s or "0")
+    elif isinstance(churn, (int, float)):
+        parts = (churn, 0.0)
+    else:
+        parts = tuple(churn)
+        if len(parts) != 2:
+            raise ValueError(
+                f"churn must be (p_leave, p_join); got {churn!r}")
+    try:
+        p = tuple(float(x) for x in parts)
+    except (TypeError, ValueError):
+        raise ValueError(
+            f"churn must be numeric 'P_LEAVE[:P_JOIN]'; got {churn!r}"
+        ) from None
+    if not all(0.0 <= x <= 1.0 for x in p):
+        raise ValueError(
+            f"churn probabilities must lie in [0, 1]; got {p}")
+    return p
+
+
+@functools.lru_cache(maxsize=32)
+def _traced_async_program(cfg: EngineConfig, selector, allocator,
+                          agg_name: str, agg_params: tuple, compressor,
+                          tctx: TracedContext, feature_layer: str,
+                          channel=None, churn=(0.0, 0.0)):
+    """The pure (unjitted) buffered-asynchronous experiment fn.
+
+    Same signature contract as ``engine._traced_round_program`` (all
+    arguments hashable trace-time constants, aggregator travelling as its
+    registry spec) and the same
+    ``(state, images, labels, sizes, arr, test_images, test_labels,
+    rounds, with_init) -> TracedRunResult`` call shape, so ``run_rounds``
+    swaps it in transparently — cohort vmap, shard_map and carry donation
+    all apply unchanged.
+
+    One scan iteration ("tick"):
+
+      1. churn — Bernoulli departure/arrival flips ``sched.avail``;
+         a departure cancels the client's in-flight update;
+      2. select — the registered selector runs on the faded fleet arrays
+         (availability exposed as ``arr["avail"]``), then the engine
+         post-filters the padded index set: unavailable or already
+         in-flight clients drop to the OOB sentinel;
+      3. dispatch — the allocator prices the cohort's bandwidth/frequency,
+         ``completion_times`` (eqs. 5+8) stamps each dispatched client's
+         absolute finish time ``t_now + d`` into ``sched.t_done``, and
+         local training writes their rows onto the [N, P] plane;
+      4. fire — the buffer collects the ``M`` earliest in-flight
+         completions (fewer if the fleet can't fill the buffer: no
+         deadlock), advances the virtual clock to the latest of them, and
+         folds the fired rows with ``sizes × (1+age)^(-alpha)`` weights;
+         an EMPTY fire (everyone churned out) is an explicit no-op — the
+         global row and optimizer state pass through untouched;
+      5. age — surviving in-flight clients' ``age`` grows by one server
+         fold; fired/idle clients reset.
+    """
+    from repro.api.registry import AGGREGATORS
+
+    aggregator = AGGREGATORS.resolve({"name": agg_name,
+                                      "params": dict(agg_params)})
+    M = int(aggregator.buffer_size)
+    alpha = float(aggregator.staleness_alpha)
+    p_leave, p_join = float(churn[0]), float(churn[1])
+    churn_on = p_leave > 0.0 or p_join > 0.0
+
+    ph = build_round_phases(cfg, aggregator, selector, allocator, compressor,
+                            tctx, feature_layer, channel)
+    N, spec = ph.N, ph.spec
+    S_pad = selector.pad_size(tctx)
+    # With the buffer at least the padded selection size and no churn, the
+    # backlog is provably empty by induction (every dispatch fires whole),
+    # so the tick IS the synchronous round body — take the static branch
+    # built from the very same phase closures. Bit-parity by construction.
+    degenerate = (M >= S_pad) and not churn_on
+
+    def init_sched(state):
+        if state.sched is not None:      # continuing a previous run
+            return state
+        return state._replace(sched=AsyncState(
+            age=jnp.zeros((N,), jnp.float32),
+            t_done=jnp.full((N,), jnp.inf, jnp.float32),
+            avail=jnp.ones((N,), bool),
+            t_now=jnp.zeros((), jnp.float32)))
+
+    def churn_step(state):
+        """Flip the availability mask; departures cancel in-flight work."""
+        sched = state.sched
+        key, kc = jax.random.split(state.key)
+        k_leave, k_join = jax.random.split(kc)
+        leave = jax.random.uniform(k_leave, (N,)) < p_leave
+        join = jax.random.uniform(k_join, (N,)) < p_join
+        avail = jnp.where(sched.avail, ~leave, join)
+        sched = sched._replace(
+            avail=avail,
+            t_done=jnp.where(avail, sched.t_done, jnp.inf),
+            age=jnp.where(avail, sched.age, 0.0))
+        return state._replace(key=key, sched=sched)
+
+    def tick(state, images, labels, sizes, arr, test_images, test_labels):
+        if churn_on:
+            state = churn_step(state)
+        sched = state.sched
+
+        # -- select on the faded fleet, availability exposed to churn-
+        # aware policies, then hard-filter the padded index set ----------
+        arr_in = arr
+        if churn_on:
+            arr_in = dict(arr)
+            arr_in["avail"] = sched.avail.astype(jnp.float32)
+        state, arr_f, idx, mask = ph.select_phase(state, arr_in)
+        arr_f = dict(arr_f)
+        arr_f.pop("avail", None)
+        # a client already in flight, or churned out, must not be
+        # re-dispatched: drop its lane to the OOB sentinel (okpad's
+        # appended False also kills lanes that were already padding)
+        ok_client = sched.avail & ~jnp.isfinite(sched.t_done)
+        okpad = jnp.concatenate([ok_client, jnp.zeros((1,), bool)])
+        mask = mask & okpad[idx]
+        idx = jnp.where(mask, idx, N).astype(jnp.int32)
+
+        # -- dispatch: allocate, price completions, train ----------------
+        arr_sel = {k: v[idx] for k, v in arr_f.items()}
+        T, E, b, f = allocator.allocate_traced(arr_sel, ph.B, mask)
+        d = completion_times(arr_sel, b, f, mask)        # +inf on padding
+        t_done = sched.t_done.at[idx].set(sched.t_now + d, mode="drop")
+        state, rows = ph.train_rows(state, idx, images, labels)
+        # sentinel rows are out of bounds -> dropped
+        state = state._replace(
+            client_params=state.client_params.at[idx].set(rows))
+
+        # -- fire: the M earliest in-flight completions ------------------
+        inflight = jnp.isfinite(t_done)
+        # completion RANKS, not a k-th-value threshold: the SAO allocator
+        # EQUALIZES its cohort's completion times (min-max optimum), so a
+        # value cut would fire every tied client at once and overrun the
+        # buffer. Stable argsort breaks ties by client index — exactly
+        # min(M, #in-flight) fire (fewer than M in flight all fire: no
+        # deadlock), the simultaneous rest stay in flight and age.
+        order = jnp.argsort(t_done)
+        rank = jnp.zeros((N,), jnp.int32).at[order].set(jnp.arange(
+            N, dtype=jnp.int32))
+        fired = inflight & (rank < M)
+        t_fire = jnp.maximum(sched.t_now,
+                             masked_max(t_done, fired, empty=sched.t_now))
+
+        w = jnp.where(fired, sizes, 0.0)
+        if alpha != 0.0:
+            w = w * aggregator.staleness_weights(sched.age)
+        agg_vec, agg_opt = aggregator.aggregate_flat(
+            state.params, state.client_params, w, state.opt_state)
+        # EMPTY-FIRE GUARD: flat_aggregate normalizes by max(Σw, eps), so
+        # an all-zero weight row yields a ZERO vector — an empty tick must
+        # instead pass the old global (and optimizer state) through
+        any_fired = jnp.any(fired)
+        new_gvec = jnp.where(any_fired, agg_vec, state.params)
+        new_opt = jax.tree_util.tree_map(
+            lambda a, o: jnp.where(any_fired, a, o), agg_opt,
+            state.opt_state)
+
+        # traces read the PRE-fold ages (the staleness actually applied)
+        part = jnp.sum(fired.astype(jnp.float32))
+        stale = (jnp.sum(jnp.where(fired, sched.age, 0.0))
+                 / jnp.maximum(part, 1.0))
+        active = jnp.sum(sched.avail.astype(jnp.float32))
+
+        # -- age the survivors, clear the fired, advance the clock -------
+        sched = AsyncState(
+            age=jnp.where(inflight & ~fired, sched.age + 1.0, 0.0),
+            t_done=jnp.where(fired, jnp.inf, t_done),
+            avail=sched.avail,
+            t_now=t_fire)
+        state = state._replace(params=new_gvec, opt_state=new_opt,
+                               sched=sched)
+
+        acc, _ = _eval_fn(unflatten_vector(spec, state.params),
+                          test_images, test_labels, cnn_cfg=cfg.cnn_cfg)
+        return state, RoundOutputs(
+            accuracy=acc, T=T, E=E, selected=idx, mask=mask,
+            participation=part, staleness=stale, active=active)
+
+    def sync_tick(state, images, labels, sizes, arr, test_images,
+                  test_labels):
+        """The degenerate branch: the synchronous round body verbatim,
+        with the async traces welded on (staleness identically zero, the
+        whole fleet active)."""
+        state, arr_f, idx, mask = ph.select_phase(state, arr)
+        state, outs = ph.finish_phase(state, arr_f, idx, mask, None, images,
+                                      labels, sizes, test_images,
+                                      test_labels)
+        return state, outs._replace(
+            participation=jnp.sum(mask.astype(jnp.float32)),
+            staleness=jnp.zeros((), jnp.float32),
+            active=jnp.full((), N, jnp.float32))
+
+    body = sync_tick if degenerate else tick
+
+    def run(state, images, labels, sizes, arr, test_images, test_labels,
+            rounds: int, with_init: bool):
+        arr = dict(arr)
+        arr.pop("xgain", None)           # single-cell: no cross gains
+        state = ph.init_channel(state, arr)
+        if not degenerate:
+            state = init_sched(state)
+
+        init_out = None
+        if with_init:
+            state, init_out = ph.init_round(state, images, labels, sizes,
+                                            arr, None, test_images,
+                                            test_labels)
+
+        def step(s, _):
+            return body(s, images, labels, sizes, arr, test_images,
+                        test_labels)
+
+        state, outs = lax.scan(step, state, None, length=rounds)
+        if init_out is None:
+            return TracedRunResult(state=state, rounds=outs)
+        acc0, T0, E0 = init_out
+        return TracedRunResult(state=state, rounds=outs, init_accuracy=acc0,
+                               init_T=T0, init_E=E0)
+
+    return run

@@ -100,6 +100,10 @@ class CohortHistory:
     inr: Optional[np.ndarray] = None  # [B, rounds] per-round selection-
                                       # driven I/N0 at each lane's BS
                                       # (dynamic-interference channels only)
+    # buffered-asynchronous per-tick traces (None on synchronous runs):
+    participation: Optional[np.ndarray] = None  # [B, rounds] updates folded
+    staleness: Optional[np.ndarray] = None      # [B, rounds] mean fired age
+    active: Optional[np.ndarray] = None         # [B, rounds] available fleet
 
     @property
     def lane_cells(self) -> List[int]:
@@ -247,7 +251,8 @@ class CohortRunner:
                         feature_layer=e0.fl.feature_layer, rounds=rounds,
                         with_init=True, cohort=True,
                         test_shared=test_shared, mesh=mesh,
-                        channel=e0.channel, cells=prog_cells)
+                        channel=e0.channel, cells=prog_cells,
+                        churn=getattr(e0, "churn", (0.0, 0.0)))
         if transfer_guard:
             with jax.transfer_guard_device_to_host("disallow"):
                 res: TracedRunResult = fn(state, images, labels, sizes, arr,
@@ -281,8 +286,9 @@ class CohortRunner:
             res.rounds.selected, res.rounds.mask))
         acc0, T0, E0 = (np.asarray(x).reshape(-1)[:, None] for x in (
             res.init_accuracy, res.init_T, res.init_E))
-        inr = (None if res.rounds.inr is None
-               else lanes_first(res.rounds.inr))
+        def extra(x):
+            """Optional [B, R] trace (inr / async): lane-major, pads off."""
+            return None if x is None else lanes_first(x)[:len(seeds)]
         B = len(seeds)                 # true lane count; pads sliced off
         return CohortHistory(
             seeds=list(seeds),
@@ -291,4 +297,7 @@ class CohortRunner:
             E_k=np.concatenate([E0, Es], axis=1)[:B],
             selected=sel[:B], mask=msk[:B], with_init=True,
             num_devices=num_devices, cells=cells,
-            inr=None if inr is None else inr[:B])
+            inr=extra(res.rounds.inr),
+            participation=extra(res.rounds.participation),
+            staleness=extra(res.rounds.staleness),
+            active=extra(res.rounds.active))

@@ -30,6 +30,7 @@ from __future__ import annotations
 import functools
 from collections import OrderedDict
 from dataclasses import dataclass, field
+from types import SimpleNamespace
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -190,13 +191,19 @@ class RoundOutputs(NamedTuple):
     """Per-round stacked history a traced run produces ([R] / [R, S_pad];
     a cells>1 program inserts a cells axis after R). ``inr`` is the round's
     selection-driven I/N0 per cell (dynamic-interference channels only,
-    None otherwise)."""
+    None otherwise). The last three slots are the buffered-asynchronous
+    engine's per-tick traces (``repro.core.async_engine``): how many
+    updates the buffer folded, their mean age at fold time, and the
+    churn-driven active-fleet size — None on the synchronous barrier."""
     accuracy: Any
     T: Any
     E: Any
     selected: Any
     mask: Any
     inr: Any = None
+    participation: Any = None
+    staleness: Any = None
+    active: Any = None
 
 
 class TracedRunResult(NamedTuple):
@@ -209,50 +216,31 @@ class TracedRunResult(NamedTuple):
     init_E: Any = None
 
 
-@functools.lru_cache(maxsize=32)
-def _traced_round_program(cfg: EngineConfig, selector, allocator,
-                          agg_name: str, agg_params: tuple, compressor,
-                          tctx: TracedContext, feature_layer: str,
-                          channel=None, cells: int = 1):
-    """The pure (unjitted) traced experiment fn for one strategy bundle.
+def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
+                       compressor, tctx: TracedContext, feature_layer: str,
+                       channel=None):
+    """The per-round phase closures every scanned program is composed of.
 
-    All arguments are hashable trace-time constants: ``selector`` /
-    ``allocator`` / ``compressor`` / ``channel`` are frozen strategy
-    dataclasses and the (stateful, unhashable) aggregator travels as its
-    registry spec. The cache makes sweeps over seeds/σ share one Python
-    closure → one XLA program per (rounds, with_init, cohort) variant.
+    Both device-resident execution modes — the synchronous round barrier
+    (:func:`_traced_round_program`) and the buffered-asynchronous tick
+    loop (``repro.core.async_engine``) — build from these same closures,
+    so the async engine's degenerate config (full buffer, no churn) IS
+    the synchronous round body op for op, and the sync-degeneracy parity
+    pin holds bit-identically by construction.
 
-    ``channel`` (a registered ``ChannelModel``) redraws per-round fading
-    INSIDE the scan — memoryless models via ``apply_traced``, stateful
-    models (``gauss-markov``) via ``init_state``/``step_traced`` with the
-    fading state riding in the ``RoundState.channel`` carry slot; a model
-    with ``needs_rng=False`` and ``stateful=False`` (``static``,
-    ``multicell-interference``) leaves both the PRNG stream and the
-    compiled program untouched.
-
-    ``cells > 1`` gives every per-cell argument (state, data, fleet
-    arrays) a leading cells axis INSIDE one traced program: each round is
-    an inner vmap over per-cell select → allocate → train → aggregate,
-    with one cross-cell reduction in between when the channel is dynamic
-    (``multicell-dynamic``) — each BS's I/N0 is summed from the cross-gain
-    rows of the devices the OTHER cells actually selected that round.
-
-    Model weights travel on the FLAT PARAMETER PLANE: the carry holds the
-    global model as one [P] row and all N client models as one [N, P]
-    buffer (layout = ``model_flat_spec(cfg.cnn_cfg)``). Local training
-    gathers the selected rows' data, unflattens the global row to the CNN
-    pytree for the vmapped SGD steps, then flattens the results back — so
-    weight divergence is ONE fused row-norm reduction, eq.-(4) aggregation
-    ONE masked weighted row-reduction (``ops.flat_aggregate``), K-means
-    features a zero-copy column slice, and compression a per-row segment
-    op; no per-leaf ``tree_map`` survives in the round body.
+    ``aggregator`` is the resolved (possibly stateful) instance; all other
+    strategies are the frozen dataclasses the program caches key on.
+    Returns a namespace of pure jnp closures over the ``RoundState``
+    carry: ``init_channel``/``step_channel`` (channel-state lifecycle),
+    ``train_rows`` (local SGD of a padded index set → compressed flat
+    rows, sync-loop key discipline), ``train_aggregate`` (train + store +
+    eq.-(4) masked aggregation), ``select_phase`` (fade → divergence →
+    select) and ``init_round``/``finish_phase`` (the Alg.-2 initial round
+    and one cell's allocate → train → eval round tail).
     """
-    from repro.api.registry import AGGREGATORS
     from repro.core.clustering import extract_features_flat, kmeans_fit
     from repro.core.divergence import weight_divergence_flat
 
-    aggregator = AGGREGATORS.resolve({"name": agg_name,
-                                      "params": dict(agg_params)})
     if cfg.fedprox_mu > 0:
         local_update = make_fedprox_local_update(
             cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size,
@@ -266,8 +254,6 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
     channel_rng = channel is not None and getattr(channel, "needs_rng", False)
     channel_stateful = (channel is not None
                         and getattr(channel, "stateful", False))
-    dynamic = (cells > 1 and channel is not None
-               and getattr(channel, "dynamic", False))
 
     def init_channel(state, arr):
         """Populate the carry's channel-state slot (one key split, only
@@ -293,8 +279,9 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
             return state._replace(channel=ch_state), arr
         return state, channel.apply_traced(k_ch, arr)
 
-    def train_aggregate(state, idx, mask, images, labels, sizes):
-        """Local training of ``idx`` + store + aggregate (masked weights).
+    def train_rows(state, idx, images, labels):
+        """Local training of the padded index set ``idx`` from the current
+        global → compressed flat [S_pad, P] rows.
 
         Key discipline mirrors the host loop exactly: one split off the
         stream, then per-client subkeys — a traced run and the Python loop
@@ -310,6 +297,11 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         stacked = vmapped_update(params, images[idx], labels[idx], tkeys)
         rows = flatten_stacked(stacked)                       # [S_pad, P]
         rows = compressor.apply_flat(rows, state.params, spec)
+        return state._replace(key=key), rows
+
+    def train_aggregate(state, idx, mask, images, labels, sizes):
+        """Local training of ``idx`` + store + aggregate (masked weights)."""
+        state, rows = train_rows(state, idx, images, labels)
         w = sizes[idx]
         if mask is not None:
             w = jnp.where(mask, w, 0.0)
@@ -319,7 +311,7 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         # bounds -> dropped
         new_client = state.client_params.at[idx].set(rows)
         return state._replace(params=new_gvec, client_params=new_client,
-                              opt_state=opt_state, key=key)
+                              opt_state=opt_state)
 
     def init_round(state, images, labels, sizes, arr, inr_round,
                    test_images, test_labels):
@@ -376,6 +368,64 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         return state, RoundOutputs(
             accuracy=acc, T=T, E=E, selected=idx, mask=mask,
             inr=None if inr_round is None else inr_round[0])
+
+    return SimpleNamespace(
+        spec=spec, N=N, B=B, aggregator=aggregator,
+        init_channel=init_channel, step_channel=step_channel,
+        train_rows=train_rows, train_aggregate=train_aggregate,
+        init_round=init_round, select_phase=select_phase,
+        finish_phase=finish_phase)
+
+
+@functools.lru_cache(maxsize=32)
+def _traced_round_program(cfg: EngineConfig, selector, allocator,
+                          agg_name: str, agg_params: tuple, compressor,
+                          tctx: TracedContext, feature_layer: str,
+                          channel=None, cells: int = 1):
+    """The pure (unjitted) traced experiment fn for one strategy bundle.
+
+    All arguments are hashable trace-time constants: ``selector`` /
+    ``allocator`` / ``compressor`` / ``channel`` are frozen strategy
+    dataclasses and the (stateful, unhashable) aggregator travels as its
+    registry spec. The cache makes sweeps over seeds/σ share one Python
+    closure → one XLA program per (rounds, with_init, cohort) variant.
+
+    ``channel`` (a registered ``ChannelModel``) redraws per-round fading
+    INSIDE the scan — memoryless models via ``apply_traced``, stateful
+    models (``gauss-markov``) via ``init_state``/``step_traced`` with the
+    fading state riding in the ``RoundState.channel`` carry slot; a model
+    with ``needs_rng=False`` and ``stateful=False`` (``static``,
+    ``multicell-interference``) leaves both the PRNG stream and the
+    compiled program untouched.
+
+    ``cells > 1`` gives every per-cell argument (state, data, fleet
+    arrays) a leading cells axis INSIDE one traced program: each round is
+    an inner vmap over per-cell select → allocate → train → aggregate,
+    with one cross-cell reduction in between when the channel is dynamic
+    (``multicell-dynamic``) — each BS's I/N0 is summed from the cross-gain
+    rows of the devices the OTHER cells actually selected that round.
+
+    Model weights travel on the FLAT PARAMETER PLANE: the carry holds the
+    global model as one [P] row and all N client models as one [N, P]
+    buffer (layout = ``model_flat_spec(cfg.cnn_cfg)``). Local training
+    gathers the selected rows' data, unflattens the global row to the CNN
+    pytree for the vmapped SGD steps, then flattens the results back — so
+    weight divergence is ONE fused row-norm reduction, eq.-(4) aggregation
+    ONE masked weighted row-reduction (``ops.flat_aggregate``), K-means
+    features a zero-copy column slice, and compression a per-row segment
+    op; no per-leaf ``tree_map`` survives in the round body.
+    """
+    from repro.api.registry import AGGREGATORS
+
+    aggregator = AGGREGATORS.resolve({"name": agg_name,
+                                      "params": dict(agg_params)})
+    ph = build_round_phases(cfg, aggregator, selector, allocator, compressor,
+                            tctx, feature_layer, channel)
+    N = ph.N
+    init_channel, init_round = ph.init_channel, ph.init_round
+    select_phase, finish_phase = ph.select_phase, ph.finish_phase
+    dynamic = (cells > 1 and channel is not None
+               and getattr(channel, "dynamic", False))
 
     def run(state, images, labels, sizes, arr, test_images, test_labels,
             rounds: int, with_init: bool):
@@ -460,7 +510,7 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
                compressor, tctx: TracedContext, feature_layer: str,
                rounds: int, with_init: bool, cohort: bool = False,
                test_shared: bool = True, mesh=None, channel=None,
-               cells: int = 1):
+               cells: int = 1, churn=None):
     """The compiled multi-round experiment fn for one strategy bundle.
 
     Returns a jitted callable
@@ -489,18 +539,44 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
     buffers — notably the ``[cohort, N, P]`` flat client plane — are
     reused in place for the returned state, so pass freshly-built (or
     no-longer-needed) arrays and rebind every reference from the result.
+
+    An ASYNC-CAPABLE aggregator (``fedbuff:M[:alpha]``) swaps the round
+    barrier for the buffered-asynchronous tick loop
+    (``repro.core.async_engine``) — same signature, same single scanned
+    program, but rounds become virtual-time ticks and ``churn`` (a
+    ``(p_leave, p_join)`` pair of per-tick Bernoulli probabilities) may
+    flip the per-client availability mask riding the carry.
     """
+    churn_t = ((0.0, 0.0) if churn is None
+               else (float(churn[0]), float(churn[1])))
+    is_async = getattr(aggregator, "async_capable", False)
+    if not is_async and churn_t != (0.0, 0.0):
+        raise ValueError(
+            "client churn is a property of the buffered-asynchronous "
+            "engine; configure an async-capable aggregator "
+            "(e.g. 'fedbuff:4') to enable it")
+    if is_async and cells > 1:
+        raise ValueError(
+            "the buffered-asynchronous engine runs single-cell programs "
+            "only; run multi-cell fleets with a synchronous aggregator")
     mesh_key = (None if mesh is None
                 else tuple(d.id for d in mesh.devices.flat))
     key = (cfg, selector, allocator, aggregator_cache_key(aggregator),
            compressor, tctx, feature_layer, rounds, with_init, cohort,
-           test_shared, mesh_key, channel, cells)
+           test_shared, mesh_key, channel, cells, churn_t)
     fn = _RUN_FN_CACHE.get(key)
     if fn is None:
-        prog = _traced_round_program(
-            cfg, selector, allocator, aggregator.registry_name,
-            tuple(sorted(aggregator.params().items())), compressor, tctx,
-            feature_layer, channel, cells)
+        if is_async:
+            from repro.core.async_engine import _traced_async_program
+            prog = _traced_async_program(
+                cfg, selector, allocator, aggregator.registry_name,
+                tuple(sorted(aggregator.params().items())), compressor,
+                tctx, feature_layer, channel, churn_t)
+        else:
+            prog = _traced_round_program(
+                cfg, selector, allocator, aggregator.registry_name,
+                tuple(sorted(aggregator.params().items())), compressor,
+                tctx, feature_layer, channel, cells)
         core = functools.partial(prog, rounds=rounds, with_init=with_init)
         if cohort:
             test_ax = None if test_shared else 0

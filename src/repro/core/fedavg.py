@@ -91,7 +91,8 @@ class FLExperiment:
                  batch_size: int = 32, box_correct: bool = False,
                  compression: Any = "none", fedprox_mu: float = 0.0,
                  server_momentum: float = 0.0, channel: Any = "static",
-                 selection: Any = None, aggregator: Any = None):
+                 selection: Any = None, aggregator: Any = None,
+                 churn: Any = None):
         self.cnn_cfg = cnn_cfg
         self.fed = fed
         self.fleet = fleet
@@ -120,6 +121,17 @@ class FLExperiment:
         self.aggregator.reset()
         self.compressor = COMPRESSORS.resolve(compression)
         self.channel = CHANNELS.resolve(channel)
+        from repro.core.async_engine import parse_churn
+        self.churn = parse_churn(churn)
+        if (self.churn != (0.0, 0.0)
+                and not getattr(self.aggregator, "async_capable", False)):
+            raise ValueError(
+                "client churn is a property of the buffered-asynchronous "
+                "engine; configure an async-capable aggregator "
+                "(e.g. aggregator='fedbuff:4') to enable it")
+        # buffered-async bookkeeping (AsyncState) carried between traced
+        # runs, so incremental run() calls continue the virtual clock
+        self.sched = None
 
         # -- compiled compute, shared across same-config experiments ---
         self.engine = RoundEngine.shared(EngineConfig(
@@ -320,6 +332,19 @@ class FLExperiment:
                 "spec through CohortRunner (build_cohort / fl_sim --cells)")
         selector = (self.selector if method is None
                     else SELECTORS.resolve(method))
+        if getattr(self.aggregator, "async_capable", False):
+            # the buffered-asynchronous engine exists ONLY as a scanned
+            # program — there is no host-loop equivalent to fall back to
+            if target:
+                raise ValueError(
+                    "the buffered-asynchronous engine runs as one scanned "
+                    "program and cannot early-stop on target_accuracy")
+            if not self.traceable(selector):
+                raise ValueError(
+                    "the buffered-asynchronous engine needs a fully "
+                    "traceable strategy bundle (selector/allocator/"
+                    "compressor/channel)")
+            return self._run_traced(selector, rounds, include_initial_round)
         bit_parity = not getattr(selector, "needs_rng", True)
         if not target and bit_parity and self.traceable(selector):
             return self._run_traced(selector, rounds, include_initial_round)
@@ -386,7 +411,7 @@ class FLExperiment:
         return RoundState(
             params=gvec, client_params=self.client_params,
             opt_state=self.aggregator.init_flat_state(gvec),
-            key=self.key, labels=labels)
+            key=self.key, labels=labels, sched=self.sched)
 
     def load_traced_state(self, state: RoundState, *,
                           clusters_valid: bool = True):
@@ -396,6 +421,7 @@ class FLExperiment:
         self.global_params = unflatten_vector(spec, state.params)
         self.client_params = state.client_params
         self.key = state.key
+        self.sched = getattr(state, "sched", None)
         self.aggregator.load_flat_state(state.opt_state, spec)
         if clusters_valid:
             self.cluster_labels = np.asarray(state.labels)
@@ -411,7 +437,7 @@ class FLExperiment:
                         tctx=self.traced_context(),
                         feature_layer=self.fl.feature_layer,
                         rounds=rounds, with_init=with_init,
-                        channel=self.channel)
+                        channel=self.channel, churn=self.churn)
         res = fn(self.traced_state(), self._images, self._labels,
                  self._sizes, fleet_arrays(self.fleet), self.test_images,
                  self.test_labels)

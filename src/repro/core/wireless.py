@@ -255,6 +255,23 @@ def effective_arrays(arr):
     return out
 
 
+def completion_times(arr, b_mhz, f_ghz, mask=None):
+    """Per-device completion delay of one dispatched update under an
+    allocation: d_n = t_com(z, b, J) + t_cmp(U, f) (eqs. 5+8) — the delay
+    model the buffered-asynchronous engine prices in-flight updates with.
+
+    ``arr`` is a (selected) ``fleet_arrays`` dict; interference folds into
+    J via :func:`effective_arrays` exactly once (idempotent). Masked-out
+    lanes return +inf — a padding lane never completes, so it can never
+    enter the aggregation buffer.
+    """
+    fa = effective_arrays(arr)
+    d = t_com(fa["z"], b_mhz, fa["J"]) + t_cmp(fa["U"], f_ghz)
+    if mask is None:
+        return d
+    return jnp.where(mask, d, jnp.inf)
+
+
 def masked_max(x, mask=None, empty=0.0):
     """Max over the real lanes of a fixed-size padded selection (the one
     padding convention every solver shares: pads are -inf for maxes).

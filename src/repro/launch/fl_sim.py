@@ -93,6 +93,16 @@ def spec_from_args(args) -> ExperimentSpec:
         with open(args.spec) as f:
             return ExperimentSpec.from_json(f.read())
     sigma = args.sigma if args.sigma == "H" else float(args.sigma)
+    extra = {}
+    if getattr(args, "async_buffer", 0):
+        # --async-buffer M routes the run onto the buffered-asynchronous
+        # tick engine via the fedbuff:M[:alpha] aggregator
+        extra["aggregator"] = (
+            f"fedbuff:{args.async_buffer}:{args.staleness_alpha}")
+    if getattr(args, "churn", None):
+        from repro.core.async_engine import parse_churn
+        leave, join = parse_churn(args.churn)
+        extra["churn_leave"], extra["churn_join"] = leave, join
     return ExperimentSpec(dataset=args.dataset, selection=args.selection,
                           allocator=_allocator_ref(args.allocator,
                                                    args.box_correct),
@@ -103,7 +113,7 @@ def spec_from_args(args) -> ExperimentSpec:
                           learning_rate=args.lr,
                           target_accuracy=args.target_acc, seed=args.seed,
                           cohort=args.cohort,
-                          fleet=_fleet_from_args(args))
+                          fleet=_fleet_from_args(args), **extra)
 
 
 def main(argv=None):
@@ -140,6 +150,16 @@ def main(argv=None):
     ap.add_argument("--channel", default=None,
                     help=f"channel model override, one of {CHANNELS.names()} "
                          "(':arg' allowed, e.g. 'rayleigh-block:0.01')")
+    ap.add_argument("--async-buffer", type=int, default=0, metavar="M",
+                    help="buffered-asynchronous engine: fire the "
+                         "aggregation buffer every M landed updates "
+                         "(fedbuff:M aggregator); 0 = synchronous barrier")
+    ap.add_argument("--staleness-alpha", type=float, default=0.0,
+                    help="staleness discount exponent for --async-buffer: "
+                         "fired weights scale by (1+age)^-alpha")
+    ap.add_argument("--churn", default=None, metavar="P_LEAVE[:P_JOIN]",
+                    help="per-tick Bernoulli client churn probabilities "
+                         "(needs --async-buffer), e.g. '0.05:0.1'")
     ap.add_argument("--dump-spec", action="store_true",
                     help="print the resolved ExperimentSpec JSON and exit")
     ap.add_argument("--out", default=None)

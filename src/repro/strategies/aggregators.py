@@ -20,7 +20,7 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
-from repro.api.registry import AGGREGATORS, Strategy
+from repro.api.registry import AGGREGATORS, Strategy, StrategyError
 from repro.core.algorithms import ServerMomentum
 from repro.kernels import ops
 from repro.utils.trees import (tree_flatten_vector,
@@ -35,6 +35,86 @@ class FedAvgAggregator(Strategy):
 
     fuses_with_engine = True
     traceable = True
+
+    def aggregate(self, global_params, stacked_params, weights):
+        return tree_weighted_mean_stacked(stacked_params, weights)
+
+    def reset(self):
+        pass
+
+    # -- flat-plane traced contract (the scanned hot path) --------------
+    def init_flat_state(self, global_vec):
+        return None
+
+    def aggregate_flat(self, global_vec, rows, weights, opt_state):
+        return ops.flat_aggregate(rows, weights), opt_state
+
+    def load_flat_state(self, opt_state, spec):
+        pass
+
+
+@AGGREGATORS.register("fedbuff")
+@dataclass
+class FedBuffAggregator(Strategy):
+    """FedBuff (Nguyen et al. 2022): buffered asynchronous aggregation.
+    Spelled ``fedbuff:M[:alpha]`` in compact form — the buffer fires when
+    ``m`` updates have landed, folding them with staleness-discounted
+    weights ``w ∝ (1 + age)^(-alpha)``.
+
+    Marking itself ``async_capable`` routes ``run_rounds`` to the
+    buffered-asynchronous tick loop (``repro.core.async_engine``); the
+    engine pre-discounts the weights via :meth:`staleness_weights`, so
+    ``aggregate_flat`` is the same single masked row-reduction as FedAvg
+    — which is exactly what makes the sync-degeneracy parity pin
+    (``fedbuff:M>=K`` + ``alpha=0`` ≡ scanned fedavg) hold bit for bit.
+    """
+
+    m: int = 10
+    alpha: float = 0.0
+
+    fuses_with_engine = False
+    traceable = True
+    async_capable = True
+
+    def __post_init__(self):
+        if self.m < 1:
+            raise StrategyError(
+                f"fedbuff buffer size must be >= 1 (got {self.m})")
+        if self.alpha < 0:
+            raise StrategyError(
+                f"fedbuff staleness exponent must be >= 0 (got {self.alpha})")
+
+    @classmethod
+    def from_string(cls, arg):
+        """``fedbuff:M[:alpha]`` — Registry.resolve splits at the FIRST
+        colon only, so ``arg`` may itself carry an ``M:alpha`` pair."""
+        if arg is None or arg == "":
+            return cls()
+        m_s, _, alpha_s = arg.partition(":")
+        try:
+            m = int(m_s)
+            alpha = float(alpha_s) if alpha_s else 0.0
+        except ValueError:
+            raise StrategyError(
+                f"fedbuff:{arg}: expected 'M[:alpha]' with integer M and "
+                "float alpha") from None
+        return cls(m=m, alpha=alpha)
+
+    @property
+    def buffer_size(self) -> int:
+        return self.m
+
+    @property
+    def staleness_alpha(self) -> float:
+        return self.alpha
+
+    def staleness_weights(self, age):
+        """Per-client staleness discount ``(1 + age)^(-alpha)``. The
+        ``alpha == 0`` branch is static so the degenerate config multiplies
+        by nothing at all (bit-parity with plain fedavg weights)."""
+        if self.alpha == 0.0:
+            return jnp.ones_like(age)
+        return jnp.power(1.0 + age, -self.alpha)
 
     def aggregate(self, global_params, stacked_params, weights):
         return tree_weighted_mean_stacked(stacked_params, weights)

@@ -26,7 +26,8 @@ from repro.core.wireless import effective_arrays, fleet_arrays, rate_mbps
 from repro.strategies.traced import (select_divergence_traced,
                                      select_icas_traced,
                                      select_kmeans_random_traced,
-                                     select_random_traced, select_rra_traced)
+                                     select_random_traced, select_rra_traced,
+                                     select_stochastic_sched_traced)
 
 
 def _require_clusters(ctx: SelectionContext, name: str):
@@ -129,6 +130,43 @@ class ICASSelector(Strategy):
             divergences, arr, bandwidth_mhz=ctx.bandwidth_mhz,
             num_devices=ctx.num_devices, S=ctx.devices_per_round,
             beta=self.beta)
+
+
+@SELECTORS.register("stochastic-sched")
+@dataclass(frozen=True)
+class StochasticSchedSelector(Strategy):
+    """Churn-aware stochastic scheduling (Perazzone et al. [arXiv
+    2201.07912] style): independent per-device participation probabilities
+    proportional to energy headroom over per-round cost, normalized to an
+    expected set size of ``devices_per_round``. The traced form reads the
+    async engine's ``arr["avail"]`` churn mask, so a churned-out client's
+    probability is exactly zero — the selector of choice for the
+    buffered-asynchronous tick loop."""
+
+    traceable = True
+    needs_rng = True
+    needs_divergence = False
+
+    def select(self, ctx: SelectionContext) -> np.ndarray:
+        arr = effective_arrays(fleet_arrays(ctx.fleet))
+        S = ctx.devices_per_round
+        cost = (np.asarray(arr["H"]
+                           / rate_mbps(ctx.bandwidth_mhz / S, arr["J"]))
+                + np.asarray(arr["G"]) * np.square(np.asarray(arr["f_max"])))
+        ratio = np.asarray(arr["e_cons"]) / np.maximum(cost, 1e-12)
+        p = np.clip(S * ratio / max(float(ratio.sum()), 1e-12), 0.0, 1.0)
+        mask = ctx.rng.random(ctx.num_devices) < p
+        if not mask.any():               # never empty (mirrors the port)
+            mask[int(np.argmax(ratio))] = True
+        return np.flatnonzero(mask)
+
+    def pad_size(self, ctx: TracedContext) -> int:
+        return ctx.num_devices          # the participating set size varies
+
+    def select_traced(self, key, divergences, labels, arr, ctx: TracedContext):
+        return select_stochastic_sched_traced(
+            key, arr, bandwidth_mhz=ctx.bandwidth_mhz,
+            num_devices=ctx.num_devices, S=ctx.devices_per_round)
 
 
 @SELECTORS.register("rra")

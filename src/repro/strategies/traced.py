@@ -72,6 +72,31 @@ def select_icas_traced(divergences, arr, *, bandwidth_mhz: float,
     return idx.astype(jnp.int32), jnp.ones((S,), bool)
 
 
+def select_stochastic_sched_traced(key, arr, *, bandwidth_mhz: float,
+                                   num_devices: int, S: int):
+    """Churn-aware stochastic scheduling (Perazzone et al., arXiv
+    2201.07912 style): each device participates independently with a
+    probability proportional to its energy headroom over its per-round
+    cost (transmission + computation energy at full clock), normalized so
+    the EXPECTED participating-set size is ``S``. An ``arr["avail"]``
+    vector (the async engine's churn mask, 1.0/0.0) zeroes unavailable
+    devices' probabilities — a churned-out client is never sampled."""
+    avail = arr.get("avail")
+    arr = effective_arrays(arr)
+    cost = (arr["H"] / rate_mbps(bandwidth_mhz / S, arr["J"])
+            + arr["G"] * jnp.square(arr["f_max"]))
+    ratio = arr["e_cons"] / jnp.maximum(cost, 1e-12)
+    if avail is not None:
+        ratio = ratio * avail
+    p = jnp.clip(S * ratio / jnp.maximum(jnp.sum(ratio), 1e-12), 0.0, 1.0)
+    mask = jax.random.uniform(key, (num_devices,)) < p
+    # never empty: fall back to the highest-headroom (available) device
+    mask = jnp.where(jnp.any(mask), mask,
+                     jnp.arange(num_devices) == jnp.argmax(ratio))
+    idx = jnp.where(mask, jnp.arange(num_devices), num_devices)
+    return idx.astype(jnp.int32), mask
+
+
 def select_rra_traced(key, arr, *, bandwidth_mhz: float, num_devices: int,
                       target_mean: int):
     """RRA: energy-efficiency thresholding as a fixed-size (N-lane) masked

@@ -1,0 +1,277 @@
+"""Buffered-asynchronous tick engine: fedbuff registry/spec round-trips,
+the sync-degeneracy parity pin, staleness accounting, client churn (masked
+selection, dynamic active set, the all-departed empty-fire no-op), the
+stochastic-sched selector, and the staleness-weight property suite."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (AGGREGATORS, SELECTORS, AsyncState, ExperimentSpec,
+                       StrategyError, build_cohort, build_experiment)
+from repro.core.async_engine import parse_churn
+from repro.core.wireless import completion_times, sample_fleet, fleet_arrays
+from repro.strategies.traced import select_stochastic_sched_traced
+from tests.hypothesis_compat import given, settings, st
+
+TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
+            train_samples=160, test_samples=80, local_iters=2, batch_size=8,
+            rounds=2, devices_per_round=4, num_clusters=4,
+            learning_rate=0.05)
+
+
+# ---------------------------------------------------------------------------
+# registry / spec plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_fedbuff_resolve_and_validation():
+    agg = AGGREGATORS.resolve("fedbuff:4:0.5")
+    assert agg.m == 4 and agg.alpha == 0.5
+    assert agg.async_capable and agg.traceable
+    assert agg.buffer_size == 4 and agg.staleness_alpha == 0.5
+    assert AGGREGATORS.resolve("fedbuff:3").alpha == 0.0
+    assert AGGREGATORS.resolve("fedbuff").m == 10
+    with pytest.raises(StrategyError, match=">= 1"):
+        AGGREGATORS.resolve("fedbuff:0")
+    with pytest.raises(StrategyError, match=">= 0"):
+        AGGREGATORS.resolve("fedbuff:4:-1")
+    with pytest.raises(StrategyError, match="M"):
+        AGGREGATORS.resolve("fedbuff:x")
+    # synchronous aggregators do not advertise the async contract
+    assert not getattr(AGGREGATORS.resolve("fedavg"), "async_capable", False)
+
+
+def test_fedbuff_spec_round_trip():
+    spec = ExperimentSpec(**TINY, aggregator="fedbuff:4:0.5",
+                          churn_leave=0.1, churn_join=0.2)
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.aggregator == {"name": "fedbuff",
+                               "params": {"m": 4, "alpha": 0.5}}
+    assert back.churn_leave == 0.1 and back.churn_join == 0.2
+
+
+def test_parse_churn():
+    assert parse_churn(None) == (0.0, 0.0)
+    assert parse_churn("0.3") == (0.3, 0.0)
+    assert parse_churn("0.3:0.1") == (0.3, 0.1)
+    assert parse_churn((0.2, 0.4)) == (0.2, 0.4)
+    assert parse_churn(0.5) == (0.5, 0.0)
+    with pytest.raises(ValueError, match=r"\[0, 1\]"):
+        parse_churn("1.5")
+    with pytest.raises(ValueError, match="numeric"):
+        parse_churn("often")
+    with pytest.raises(ValueError):
+        parse_churn((0.1, 0.2, 0.3))
+
+
+def test_churn_requires_async_aggregator():
+    with pytest.raises(ValueError, match="async"):
+        build_experiment(ExperimentSpec(**TINY, churn_leave=0.5))
+
+
+def test_completion_times_masks_to_inf():
+    arr = fleet_arrays(sample_fleet(4, seed=0))
+    b = jnp.full((4,), 5.0)
+    f = jnp.full((4,), 1.0)
+    d = np.asarray(completion_times(arr, b, f))
+    assert np.isfinite(d).all() and (d > 0).all()
+    mask = jnp.array([True, False, True, False])
+    dm = np.asarray(completion_times(arr, b, f, mask))
+    assert np.isfinite(dm[[0, 2]]).all()
+    assert np.isinf(dm[[1, 3]]).all()
+
+
+# ---------------------------------------------------------------------------
+# the sync-degeneracy parity pin
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_fedbuff_full_buffer_is_sync_fedavg_bit_identical():
+    """Parity pin: fedbuff with the buffer >= the padded selection size,
+    alpha=0 and no churn degenerates to the synchronous scanned fedavg
+    round — the tick is built from the same phase closures, so the whole
+    history matches bit for bit."""
+    h_sync = build_experiment(ExperimentSpec(**TINY)).run()
+    # M=8 >= pad (num_clusters * selected_per_cluster = 4) on 8 clients
+    h_buf = build_experiment(
+        ExperimentSpec(**TINY, aggregator="fedbuff:8:0")).run()
+    assert h_sync.accuracy == h_buf.accuracy
+    assert h_sync.T_k == h_buf.T_k
+    assert h_sync.E_k == h_buf.E_k
+    assert all(np.array_equal(a, b)
+               for a, b in zip(h_sync.selected, h_buf.selected))
+
+
+# ---------------------------------------------------------------------------
+# staleness accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_small_buffer_builds_staleness():
+    """M=1 on a pad-4 selection leaves stragglers in flight: the mean
+    fired-age trace must become positive, while every tick still folds
+    exactly one update and the full fleet stays active (no churn)."""
+    spec = ExperimentSpec(**{**TINY, "rounds": 3},
+                          aggregator="fedbuff:1:0.5", cohort=2)
+    ch = build_cohort(spec).run(transfer_guard=True)
+    assert ch.participation.shape == ch.staleness.shape == (2, 3)
+    assert (ch.participation >= 1).all()
+    assert ch.staleness.max() > 0
+    assert (ch.active == TINY["clients"]).all()
+    assert np.isfinite(ch.accuracy).all()
+    # sync runs don't grow the traces
+    ch_sync = build_cohort(ExperimentSpec(**TINY, cohort=2)).run()
+    assert ch_sync.participation is None and ch_sync.staleness is None
+
+
+@pytest.mark.slow
+def test_async_state_persists_across_runs():
+    """Incremental run() calls continue the virtual clock: the AsyncState
+    carry survives the host boundary via FLExperiment.sched."""
+    exp = build_experiment(ExperimentSpec(**TINY, aggregator="fedbuff:2"))
+    assert exp.sched is None
+    exp.run(rounds=1)
+    assert isinstance(exp.sched, AsyncState)
+    t1 = float(exp.sched.t_now)
+    exp.run(rounds=1, include_initial_round=False)
+    assert float(exp.sched.t_now) >= t1
+
+
+# ---------------------------------------------------------------------------
+# churn
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_churn_never_selects_unavailable_clients():
+    """Masked-selection regression: the engine's post-filter drops
+    unavailable (and in-flight) clients from the dispatched set. The churn
+    step precedes selection inside the tick and availability does not
+    change afterwards, so after each single-tick run the final
+    ``sched.avail`` IS the mask the selector saw."""
+    exp = build_experiment(ExperimentSpec(
+        **TINY, aggregator="fedbuff:2", selection="stochastic-sched",
+        churn_leave=0.4, churn_join=0.4))
+    hist = exp.run(rounds=1)
+    for _ in range(4):
+        h = exp.run(rounds=1, include_initial_round=False)
+        avail_idx = set(np.flatnonzero(np.asarray(exp.sched.avail)).tolist())
+        assert {int(i) for i in h.selected[-1]} <= avail_idx
+        # in-flight bookkeeping never touches unavailable clients
+        t_done = np.asarray(exp.sched.t_done)
+        avail = np.asarray(exp.sched.avail)
+        assert np.isinf(t_done[~avail]).all()
+    assert hist is not None
+
+
+@pytest.mark.slow
+def test_churn_dynamic_active_set():
+    spec = ExperimentSpec(**{**TINY, "rounds": 4},
+                          aggregator="fedbuff:2", cohort=2,
+                          churn_leave=0.3, churn_join=0.3)
+    ch = build_cohort(spec).run(transfer_guard=True)
+    assert ch.active.shape == (2, 4)
+    assert ch.active.min() < TINY["clients"]      # somebody left
+    assert np.isfinite(ch.accuracy).all()
+    assert np.isfinite(ch.T_k).all() and np.isfinite(ch.E_k).all()
+
+
+@pytest.mark.slow
+def test_empty_fire_is_a_noop():
+    """Everyone departs at tick 1 (churn_leave=1, churn_join=0): every
+    dispatch is empty, the buffer never fires, and the tick must pass the
+    global row through untouched — constant accuracy, zero participation,
+    no NaN anywhere in the carried history."""
+    spec = ExperimentSpec(**{**TINY, "rounds": 3},
+                          aggregator="fedbuff:2", cohort=1,
+                          churn_leave=1.0, churn_join=0.0)
+    ch = build_cohort(spec).run(transfer_guard=True)
+    assert (ch.active == 0).all()
+    assert (ch.participation == 0).all()
+    assert (ch.staleness == 0).all()
+    assert np.isfinite(ch.accuracy).all()
+    assert np.isfinite(ch.T_k).all() and np.isfinite(ch.E_k).all()
+    # the global model froze after the initial round: accuracy is constant
+    assert len(set(ch.accuracy[0][1:].tolist())) == 1
+
+
+# ---------------------------------------------------------------------------
+# stochastic-sched selector
+# ---------------------------------------------------------------------------
+
+
+def test_stochastic_sched_resolve():
+    sel = SELECTORS.resolve("stochastic-sched")
+    assert sel.traceable and sel.needs_rng and not sel.needs_divergence
+
+
+def test_stochastic_sched_traced_respects_avail():
+    arr = fleet_arrays(sample_fleet(16, seed=3))
+    arr = dict(arr)
+    avail = np.zeros(16, np.float32)
+    avail[[2, 5, 11]] = 1.0
+    arr["avail"] = jnp.asarray(avail)
+    for s in range(8):
+        idx, mask = select_stochastic_sched_traced(
+            jax.random.PRNGKey(s), arr, bandwidth_mhz=20.0,
+            num_devices=16, S=6)
+        assert idx.shape == mask.shape == (16,)
+        chosen = np.asarray(idx)[np.asarray(mask)]
+        assert set(chosen.tolist()) <= {2, 5, 11}
+        assert len(chosen) >= 1                  # never-empty fallback
+        # padding lanes hold the OOB sentinel
+        assert (np.asarray(idx)[~np.asarray(mask)] == 16).all()
+
+
+def test_stochastic_sched_host_expected_size():
+    """Host form: the expected participating-set size tracks S."""
+    from repro.api.protocols import SelectionContext
+    fleet = sample_fleet(40, seed=1)
+    sel = SELECTORS.resolve("stochastic-sched")
+    rng = np.random.default_rng(0)
+    ctx = SelectionContext(
+        rng=rng, num_devices=40, devices_per_round=10,
+        selected_per_cluster=1, bandwidth_mhz=20.0, fleet=fleet,
+        clusters=None, divergences=lambda: np.zeros(40))
+    counts = [len(sel.select(ctx)) for _ in range(40)]
+    mean = float(np.mean(counts))
+    assert 5.0 < mean < 15.0
+    assert min(counts) >= 1
+
+
+# ---------------------------------------------------------------------------
+# staleness-weight properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@given(ages=st.lists(st.floats(min_value=0.0, max_value=100.0),
+                     min_size=2, max_size=32),
+       alpha=st.floats(min_value=0.0, max_value=4.0))
+@settings(max_examples=50, deadline=None)
+def test_staleness_weight_properties(ages, alpha):
+    """w ∝ (1+age)^(-alpha): positive, normalizable over any fired buffer,
+    monotonically non-increasing in age, and exactly uniform at alpha=0."""
+    agg = AGGREGATORS.resolve({"name": "fedbuff",
+                               "params": {"m": 2, "alpha": alpha}})
+    age = jnp.asarray(np.asarray(ages, np.float64))
+    w = np.asarray(agg.staleness_weights(age), np.float64)
+    assert (w > 0).all() and (w <= 1.0 + 1e-12).all()
+    wn = w / w.sum()
+    assert abs(wn.sum() - 1.0) < 1e-9
+    order = np.argsort(ages)
+    assert (np.diff(w[order]) <= 1e-12).all()    # non-increasing in age
+    if alpha == 0.0:
+        assert np.array_equal(w, np.ones_like(w))
+
+
+@given(alpha=st.floats(min_value=1e-3, max_value=4.0))
+@settings(max_examples=25, deadline=None)
+def test_staleness_weights_discount_strictly(alpha):
+    agg = AGGREGATORS.resolve({"name": "fedbuff",
+                               "params": {"m": 2, "alpha": alpha}})
+    w = np.asarray(agg.staleness_weights(jnp.asarray([0.0, 1.0, 4.0])))
+    assert w[0] == 1.0 and w[0] > w[1] > w[2]
