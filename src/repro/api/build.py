@@ -17,6 +17,12 @@ from repro.configs.base import FLConfig
 from repro.configs.paper_cnn import CNN_CONFIGS
 
 
+#: clients at/above which a paged build keeps the data partition lazy
+#: (index-backed); below it even paged experiments materialize the
+#: per-client image stack so the host round loop stays simple
+LAZY_PARTITION_MIN = 50_000
+
+
 def fl_config_from_spec(spec: ExperimentSpec,
                         num_devices: Optional[int] = None) -> FLConfig:
     return FLConfig(num_devices=num_devices or spec.clients,
@@ -93,7 +99,8 @@ def build_experiment(spec: ExperimentSpec, *, cell: int = 0,
     benchmarks that probe on a train slice instead).
     """
     from repro.core.fedavg import FLExperiment       # driver (late: cycle)
-    from repro.data import make_dataset, partition_bias
+    from repro.data import (make_dataset, partition_bias,
+                            partition_bias_lazy)
 
     if spec.model != "auto":
         raise ValueError(
@@ -113,9 +120,16 @@ def build_experiment(spec: ExperimentSpec, *, cell: int = 0,
         test_images, test_labels = test.images, test.labels
     else:
         test_images, test_labels = test_data
-    fed = partition_bias(ds, n, spec.samples_per_client, spec.sigma,
-                         seed=spec.resolved_partition_seed
-                         + CELL_SEED_STRIDE * cell)
+    # population-scale paged fleets partition lazily: per-client sample
+    # INDICES into the shared pool instead of a materialized
+    # [N, D, H, W, C] stack (which at 1e6 clients would dwarf the model
+    # plane the paged store exists to avoid)
+    partition = (partition_bias_lazy
+                 if spec.store == "paged" and n >= LAZY_PARTITION_MIN
+                 else partition_bias)
+    fed = partition(ds, n, spec.samples_per_client, spec.sigma,
+                    seed=spec.resolved_partition_seed
+                    + CELL_SEED_STRIDE * cell)
 
     exp = FLExperiment(
         cnn_cfg, fed, test_images, test_labels, fleet,
@@ -129,7 +143,11 @@ def build_experiment(spec: ExperimentSpec, *, cell: int = 0,
         seed=spec.seed,
         batch_size=spec.batch_size,
         fedprox_mu=spec.fedprox_mu,
-        churn=(spec.churn_leave, spec.churn_join))
+        churn=(spec.churn_leave, spec.churn_join),
+        store=spec.store,
+        k_max=spec.k_max,
+        chunk_size=spec.chunk_size,
+        div_refresh_every=spec.div_refresh_every)
     exp.spec = spec
     exp.cell = cell
     return exp

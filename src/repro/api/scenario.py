@@ -56,7 +56,8 @@ CELL_SEED_STRIDE = 7919
 __all__ = ["CellSpec", "FleetSpec", "build_fleet", "CHANNELS",
            "register_channel", "StaticChannel", "RayleighBlockChannel",
            "GaussMarkovChannel", "MulticellInterferenceChannel",
-           "MulticellDynamicChannel"]
+           "MulticellDynamicChannel", "multicell_fleet_spec",
+           "population_fleet_spec"]
 
 
 # ---------------------------------------------------------------------------
@@ -448,6 +449,16 @@ def multicell_fleet_spec(num_cells: int, **kw) -> FleetSpec:
                      "multicell-interference" if num_cells > 1 else "static")
     return FleetSpec(cells=tuple(CellSpec() for _ in range(num_cells)),
                      channel=channel, **kw)
+
+
+def population_fleet_spec(num_clients: int, **kw) -> FleetSpec:
+    """Convenience: one static cell serving ``num_clients`` devices — the
+    population-scale scenario (``ExperimentSpec(store="paged", ...)``).
+    All fleet draws are vectorized, so a 1e6-device build is O(N) numpy;
+    pair with the ``micro`` CNN config and a lazy partition (automatic
+    above ``repro.api.build.LAZY_PARTITION_MIN`` clients) to keep the
+    whole experiment O(K·P + N)."""
+    return FleetSpec(cells=(CellSpec(devices=int(num_clients)),), **kw)
 
 
 # ---------------------------------------------------------------------------

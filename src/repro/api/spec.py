@@ -66,6 +66,20 @@ class ExperimentSpec:
     feature_layer: str = "auto"            # K-means feature (Alg. 2)
     fedprox_mu: float = 0.0                # >0 → FedProx client objective
 
+    # ---- client parameter store (population-scale fleets) ------------
+    store: str = "dense"                   # "dense": the [N, P] device plane
+                                           # (bit-identical default);
+                                           # "paged": active/cold split —
+                                           # O(K·P) device state + host-paged
+                                           # cold blocks (repro.core.store)
+    k_max: Optional[int] = None            # active-plane rows (paged);
+                                           # None → max(S, 256) capped at N
+    chunk_size: Optional[int] = None       # cold-store block rows (paged);
+                                           # None → ~64 MB blocks
+    div_refresh_every: int = 0             # paged divergence refresh cadence:
+                                           # 1 = every selection (exact dense
+                                           # signal), 0 = lazy (drift-bounded)
+
     # ---- client churn (buffered-asynchronous engine only) ------------
     churn_leave: float = 0.0               # per-tick P(available → gone)
     churn_join: float = 0.0                # per-tick P(gone → available)
@@ -90,6 +104,16 @@ class ExperimentSpec:
     version: int = SPEC_VERSION
 
     def __post_init__(self):
+        if self.store not in ("dense", "paged"):
+            raise ValueError(f"store={self.store!r}: expected 'dense' or "
+                             "'paged'")
+        for name in ("k_max", "chunk_size"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be positive; got {v}")
+        if self.div_refresh_every < 0:
+            raise ValueError("div_refresh_every must be >= 0; got "
+                             f"{self.div_refresh_every}")
         if self.fleet is not None and not isinstance(self.fleet, FleetSpec):
             object.__setattr__(self, "fleet", FleetSpec.from_dict(self.fleet))
         object.__setattr__(self, "selection",

@@ -40,9 +40,15 @@ class CNNConfig:
 MNIST_CNN = CNNConfig("mnist_cnn", (28, 28), 1, 15, 28, 224, 10)
 CIFAR10_CNN = CNNConfig("cifar10_cnn", (32, 32), 3, 15, 28, 300, 10)
 FASHION_CNN = CNNConfig("fashion_cnn", (28, 28), 1, 10, 12, 80, 10)
+# beyond-paper: a deliberately tiny model (P ≈ 6k) for population-scale
+# runs and N-scaling benches, where the paper CNNs' P would make even the
+# O(N) bookkeeping swamp the signal being measured
+MICRO_CNN = CNNConfig("micro_cnn", (16, 16), 1, 8, 16, 64, 10,
+                      kernel=3, pool=2)
 
 CNN_CONFIGS = {
     "mnist": MNIST_CNN,
     "cifar10": CIFAR10_CNN,
     "fashion": FASHION_CNN,
+    "micro": MICRO_CNN,
 }

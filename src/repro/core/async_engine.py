@@ -13,7 +13,8 @@ own pace, and the server folds updates as they land. This engine replaces
   * the aggregation buffer fires when the ``M`` earliest in-flight
     completions land (``fedbuff:M[:alpha]``), folding them into the global
     row with staleness-discounted weights ``w ∝ (1 + age)^(-alpha)``
-    through the same ``ops.flat_aggregate`` masked row-reduction;
+    through the same ``ops.flat_aggregate`` row-reduction — over the M
+    gathered candidate rows only (O(M·P) per tick, not O(N·P));
     stragglers stay in flight and age;
   * Bernoulli churn streams flip a per-client availability mask riding the
     carry — departures cancel in-flight work, arrivals rejoin the pool —
@@ -202,11 +203,20 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
         t_fire = jnp.maximum(sched.t_now,
                              masked_max(t_done, fired, empty=sched.t_now))
 
-        w = jnp.where(fired, sizes, 0.0)
+        # the server fold touches only the M buffer-candidate rows
+        # (``fired ⊆ order[:M]`` by construction) — an O(M·P) gather +
+        # reduction instead of the full-plane O(N·P) masked sweep, which
+        # at population scale dwarfed the actual training. Candidates are
+        # sorted into CLIENT-INDEX order first, so the nonzero summation
+        # order (and hence the fp32 result) matches the full-plane
+        # reduction this replaces.
+        cand = jnp.sort(order[:M])
+        fired_cand = jnp.isfinite(t_done[cand])
+        w_cand = jnp.where(fired_cand, sizes[cand], 0.0)
         if alpha != 0.0:
-            w = w * aggregator.staleness_weights(sched.age)
+            w_cand = w_cand * aggregator.staleness_weights(sched.age[cand])
         agg_vec, agg_opt = aggregator.aggregate_flat(
-            state.params, state.client_params, w, state.opt_state)
+            state.params, state.client_params[cand], w_cand, state.opt_state)
         # EMPTY-FIRE GUARD: flat_aggregate normalizes by max(Σw, eps), so
         # an all-zero weight row yields a ZERO vector — an empty tick must
         # instead pass the old global (and optimizer state) through

@@ -80,8 +80,17 @@ def extract_features_flat(client_flat: jnp.ndarray, layer: str,
     ``extract_features`` on the equivalent stacked pytree bit for bit
     (bare leaf names resolve through nested paths like ``_lookup`` does).
     """
+    cols = resolve_feature_columns(spec, layer)
+    return client_flat if cols is None else client_flat[:, cols]
+
+
+def resolve_feature_columns(spec: StackFlattenSpec, layer: str):
+    """The feature layer's column slice of a flat row (``None`` = the whole
+    row, i.e. ``layer="all"``). Shared by the dense zero-copy slice above
+    and the paged store's chunk-at-a-time feature assembly, so both views
+    read identical columns."""
     if layer == "all":
-        return client_flat
+        return None
     if layer == "auto":
         layer = (_resolve_flat_layer(spec, "w_fc2")
                  or _resolve_flat_layer(spec, "lm_head")
@@ -91,7 +100,7 @@ def extract_features_flat(client_flat: jnp.ndarray, layer: str,
         if resolved is None:
             raise KeyError(layer)
         layer = resolved
-    return client_flat[:, spec.columns(layer)]
+    return spec.columns(layer)
 
 
 # ---------------------------------------------------------------------------

@@ -149,6 +149,12 @@ class CohortRunner:
     """
 
     def __init__(self, spec):
+        if getattr(spec, "store", "dense") != "dense":
+            raise ValueError(
+                "CohortRunner scans the dense [N, P] client plane as a "
+                "vmapped carry; store='paged' runs the host round loop — "
+                "drive seeds through build_experiment(spec) / "
+                "FLExperiment.run instead")
         self.spec = spec
         self.experiments: List[FLExperiment] = []
 

@@ -24,6 +24,12 @@ Model weights travel on the FLAT PARAMETER PLANE (one [P] global row, one
 [N, P] client buffer; ``model_flat_spec``), every per-round reduction is a
 single fused row op routed through ``repro.kernels.ops``, and the scanned
 carry is donated — see ``docs/PERF.md``.
+
+At population scale (``store="paged"``) the [N, P] plane never
+materializes: the driver pages a host cold store (``repro.core.store``)
+and the engine only ever sees the round's ACTIVE [K, P] rows
+(``gather_rows`` / ``scatter_rows`` / ``rows_divergence``) — selection
+reads the O(N) per-client statistics table instead of reducing the plane.
 """
 from __future__ import annotations
 
@@ -136,6 +142,14 @@ class RoundEngine:
         self.scatter_rows = jax.jit(
             lambda buf, idx, rows: buf.at[idx].set(rows),
             donate_argnums=(0,))
+        # active-plane row gather (the paged store ships only the round's
+        # K rows to device; the dense store slices its resident plane)
+        self.gather_rows = jax.jit(lambda buf, idx: buf[idx])
+        # per-row divergence of an ACTIVE [K, P] block against the global
+        # row — the paged driver's stats-table refresh: O(K·P) per round
+        # instead of the dense select phase's O(N·P) full-plane reduction
+        self.rows_divergence = jax.jit(
+            lambda rows, gvec: ops.client_divergence(rows, gvec))
 
     @classmethod
     def shared(cls, cfg: EngineConfig) -> "RoundEngine":

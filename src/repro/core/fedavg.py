@@ -35,15 +35,18 @@ import repro.strategies  # noqa: F401  (populate the registries)
 from repro.configs.base import FLConfig
 from repro.configs.paper_cnn import CNNConfig
 from repro.core.clustering import (kmeans_fit, extract_features_flat,
-                                   clusters_from_labels)
+                                   clusters_from_labels,
+                                   resolve_feature_columns)
 from repro.core.divergence import weight_divergence_flat
 from repro.core.engine import (EngineConfig, RoundEngine, RoundResult,
                                TracedRunResult, make_local_update, run_rounds)
+from repro.core.store import ClientStats, build_store
 from repro.core.wireless import Fleet, fleet_arrays
 from repro.data.partition import FederatedData
+from repro.kernels.chunked import default_chunk_size, streaming_weighted_mean
 from repro.utils.trees import (flatten_stacked, tree_flatten_vector,
                                tree_num_params, unflatten_rows,
-                               unflatten_vector)
+                               unflatten_rows_np, unflatten_vector)
 
 __all__ = ["FLExperiment", "FLHistory", "RoundResult", "make_local_update"]
 
@@ -92,7 +95,10 @@ class FLExperiment:
                  compression: Any = "none", fedprox_mu: float = 0.0,
                  server_momentum: float = 0.0, channel: Any = "static",
                  selection: Any = None, aggregator: Any = None,
-                 churn: Any = None):
+                 churn: Any = None, store: str = "dense",
+                 k_max: Optional[int] = None,
+                 chunk_size: Optional[int] = None,
+                 div_refresh_every: int = 0):
         self.cnn_cfg = cnn_cfg
         self.fed = fed
         self.fleet = fleet
@@ -123,12 +129,20 @@ class FLExperiment:
         self.channel = CHANNELS.resolve(channel)
         from repro.core.async_engine import parse_churn
         self.churn = parse_churn(churn)
-        if (self.churn != (0.0, 0.0)
+        if (self.churn != (0.0, 0.0) and store != "paged"
                 and not getattr(self.aggregator, "async_capable", False)):
             raise ValueError(
-                "client churn is a property of the buffered-asynchronous "
-                "engine; configure an async-capable aggregator "
-                "(e.g. aggregator='fedbuff:4') to enable it")
+                "client churn needs an engine that tracks availability: "
+                "either the buffered-asynchronous engine (an async-capable "
+                "aggregator, e.g. aggregator='fedbuff:4') or the paged "
+                "client store (store='paged'), whose round loop flips the "
+                "stats table's availability mask")
+        if store == "paged" and getattr(self.aggregator, "async_capable",
+                                        False):
+            raise ValueError(
+                "store='paged' drives the host round loop; the buffered-"
+                "asynchronous engine exists only as a scanned program over "
+                "the dense plane — use store='dense' with fedbuff")
         # buffered-async bookkeeping (AsyncState) carried between traced
         # runs, so incremental run() calls continue the virtual clock
         self.sched = None
@@ -139,18 +153,42 @@ class FLExperiment:
             fedprox_mu=fedprox_mu))
 
         self.global_params = self.engine.init_params(self._next_key())
-        # the flat parameter plane: all N client models as one [N, P]
-        # buffer (row layout = engine.flat_spec; updated in place for the
-        # selected rows each round via the engine's donated scatter)
+        # the client parameter store: all N client models, either as the
+        # dense device-resident [N, P] plane (row layout =
+        # engine.flat_spec; updated in place for the selected rows each
+        # round via the engine's donated scatter) or as the host-paged
+        # active/cold split (repro.core.store) whose only O(N) hot state
+        # is the per-client stats table
         gvec = tree_flatten_vector(self.global_params)
-        self.client_params = jnp.broadcast_to(
-            gvec, (fed.num_clients, gvec.shape[0])).copy()
+        self.chunk_size = int(chunk_size or default_chunk_size(gvec.shape[0]))
+        self.k_max = int(k_max or min(fed.num_clients,
+                                      max(fl.devices_per_round, 256)))
+        self._store = build_store(store, gvec, fed.num_clients, self.engine,
+                                  self.chunk_size)
+        self.stats = ClientStats.create(fed.num_clients)
+        self._div_refresh_every = int(div_refresh_every)
+        self._rounds_since_refresh = np.iinfo(np.int32).max  # force first
+        self._gvec_host = (np.asarray(gvec) if store == "paged" else None)
         self.clusters: Optional[List[np.ndarray]] = None
         self.cluster_labels: Optional[np.ndarray] = None
 
-        self._images = jnp.asarray(fed.images)
+        if getattr(fed, "lazy", False):
+            # lazy federated data: per-client SAMPLE INDICES into a shared
+            # pool instead of materialized [N, D, H, W, C] images — the
+            # per-round gather composes on device (pool + [S, D] indices)
+            if store != "paged":
+                raise ValueError(
+                    "lazy federated data (index-backed partition) requires "
+                    "store='paged'; the dense/traced paths consume the "
+                    "materialized [N, D, ...] image stack")
+            self._pool_images = jnp.asarray(fed.pool_images)
+            self._images = None
+        else:
+            self._pool_images = None
+            self._images = jnp.asarray(fed.images)
         self._labels = jnp.asarray(fed.labels)
         self._sizes = jnp.asarray(fed.sizes)
+        self._sizes_host = np.asarray(fed.sizes)
 
         # lossy uplink shrinks the payload -> z_n enters SAO via H_n, t_com
         n_par = tree_num_params(self.global_params)
@@ -170,6 +208,41 @@ class FLExperiment:
         self.key, sub = jax.random.split(self.key)
         return sub
 
+    # ------------------------------------------------------------------
+    @property
+    def store(self):
+        """The client parameter store (``DenseStore`` | ``PagedStore``)."""
+        return self._store
+
+    @property
+    def client_params(self) -> jnp.ndarray:
+        """The dense [N, P] plane (donation-managed by the round loop).
+
+        A paged store keeps no materialized plane — page through
+        ``client_tree(chunk_size=...)`` / ``iter_client_trees`` instead,
+        or read the O(N) ``stats`` table."""
+        if self._store.kind != "dense":
+            raise AttributeError(
+                "store='paged' keeps no [N, P] client buffer; use "
+                "client_tree()/iter_client_trees()/iter_client_features() "
+                "to page through the cold store, or read exp.stats")
+        return self._store.buffer
+
+    @client_params.setter
+    def client_params(self, value):
+        if self._store.kind != "dense":
+            raise AttributeError(
+                "store='paged' keeps no [N, P] client buffer to assign")
+        self._store.buffer = value
+
+    def _client_images(self, idx: np.ndarray) -> jnp.ndarray:
+        """The selected clients' sample stacks ``[S, D, H, W, C]`` —
+        a row gather for materialized data, a device-side pool gather for
+        lazy (index-backed) partitions."""
+        if self._pool_images is None:
+            return self._images[idx]
+        return self._pool_images[jnp.asarray(self.fed.indices[idx])]
+
     def evaluate(self):
         acc, per_class = self.engine.evaluate(
             self.global_params, self.test_images, self.test_labels)
@@ -182,7 +255,8 @@ class FLExperiment:
         idx = np.asarray(idx)
         keys = jax.random.split(self._next_key(), len(idx))
         new_params = self.engine.train_clients(
-            self.global_params, self._images[idx], self._labels[idx], keys)
+            self.global_params, self._client_images(idx), self._labels[idx],
+            keys)
         return self.compressor.apply(new_params, self.global_params)
 
     def aggregate(self, stacked_params, idx: np.ndarray):
@@ -193,52 +267,176 @@ class FLExperiment:
             self.global_params, stacked_params, weights)
 
     def store_clients(self, stacked_params, idx: np.ndarray):
-        """Write the clients' new models into the flat [N, P] plane.
+        """Write the clients' new models into the client store.
 
         Accepts flat ``[S, P]`` rows (the fused round step's output) or a
-        stacked pytree (flattened here). The scatter jit donates the old
-        buffer, so the plane updates in place instead of double-buffering
-        45 MB per round — external holders of ``client_params`` must copy
-        (see ``client_tree``)."""
+        stacked pytree (flattened here). On the dense store the scatter
+        jit donates the old buffer, so the plane updates in place instead
+        of double-buffering 45 MB per round — external holders of
+        ``client_params`` must copy (see ``client_tree``). On the paged
+        store the rows page out to the host cold store."""
         rows = (stacked_params
                 if isinstance(stacked_params, jnp.ndarray)
                 and stacked_params.ndim == 2
                 else flatten_stacked(stacked_params))
-        self.client_params = self.engine.scatter_rows(
-            self.client_params, jnp.asarray(np.asarray(idx)), rows)
+        self._store.scatter(np.asarray(idx), rows)
 
-    def client_tree(self):
-        """The client plane as a stacked pytree (leaves ``[N, ...]``) —
-        a COPY for external consumers; the buffer itself is donation-
-        managed by the round loop."""
-        return unflatten_rows(self.engine.flat_spec, self.client_params)
+    def client_tree(self, chunk_size: Optional[int] = None):
+        """The client store as a stacked pytree (host-numpy leaves
+        ``[N, ...]``) — always a COPY for external consumers (the dense
+        buffer is donation-managed by the round loop).
 
-    def client_features(self, layer: Optional[str] = None) -> jnp.ndarray:
-        """K-means feature view of the flat plane (zero-copy column
-        slice; Alg. 2's input). ``layer="all"``'s view IS the buffer, so
-        it is copied here — the next round's donated store would delete
-        it out from under the caller otherwise."""
-        feats = extract_features_flat(
-            self.client_params,
-            self.fl.feature_layer if layer is None else layer,
-            self.engine.flat_spec)
-        return jnp.array(feats) if feats is self.client_params else feats
+        Assembled by paging the store ``chunk_size`` rows at a time, so
+        peak memory beyond the (inherently O(N·P)) result is one chunk —
+        use :meth:`iter_client_trees` to stream without materializing the
+        full result at all."""
+        spec = self.engine.flat_spec
+        n = self.fed.num_clients
+        leaves = [np.empty((n,) + shape, dt)
+                  for shape, dt in zip(spec.shapes, spec.dtypes)]
+        start = 0
+        for block in self._store.iter_chunks(self._chunk(chunk_size)):
+            c = block.shape[0]
+            for leaf, off, size, shape in zip(leaves, spec.offsets,
+                                              spec.sizes, spec.shapes):
+                leaf[start:start + c] = (block[:, off:off + size]
+                                         .reshape((c,) + shape))
+            start += c
+        return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+    def iter_client_trees(self, chunk_size: Optional[int] = None):
+        """Stream the client store as ``(start_row, stacked pytree)``
+        blocks of at most ``chunk_size`` clients — O(chunk·P) peak."""
+        start = 0
+        for block in self._store.iter_chunks(self._chunk(chunk_size)):
+            yield start, unflatten_rows_np(self.engine.flat_spec, block)
+            start += block.shape[0]
+
+    def _chunk(self, chunk_size: Optional[int]) -> int:
+        return int(chunk_size) if chunk_size else self.chunk_size
+
+    def client_features(self, layer: Optional[str] = None,
+                        chunk_size: Optional[int] = None) -> jnp.ndarray:
+        """K-means feature matrix ``[N, F]`` (Alg. 2's input).
+
+        Dense store: a zero-copy column slice of the plane
+        (``layer="all"``'s view IS the buffer, so it is copied here — the
+        next round's donated store would delete it out from under the
+        caller otherwise). Paged store: assembled chunk-at-a-time from the
+        cold store (identical columns via the shared spec resolution), so
+        only the [N, F] feature block ever materializes."""
+        layer = self.fl.feature_layer if layer is None else layer
+        if self._store.kind == "dense":
+            feats = extract_features_flat(self.client_params, layer,
+                                          self.engine.flat_spec)
+            return (jnp.array(feats) if feats is self._store.buffer
+                    else feats)
+        cols = resolve_feature_columns(self.engine.flat_spec, layer)
+        blocks = [block if cols is None else block[:, cols]
+                  for block in self._store.iter_chunks(
+                      self._chunk(chunk_size))]
+        return jnp.asarray(np.concatenate(blocks, axis=0))
+
+    def iter_client_features(self, layer: Optional[str] = None,
+                             chunk_size: Optional[int] = None):
+        """Stream ``(start_row, [c, F] host feature block)`` pairs —
+        the O(chunk·P) iterator variant of :meth:`client_features`."""
+        layer = self.fl.feature_layer if layer is None else layer
+        cols = resolve_feature_columns(self.engine.flat_spec, layer)
+        start = 0
+        for block in self._store.iter_chunks(self._chunk(chunk_size)):
+            yield start, (np.asarray(block) if cols is None
+                          else np.asarray(block[:, cols]))
+            start += block.shape[0]
 
     # ------------------------------------------------------------------
     def initial_round(self):
-        """Round 0: all devices train; then K-means clustering (Alg. 2)."""
-        idx = np.arange(self.fed.num_clients)
-        new_params = self.train_clients(idx)
-        self.store_clients(new_params, idx)
-        self.aggregate(new_params, idx)
+        """Round 0: all devices train; then K-means clustering (Alg. 2).
+
+        On the paged store a fleet larger than ``k_max`` trains in waves
+        of ``k_max`` (the active-plane size), streaming the eq.-(4)
+        weighted mean across waves — a single wave (``k_max >= N``) takes
+        the dense host path verbatim and stays on the pinned numerics."""
+        n = self.fed.num_clients
+        idx = np.arange(n)
+        if self._store.kind == "dense" or n <= self.k_max:
+            new_params = self.train_clients(idx)
+            self.store_clients(new_params, idx)
+            self.aggregate(new_params, idx)
+        else:
+            self._initial_round_waves(idx)
         feats = self.client_features()
         _, labels, _ = kmeans_fit(self._next_key(), feats, self.fl.num_clusters)
         self.cluster_labels = np.asarray(labels)
         self.clusters = clusters_from_labels(labels, self.fl.num_clusters)
+        if self._store.kind == "paged":
+            self._finish_paged_round(idx)
+
+    def _initial_round_waves(self, idx: np.ndarray):
+        """All-device training in ``k_max``-sized waves: the device never
+        holds more than one active [k_max, P] block; the global update is
+        the streaming weighted mean over waves (not bitwise-identical to
+        the one-shot eq.-(4) reduction — chunk-boundary summation — which
+        is why single-wave stays on the direct path)."""
+        spec = self.engine.flat_spec
+
+        def waves():
+            for s in range(0, len(idx), self.k_max):
+                w_idx = idx[s:s + self.k_max]
+                rows = flatten_stacked(self.train_clients(w_idx))
+                self._store.scatter(w_idx, rows)
+                yield np.asarray(rows), self._sizes_host[w_idx]
+
+        mean = streaming_weighted_mean(waves(), spec.total)
+        # feed the pre-aggregated mean through the aggregator as a single
+        # unit-weight row, so stateful servers (momentum) see one eq.-(4)
+        # mean exactly as they would from the one-shot path
+        mean_tree = jax.tree_util.tree_map(
+            lambda l: l[None], unflatten_vector(spec, jnp.asarray(mean)))
+        self.global_params = self.aggregator.aggregate(
+            self.global_params, mean_tree, np.ones(1))
 
     def divergences(self) -> np.ndarray:
-        return np.asarray(weight_divergence_flat(
-            self.client_params, tree_flatten_vector(self.global_params)))
+        """Per-client ‖w_n − w_g‖ — the §IV-C selection signal.
+
+        Dense store: one fused reduction over the [N, P] plane. Paged
+        store: served from the O(N) stats table — untouched clients all
+        equal the broadcast base row, so their (exact) divergence is ONE
+        O(P) row op; touched clients carry the value from their last
+        refresh, recomputed in streamed O(chunk·P) batches every
+        ``div_refresh_every`` rounds (1 = every round = exactly the dense
+        signal; 0 = never, staleness bounded by ``stats.drift``)."""
+        if self._store.kind == "dense":
+            return np.asarray(weight_divergence_flat(
+                self.client_params, tree_flatten_vector(self.global_params)))
+        return self._paged_divergences()
+
+    def _paged_divergences(self) -> np.ndarray:
+        store, stats = self._store, self.stats
+        gvec = jnp.asarray(self._gvec_host)
+        # every untouched row IS the base row: one [1, P] call through the
+        # same fused op keeps their entries bit-identical to a dense sweep
+        base_d = np.asarray(self.engine.rows_divergence(
+            jnp.asarray(store.base)[None, :], gvec))[0]
+        untouched = ~store.touched
+        stats.divergence[untouched] = base_d
+        stats.drift[untouched] = 0.0
+        every = self._div_refresh_every
+        # a forced refresh (sentinel) covers mass scatters that bypassed
+        # the per-row update — e.g. the initial all-device round — so even
+        # the lazy (every=0) policy never serves an uninitialized entry
+        forced = self._rounds_since_refresh >= np.iinfo(np.int32).max
+        if (store.num_touched
+                and (forced or (every > 0
+                                and self._rounds_since_refresh >= every))):
+            tidx = np.flatnonzero(store.touched)
+            for s in range(0, len(tidx), self.chunk_size):
+                batch = tidx[s:s + self.chunk_size]
+                stats.divergence[batch] = np.asarray(
+                    self.engine.rows_divergence(store.gather(batch), gvec))
+            stats.drift[store.touched] = 0.0
+            self._rounds_since_refresh = 0
+        return stats.divergence.copy()
 
     def selection_context(self) -> SelectionContext:
         return SelectionContext(
@@ -273,9 +471,24 @@ class FLExperiment:
         """One full FL round: select → allocate → train → aggregate → eval.
 
         Uses the engine's fused jitted step when the aggregator is the
-        plain eq. (4) mean and no lossy compression is configured.
+        plain eq. (4) mean and no lossy compression is configured. On the
+        paged store the selection is additionally filtered by the stats
+        table's availability mask (round-level churn), and the round's
+        trained rows refresh the table's divergence/age entries — O(K·P)
+        bookkeeping; the O(N·P) plane is never touched.
         """
         idx = self.select(method)
+        paged = self._store.kind == "paged"
+        if paged:
+            idx = np.asarray(idx)
+            idx = idx[self.stats.avail[idx]]
+            if idx.size == 0:           # everyone churned out: explicit
+                acc, per_class = self.evaluate()        # no-op round
+                return RoundResult(
+                    selected=idx, T_k=0.0, E_k=0.0, accuracy=acc,
+                    per_class=per_class,
+                    params=jax.tree_util.tree_map(jnp.copy,
+                                                  self.global_params))
         alloc = self.allocation(idx)
         fused = (getattr(self.aggregator, "fuses_with_engine", False)
                  and getattr(self.compressor, "identity", False))
@@ -284,8 +497,9 @@ class FLExperiment:
             # round_step donates the global params (the new global reuses
             # their buffers) and returns the clients as flat [S, P] rows
             rows, new_global, acc, per_class = self.engine.round_step(
-                self.global_params, self._images[idx], self._labels[idx],
-                keys, self._sizes[idx], self.test_images, self.test_labels)
+                self.global_params, self._client_images(idx),
+                self._labels[idx], keys, self._sizes[idx], self.test_images,
+                self.test_labels)
             self.store_clients(rows, idx)
             self.global_params = new_global
             acc, per_class = float(acc), np.asarray(per_class)
@@ -295,6 +509,8 @@ class FLExperiment:
             self.store_clients(rows, idx)
             self.aggregate(stacked, idx)
             acc, per_class = self.evaluate()
+        if paged:
+            self._finish_paged_round(idx, rows)
         # params is COPIED: the next fused round donates self.global_params,
         # which would silently invalidate an earlier RoundResult's tree
         return RoundResult(selected=np.asarray(idx), T_k=alloc.T, E_k=alloc.E,
@@ -302,6 +518,43 @@ class FLExperiment:
                            params=jax.tree_util.tree_map(jnp.copy,
                                                          self.global_params),
                            stacked_params=rows)
+
+    def _finish_paged_round(self, idx: np.ndarray, rows=None):
+        """Post-round upkeep of the O(N) stats table (paged store only):
+        drift bounds grow by ‖g_new − g_old‖ for stale entries, the
+        round's trained rows get exact divergences (one O(K·P) row op on
+        data already in hand), ages advance."""
+        gvec_new = tree_flatten_vector(self.global_params)
+        gvec_new_host = np.asarray(gvec_new)
+        st = self.stats
+        delta = float(np.linalg.norm(gvec_new_host - self._gvec_host))
+        st.drift[self._store.touched] += delta
+        if rows is not None:
+            st.divergence[idx] = np.asarray(
+                self.engine.rows_divergence(rows, gvec_new))
+            st.drift[idx] = 0.0
+        st.age += 1
+        st.age[idx] = 0
+        self._gvec_host = gvec_new_host
+        if rows is None:
+            # mass scatter without per-row updates (initial round): force
+            # the next divergences() call to refresh the touched rows
+            self._rounds_since_refresh = np.iinfo(np.int32).max
+        else:
+            self._rounds_since_refresh = min(
+                self._rounds_since_refresh + 1,
+                np.iinfo(np.int32).max - 1)
+
+    def _churn_step_host(self):
+        """Round-level Bernoulli churn on the stats table's availability
+        mask — a departed client's cold row stays paged out untouched and
+        is picked up again verbatim on rejoin."""
+        p_leave, p_join = self.churn
+        n = self.fed.num_clients
+        leave = self.rng.random(n) < p_leave
+        join = self.rng.random(n) < p_join
+        avail = self.stats.avail
+        avail[:] = np.where(avail, ~leave, join)
 
     def run(self, method: Any = None, rounds: Optional[int] = None,
             target_accuracy: Optional[float] = None,
@@ -332,6 +585,18 @@ class FLExperiment:
                 "spec through CohortRunner (build_cohort / fl_sim --cells)")
         selector = (self.selector if method is None
                     else SELECTORS.resolve(method))
+        if self._store.kind == "paged":
+            # population-scale path: host round loop over the paged store;
+            # the scanned program's [N, P] carry is exactly what this mode
+            # exists to avoid
+            if (getattr(self.channel, "needs_rng", False)
+                    or getattr(self.channel, "stateful", False)):
+                raise ValueError(
+                    f"channel {self.channel.registry_name!r} redraws fading "
+                    "inside the scanned program; store='paged' drives the "
+                    "host loop — use the static channel (or store='dense')")
+            return self._run_paged(selector, method, rounds, target,
+                                   include_initial_round)
         if getattr(self.aggregator, "async_capable", False):
             # the buffered-asynchronous engine exists ONLY as a scanned
             # program — there is no host-loop equivalent to fall back to
@@ -368,6 +633,43 @@ class FLExperiment:
             res = self.round(method)
             hist.append(res)
             if target and res.accuracy >= target and hist.rounds_to_target is None:
+                hist.rounds_to_target = k + 1
+                break
+        return hist
+
+    def _run_paged(self, selector, method, rounds: int,
+                   target: float, include_initial_round: bool) -> FLHistory:
+        """The population-scale host loop over the paged store.
+
+        Differences from the dense host loop, both deliberate:
+        the Alg.-2 initial round (which trains ALL N devices) runs only
+        when requested or when the selector actually needs clusters — a
+        million-client fleet with a cluster-free policy (random / icas /
+        rra / stochastic-sched) skips it entirely; and round-level churn
+        flips the stats table's availability mask between rounds, with
+        selection filtered against it. With ``include_initial_round=True``
+        and ``div_refresh_every=1`` the loop is bit-identical to the dense
+        host loop (pinned in ``tests/test_paged_store.py``)."""
+        hist = FLHistory()
+        if include_initial_round or (self.clusters is None and
+                                     getattr(selector, "needs_clusters",
+                                             False)):
+            self.initial_round()
+            acc, _ = self.evaluate()
+            all_idx = np.arange(self.fed.num_clients)
+            T0, E0 = self.allocate(all_idx)
+            hist.accuracy.append(acc)
+            hist.T_k.append(float(T0))
+            hist.E_k.append(float(E0))
+            hist.selected.append(all_idx)
+        churn_on = self.churn != (0.0, 0.0)
+        for k in range(rounds):
+            if churn_on:
+                self._churn_step_host()
+            res = self.round(method)
+            hist.append(res)
+            if (target and res.accuracy >= target
+                    and hist.rounds_to_target is None):
                 hist.rounds_to_target = k + 1
                 break
         return hist

@@ -1,0 +1,252 @@
+"""The client parameter store — dense device plane or paged active/cold
+split — plus the per-client statistics table.
+
+The paper's regime is N ≫ K: "a large number of wireless mobile devices"
+of which only K≪N train per round. The PR-5 flat ``[N, P]`` plane makes
+every round O(N·P) in memory even when K=10; at N=1e6 and the paper CNN's
+P≈1e5 that is a 400 GB buffer. This module splits the store:
+
+``DenseStore``
+    The PR-5 layout verbatim: one device-resident ``[N, P]`` buffer,
+    donated in-place row scatter. The default (``store="dense"``), pinned
+    bit-identical to the pre-split driver.
+
+``PagedStore``
+    Host-resident cold store. All clients start equal to the broadcast
+    ``base`` row (one ``[P]`` vector — the post-init global), so the store
+    begins O(P) regardless of N. Trained rows land in a sparse overlay
+    (``{client: [P] row}``); once a ``chunk_size``-aligned block has
+    enough touched rows the overlay promotes to a dense ``[chunk, P]``
+    block. Reads assemble any range on demand (``iter_chunks``), so the
+    full plane never materializes: peak memory is
+    O(#touched·P + chunk·P), and an untrained million-client fleet costs
+    one row. Device traffic is only the K gathered/scattered rows of the
+    round's cohort — the active plane.
+
+``ClientStats``
+    The compact ``[N]`` table (divergence, divergence-staleness drift
+    bound, age, availability, cell id) that is the ONLY O(N) state the
+    paged round loop keeps hot: selectors read it instead of reducing the
+    ``[N, P]`` plane (cf. Perazzone et al., arXiv 2201.07912, which
+    schedules million-device fleets from per-client scalars).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ClientStats", "DenseStore", "PagedStore", "build_store"]
+
+
+@dataclass
+class ClientStats:
+    """Per-client scalar statistics — O(N) total, all host numpy.
+
+    ``divergence`` is ‖w_n − w_g‖ as of each client's last refresh;
+    ``drift`` bounds its staleness: the accumulated ‖g_now − g_ref‖ since
+    that refresh, so the true divergence lies within ``divergence ±
+    drift`` (triangle inequality). ``age`` counts rounds since the client
+    last trained; ``avail`` is the churn mask the paged loop flips and
+    selection filters on; ``cell`` records the serving cell.
+    """
+    divergence: np.ndarray            # [N] f32
+    drift: np.ndarray                 # [N] f32 staleness bound on divergence
+    age: np.ndarray                   # [N] i32 rounds since participation
+    avail: np.ndarray                 # [N] bool churn/availability mask
+    cell: np.ndarray                  # [N] i32 serving cell id
+
+    @classmethod
+    def create(cls, num_clients: int, cell: int = 0) -> "ClientStats":
+        return cls(divergence=np.zeros(num_clients, np.float32),
+                   drift=np.zeros(num_clients, np.float32),
+                   age=np.zeros(num_clients, np.int32),
+                   avail=np.ones(num_clients, bool),
+                   cell=np.full(num_clients, cell, np.int32))
+
+    @property
+    def nbytes(self) -> int:
+        return (self.divergence.nbytes + self.drift.nbytes + self.age.nbytes
+                + self.avail.nbytes + self.cell.nbytes)
+
+
+class DenseStore:
+    """The PR-5 device-resident ``[N, P]`` plane behind the store API."""
+
+    kind = "dense"
+
+    def __init__(self, base_row: jnp.ndarray, num_clients: int, engine):
+        self._engine = engine
+        # identical construction to the pre-split driver: broadcast the
+        # global row, one copy (bit-parity anchor for the tier-1 pins)
+        self.buffer = jnp.broadcast_to(
+            base_row, (num_clients, base_row.shape[0])).copy()
+
+    @property
+    def num_clients(self) -> int:
+        return self.buffer.shape[0]
+
+    @property
+    def row_size(self) -> int:
+        return self.buffer.shape[1]
+
+    def gather(self, idx) -> jnp.ndarray:
+        return self.buffer[jnp.asarray(np.asarray(idx))]
+
+    def scatter(self, idx, rows) -> None:
+        """Donated in-place row scatter (the engine's jitted op)."""
+        self.buffer = self._engine.scatter_rows(
+            self.buffer, jnp.asarray(np.asarray(idx)), rows)
+
+    def iter_chunks(self, chunk_size: int) -> Iterator[np.ndarray]:
+        for start in range(0, self.num_clients, chunk_size):
+            yield np.asarray(self.buffer[start:start + chunk_size])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.buffer.size) * 4
+
+
+class PagedStore:
+    """Host-paged cold store: base row + sparse overlay + dense blocks."""
+
+    kind = "paged"
+
+    #: promote a chunk's overlay rows to a dense block once this fraction
+    #: of the chunk has been touched (dict-of-rows beats a block below it,
+    #: a block beats per-row dict lookups above it)
+    PROMOTE_FRAC = 0.5
+
+    def __init__(self, base_row: np.ndarray, num_clients: int,
+                 chunk_size: int):
+        self.base = np.ascontiguousarray(base_row, dtype=np.float32)
+        self.n = int(num_clients)
+        self.chunk = int(chunk_size)
+        if self.chunk <= 0:
+            raise ValueError(f"chunk_size must be positive; got {chunk_size}")
+        self._rows: Dict[int, np.ndarray] = {}        # sparse overlay
+        self._blocks: Dict[int, np.ndarray] = {}      # chunk id -> [c, P]
+        self.touched = np.zeros(self.n, bool)
+
+    # -- geometry ------------------------------------------------------
+    @property
+    def num_clients(self) -> int:
+        return self.n
+
+    @property
+    def row_size(self) -> int:
+        return self.base.shape[0]
+
+    def _bounds(self, cid: int):
+        start = cid * self.chunk
+        return start, min(start + self.chunk, self.n)
+
+    # -- reads ---------------------------------------------------------
+    def row(self, i: int) -> np.ndarray:
+        cid = i // self.chunk
+        block = self._blocks.get(cid)
+        if block is not None:
+            return block[i - cid * self.chunk]
+        r = self._rows.get(i)
+        return self.base if r is None else r
+
+    def gather(self, idx) -> jnp.ndarray:
+        """Assemble the rows of ``idx`` and ship them to device —
+        the active plane's O(K·P) read."""
+        idx = np.asarray(idx, np.int64).ravel()
+        out = np.empty((idx.shape[0], self.row_size), np.float32)
+        for j, i in enumerate(idx):
+            out[j] = self.row(int(i))
+        return jnp.asarray(out)
+
+    def assemble(self, start: int, stop: int) -> np.ndarray:
+        """Materialize rows ``[start, stop)`` as one contiguous block."""
+        stop = min(stop, self.n)
+        cid0 = start // self.chunk
+        if (cid0 in self._blocks and start == cid0 * self.chunk
+                and stop == min(start + self.chunk, self.n)):
+            return self._blocks[cid0]
+        out = np.broadcast_to(self.base, (stop - start, self.row_size)).copy()
+        lo, hi = start // self.chunk, (max(stop - 1, start)) // self.chunk
+        for cid in range(lo, hi + 1):
+            block = self._blocks.get(cid)
+            if block is None:
+                continue
+            b0, b1 = self._bounds(cid)
+            s, e = max(b0, start), min(b1, stop)
+            out[s - start:e - start] = block[s - b0:e - b0]
+        if self._rows:
+            for i in range(start, stop):
+                r = self._rows.get(i)
+                if r is not None:
+                    out[i - start] = r
+        return out
+
+    def iter_chunks(self, chunk_size: Optional[int] = None
+                    ) -> Iterator[np.ndarray]:
+        """Stream the whole (virtual) plane as assembled blocks — the
+        input shape ``ops.chunked_client_divergence`` / ``chunked_pairwise``
+        consume. Never holds more than one block."""
+        c = self.chunk if chunk_size is None else int(chunk_size)
+        for start in range(0, self.n, c):
+            yield self.assemble(start, start + c)
+
+    # -- writes --------------------------------------------------------
+    def scatter(self, idx, rows) -> None:
+        """Write trained rows back to the cold store (device → host copy;
+        the donated on-device scatter has no target here — the plane it
+        would write into intentionally does not exist)."""
+        idx = np.asarray(idx, np.int64).ravel()
+        rows = np.asarray(rows, dtype=np.float32)
+        if rows.ndim != 2 or rows.shape[0] != idx.shape[0]:
+            raise ValueError(f"scatter: rows {rows.shape} do not match "
+                             f"idx {idx.shape}")
+        dirty_chunks = set()
+        for j, i in enumerate(idx):
+            i = int(i)
+            cid = i // self.chunk
+            block = self._blocks.get(cid)
+            if block is not None:
+                block[i - cid * self.chunk] = rows[j]
+            else:
+                self._rows[i] = rows[j].copy()
+                dirty_chunks.add(cid)
+        self.touched[idx] = True
+        for cid in dirty_chunks:
+            self._maybe_promote(cid)
+
+    def _maybe_promote(self, cid: int) -> None:
+        b0, b1 = self._bounds(cid)
+        if self.touched[b0:b1].sum() < self.PROMOTE_FRAC * (b1 - b0):
+            return
+        block = np.broadcast_to(self.base,
+                                (b1 - b0, self.row_size)).copy()
+        for i in range(b0, b1):
+            r = self._rows.pop(i, None)
+            if r is not None:
+                block[i - b0] = r
+        self._blocks[cid] = block
+
+    # -- accounting ----------------------------------------------------
+    @property
+    def num_touched(self) -> int:
+        return int(self.touched.sum())
+
+    @property
+    def nbytes(self) -> int:
+        return (self.base.nbytes
+                + sum(r.nbytes for r in self._rows.values())
+                + sum(b.nbytes for b in self._blocks.values())
+                + self.touched.nbytes)
+
+
+def build_store(kind: str, base_row, num_clients: int, engine,
+                chunk_size: int):
+    if kind == "dense":
+        return DenseStore(base_row, num_clients, engine)
+    if kind == "paged":
+        return PagedStore(np.asarray(base_row), num_clients, chunk_size)
+    raise ValueError(f"unknown client store {kind!r}; "
+                     "expected 'dense' or 'paged'")

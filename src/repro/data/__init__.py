@@ -1,2 +1,4 @@
 from repro.data.synthetic import Dataset, make_dataset, make_token_stream
-from repro.data.partition import FederatedData, partition_bias, partition_dirichlet
+from repro.data.partition import (FederatedData, LazyFederatedData,
+                                  partition_bias, partition_bias_lazy,
+                                  partition_dirichlet)

@@ -23,25 +23,51 @@ class FederatedData:
     majority: np.ndarray      # [N_clients] ground-truth majority class
     sizes: np.ndarray         # [N_clients] nominal D_n (for eq. 4 weights)
 
+    lazy = False
+
     @property
     def num_clients(self) -> int:
         return self.images.shape[0]
 
 
-def partition_bias(ds: Dataset, num_clients: int, samples_per_client: int,
-                   sigma: Union[float, str], seed: int = 0,
-                   sizes: np.ndarray = None) -> FederatedData:
-    """The paper's non-iid partitioner. Majority classes are assigned
-    round-robin so every class is some client's majority (as in Fig. 4)."""
-    rng = np.random.default_rng(seed)
-    K = ds.num_classes
-    by_class = [np.flatnonzero(ds.labels == k) for k in range(K)]
-    majority = np.arange(num_clients) % K
-    rng.shuffle(majority)
+@dataclass
+class LazyFederatedData:
+    """Index-backed partition for population-scale fleets.
 
-    imgs = np.empty((num_clients, samples_per_client) + ds.images.shape[1:],
-                    ds.images.dtype)
-    labs = np.empty((num_clients, samples_per_client), np.int32)
+    Materializing ``[N, D, H, W, C]`` images at N=1e6 costs ~100× the
+    dataset itself (every sample is drawn by many clients); this variant
+    stores only per-client SAMPLE INDICES into the shared pool, so the
+    partition is O(N·D) int32 and a cohort's image stack is gathered on
+    demand (``pool_images[indices[idx]]`` — a device-side gather in the
+    paged driver). Consumed by ``FLExperiment(store="paged")`` only: the
+    dense/traced paths require the materialized stack.
+    """
+    pool_images: np.ndarray   # [T, H, W, C] the shared sample pool
+    indices: np.ndarray       # [N_clients, D] int32 rows into the pool
+    labels: np.ndarray        # [N_clients, D]
+    majority: np.ndarray      # [N_clients] ground-truth majority class
+    sizes: np.ndarray         # [N_clients] nominal D_n (for eq. 4 weights)
+
+    lazy = True
+
+    @property
+    def num_clients(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        return (self.pool_images.nbytes + self.indices.nbytes
+                + self.labels.nbytes + self.majority.nbytes
+                + self.sizes.nbytes)
+
+
+def _bias_indices_loop(rng, by_class, K: int, num_clients: int,
+                       samples_per_client: int, sigma,
+                       majority: np.ndarray) -> np.ndarray:
+    """The paper's per-client sample draw, one client at a time — THE rng
+    stream existing partitions are pinned to (draw order: [secondary,]
+    rest, major, shuffle)."""
+    idx = np.empty((num_clients, samples_per_client), np.int64)
     for n in range(num_clients):
         m = majority[n]
         if sigma == "H":
@@ -56,12 +82,98 @@ def partition_bias(ds: Dataset, num_clients: int, samples_per_client: int,
         major = rng.choice(by_class[m], n_major)
         sel = np.concatenate([major, rest])
         rng.shuffle(sel)
-        imgs[n] = ds.images[sel]
-        labs[n] = ds.labels[sel]
+        idx[n] = sel
+    return idx
+
+
+#: clients at/above which :func:`partition_bias_lazy` switches from the
+#: per-client rng loop (bit-compatible with :func:`partition_bias`) to the
+#: vectorized draw path — the loop costs minutes at 1e6 clients
+VECTORIZED_PARTITION_MIN = 100_000
+
+
+def _bias_indices_vectorized(rng, by_class, K: int, num_clients: int,
+                             samples_per_client: int, sigma,
+                             majority: np.ndarray) -> np.ndarray:
+    """Whole-fleet sample draw in a handful of vectorized rng calls — the
+    same σ-bias distribution as the loop but its OWN draw stream (still
+    deterministic in ``seed``; a 1e6-client partition takes seconds, not
+    minutes). With-replacement draws, like ``rng.choice`` above."""
+    D = samples_per_client
+    lens = np.array([len(c) for c in by_class])
+    pool = np.zeros((K, lens.max()), np.int64)
+    for k, c in enumerate(by_class):
+        pool[k, :len(c)] = c
+    n_major = int(round((0.8 if sigma == "H" else float(sigma)) * D))
+
+    def draw(cls_per_client, count, cls_pool, cls_lens):
+        u = rng.random((num_clients, count))
+        col = (u * cls_lens[cls_per_client][:, None]).astype(np.int64)
+        return cls_pool[cls_per_client[:, None], col]
+
+    major = draw(majority, n_major, pool, lens)
+    if sigma == "H":
+        sec = rng.integers(0, K - 1, num_clients)
+        sec = sec + (sec >= majority)              # skip the majority class
+        rest = draw(sec, D - n_major, pool, lens)
+    else:
+        olens = lens.sum() - lens                  # |others| per class
+        opool = np.zeros((K, int(olens.max())), np.int64)
+        for m in range(K):
+            opool[m, :olens[m]] = np.concatenate(
+                [by_class[k] for k in range(K) if k != m])
+        rest = draw(majority, D - n_major, opool, olens)
+    return rng.permuted(np.concatenate([major, rest], axis=1), axis=1)
+
+
+def partition_bias(ds: Dataset, num_clients: int, samples_per_client: int,
+                   sigma: Union[float, str], seed: int = 0,
+                   sizes: np.ndarray = None) -> FederatedData:
+    """The paper's non-iid partitioner. Majority classes are assigned
+    round-robin so every class is some client's majority (as in Fig. 4)."""
+    rng = np.random.default_rng(seed)
+    K = ds.num_classes
+    by_class = [np.flatnonzero(ds.labels == k) for k in range(K)]
+    majority = np.arange(num_clients) % K
+    rng.shuffle(majority)
+    idx = _bias_indices_loop(rng, by_class, K, num_clients,
+                             samples_per_client, sigma, majority)
     if sizes is None:
         sizes = np.full(num_clients, samples_per_client, np.float64)
-    return FederatedData(images=imgs, labels=labs, majority=majority,
+    return FederatedData(images=ds.images[idx],
+                         labels=ds.labels[idx].astype(np.int32),
+                         majority=majority,
                          sizes=np.asarray(sizes, np.float64))
+
+
+def partition_bias_lazy(ds: Dataset, num_clients: int,
+                        samples_per_client: int, sigma: Union[float, str],
+                        seed: int = 0,
+                        sizes: np.ndarray = None) -> LazyFederatedData:
+    """σ-bias partition as per-client INDICES into the shared pool — the
+    O(N·D)-int32 form population-scale paged experiments consume.
+
+    Below :data:`VECTORIZED_PARTITION_MIN` clients the draws replay
+    :func:`partition_bias`'s per-client rng stream exactly, so
+    ``partition_bias_lazy(...).indices`` selects the same samples as the
+    materialized partition of the same seed; at/above it the vectorized
+    stream takes over (same distribution, still seed-deterministic)."""
+    rng = np.random.default_rng(seed)
+    K = ds.num_classes
+    by_class = [np.flatnonzero(ds.labels == k) for k in range(K)]
+    majority = np.arange(num_clients) % K
+    rng.shuffle(majority)
+    draw = (_bias_indices_loop if num_clients < VECTORIZED_PARTITION_MIN
+            else _bias_indices_vectorized)
+    idx = draw(rng, by_class, K, num_clients, samples_per_client, sigma,
+               majority)
+    if sizes is None:
+        sizes = np.full(num_clients, samples_per_client, np.float64)
+    return LazyFederatedData(pool_images=ds.images,
+                             indices=idx.astype(np.int32),
+                             labels=ds.labels[idx].astype(np.int32),
+                             majority=majority,
+                             sizes=np.asarray(sizes, np.float64))
 
 
 def partition_dirichlet(ds: Dataset, num_clients: int, samples_per_client: int,

@@ -1,0 +1,129 @@
+"""Streaming chunked reductions over the cold half of the client store.
+
+The flat ``[N, P]`` plane (PR 5) made every per-round reduction one fused
+row op — but also made *peak memory* O(N·P). The paged client store
+(``repro.core.store``) keeps only O(K_max·P + chunk·P) resident; these
+drivers run the same fused row ops (``ops.client_divergence``,
+``ops.pairwise_sq_dists``) a chunk at a time and stream the per-row results
+out to host, so the reductions stay O(chunk·P) in memory at any point.
+
+Every reduction here is ROW-INDEPENDENT (a per-row norm, a per-row distance
+vector), so chunking changes neither the math nor the bits: the fp32 result
+for row ``n`` is produced by the identical op on the identical row whether
+it arrives in one ``[N, P]`` call or in ``ceil(N/chunk)`` block calls. The
+paged≡dense parity pins in ``tests/test_paged_store.py`` rest on exactly
+this property.
+
+Inputs may be a single array (chunked here) or an iterable of
+``[c_i, P]`` blocks (the paged store's ``iter_chunks`` yields assembled
+blocks without ever materializing the plane). Per-chunk compute is jitted;
+callers that page with a fixed ``chunk_size`` compile at most two shapes
+(the full chunk and the last partial one).
+"""
+from __future__ import annotations
+
+from typing import Iterable, Iterator, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+DEFAULT_CHUNK_BYTES = 64 << 20     # ~64 MB of fp32 rows per resident chunk
+
+Blocks = Union[np.ndarray, jnp.ndarray, Iterable[np.ndarray]]
+
+
+def default_chunk_size(row_size: int, *, chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                       lo: int = 64, hi: int = 8192) -> int:
+    """Rows per chunk so a resident fp32 block stays ~``chunk_bytes``."""
+    rows = chunk_bytes // max(4 * int(row_size), 1)
+    return int(min(hi, max(lo, rows)))
+
+
+def iter_blocks(rows: Blocks, chunk_size: int) -> Iterator[np.ndarray]:
+    """Yield ``[<=chunk_size, P]`` blocks from an array or pass blocks
+    through from an iterable (re-chunking is the producer's business)."""
+    if isinstance(rows, (np.ndarray, jnp.ndarray)):
+        n = rows.shape[0]
+        for start in range(0, n, chunk_size):
+            yield rows[start:start + chunk_size]
+    else:
+        yield from rows
+
+
+@jax.jit
+def _div_chunk(block, gvec):
+    return ops.client_divergence(block, gvec)
+
+
+@jax.jit
+def _pairwise_chunk(block, centroids):
+    return ops.pairwise_sq_dists(block, centroids)
+
+
+def chunked_client_divergence(rows: Blocks, gvec, *,
+                              chunk_size: int | None = None) -> np.ndarray:
+    """‖row_n − g‖₂ for every row, streamed chunk-at-a-time to host.
+
+    Bitwise identical to ``ops.client_divergence(rows, gvec)`` on the
+    concatenated input (row-independent reduction). Returns a host ``[N]``
+    fp32 array; device residency never exceeds one chunk of rows.
+    """
+    gvec = jnp.asarray(gvec, jnp.float32)
+    if chunk_size is None:
+        chunk_size = default_chunk_size(gvec.shape[0])
+    out = [np.asarray(_div_chunk(jnp.asarray(b, jnp.float32), gvec))
+           for b in iter_blocks(rows, chunk_size)]
+    if not out:
+        return np.zeros((0,), np.float32)
+    return np.concatenate(out)
+
+
+def chunked_pairwise(rows: Blocks, centroids, *,
+                     chunk_size: int | None = None) -> np.ndarray:
+    """``[N, P] × [M, P] -> [N, M]`` squared L2, streamed over row chunks.
+
+    A single chunk is exactly one jitted ``ops.pairwise_sq_dists`` call.
+    Across chunks the reduction stays per (row, centroid) pair — chunking
+    never mixes rows — but very long rows can tile the contraction
+    differently per block shape, so agreement is to fp32 accumulation
+    order, not bitwise. Peak device memory is one row chunk plus the
+    centroid block.
+    """
+    centroids = jnp.asarray(centroids, jnp.float32)
+    if chunk_size is None:
+        chunk_size = default_chunk_size(centroids.shape[-1])
+    out = [np.asarray(_pairwise_chunk(jnp.asarray(b, jnp.float32), centroids))
+           for b in iter_blocks(rows, chunk_size)]
+    if not out:
+        return np.zeros((0, centroids.shape[0]), np.float32)
+    return np.concatenate(out, axis=0)
+
+
+@jax.jit
+def _wsum_chunk(block, weights):
+    w = weights.astype(jnp.float32)
+    return block.astype(jnp.float32).T @ w, jnp.sum(w)
+
+
+def streaming_weighted_mean(blocks: Iterable[Tuple[np.ndarray, np.ndarray]],
+                            row_size: int) -> np.ndarray:
+    """Eq.-(4) weighted mean over ``(rows, weights)`` blocks without ever
+    holding more than one block: ``Σ w_n x_n / Σ w_n`` accumulated in fp32.
+
+    NOT bitwise-identical to a single ``ops.flat_aggregate`` call (the
+    summation splits at chunk boundaries and the division happens once at
+    the end); the paged driver therefore uses this only for multi-wave
+    initial rounds, where no dense pin exists — single-wave rounds call
+    ``flat_aggregate`` directly and stay on the pinned numerics.
+    """
+    acc = np.zeros((row_size,), np.float32)
+    wsum = 0.0
+    for rows, weights in blocks:
+        s, w = _wsum_chunk(jnp.asarray(rows, jnp.float32),
+                           jnp.asarray(weights))
+        acc += np.asarray(s)
+        wsum += float(w)
+    return acc / max(wsum, 1e-12)

@@ -4,8 +4,19 @@ Model code calls these; ``use_pallas`` switches between the kernel (TPU
 target; interpret mode on CPU) and the pure-jnp reference path. The default
 follows the backend: kernels on TPU, references on CPU — interpret mode is
 for validation, not speed.
+
+Dispatch policy (``_resolve_use_pallas``): an EXPLICIT ``use_pallas=True``
+off-TPU lands the kernel in interpret mode, which on the round hot path is
+orders of magnitude slower than the jnp reference (``flat_aggregate``:
+3.3 s interpreted vs sub-ms jnp — see ROADMAP) — so it raises a
+``RuntimeWarning``. Setting ``REPRO_FORCE_PALLAS=1`` is the escape hatch
+for deliberate interpret-mode validation runs: it silences the warning and
+also flips the ``use_pallas=None`` default to the kernel path everywhere.
 """
 from __future__ import annotations
+
+import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +32,28 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _force_pallas() -> bool:
+    # read at call time (not import time) so tests/validation runs can
+    # monkeypatch the environment per-case
+    return os.environ.get("REPRO_FORCE_PALLAS", "").lower() not in (
+        "", "0", "false", "no")
+
+
+def _resolve_use_pallas(op: str, use_pallas: bool | None) -> bool:
+    """Apply the dispatch policy for one op call (see module docstring)."""
+    if use_pallas is None:
+        return True if _force_pallas() else _on_tpu()
+    if use_pallas and not _on_tpu() and not _force_pallas():
+        warnings.warn(
+            f"{op}: use_pallas=True off-TPU runs the Pallas kernel in "
+            "interpret mode — a hot-path op becomes orders of magnitude "
+            "slower than the jnp reference. Pass use_pallas=None to follow "
+            "the backend, or set REPRO_FORCE_PALLAS=1 for a deliberate "
+            "interpret-mode validation run.",
+            RuntimeWarning, stacklevel=3)
+    return use_pallas
+
+
 def pairwise_sq_dists(x, c, *, use_pallas: bool | None = None):
     """[N, F] × [M, F] -> [N, M] squared L2 (K-means / Fig. 4 hot spot).
 
@@ -30,7 +63,7 @@ def pairwise_sq_dists(x, c, *, use_pallas: bool | None = None):
     streaming ‖x‖²+‖c‖²−2x·c expansion; both paths clamp at zero so no
     call site can see a negative squared distance from fp roundoff.
     """
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    use_pallas = _resolve_use_pallas("pairwise_sq_dists", use_pallas)
     if use_pallas:
         return _pairwise(x, c, interpret=not _on_tpu())
     x = x.astype(jnp.float32)
@@ -59,7 +92,7 @@ def flat_aggregate(flat, weights, *, mask=None, normalize: bool = True,
         # an empty round then aggregates to zeros instead of poisoning the
         # scan carry with 0/0 NaNs; real weight sums are untouched bitwise
         w = w / jnp.maximum(jnp.sum(w), 1e-12)
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    use_pallas = _resolve_use_pallas("flat_aggregate", use_pallas)
     if use_pallas:
         return _flat_agg(flat, w, interpret=not _on_tpu())
     return ref.flat_aggregate_ref(flat, w)
@@ -72,7 +105,7 @@ def client_divergence(flat, gvec, *, use_pallas: bool | None = None):
     model as a single centroid on TPU; a fused subtract-square-reduce
     elsewhere, numerically stronger than the expansion for near-identical
     rows)."""
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    use_pallas = _resolve_use_pallas("client_divergence", use_pallas)
     if use_pallas:
         d2 = _pairwise(flat, gvec[None, :], interpret=not _on_tpu())[:, 0]
         return jnp.sqrt(d2)
@@ -80,10 +113,30 @@ def client_divergence(flat, gvec, *, use_pallas: bool | None = None):
     return jnp.sqrt(jnp.sum(jnp.square(diff), axis=1))
 
 
+def chunked_client_divergence(rows, gvec, *, chunk_size: int | None = None):
+    """Streaming form of :func:`client_divergence` for the paged client
+    store: pages ``rows`` (an array or an iterable of ``[c, P]`` blocks,
+    e.g. ``PagedStore.iter_chunks()``) through the fused row-norm reduction
+    one chunk at a time. Bitwise identical per row (the reduction is
+    row-independent); peak device memory is O(chunk·P). Returns a host
+    ``[N]`` fp32 array."""
+    from repro.kernels.chunked import chunked_client_divergence as _impl
+    return _impl(rows, gvec, chunk_size=chunk_size)
+
+
+def chunked_pairwise(rows, centroids, *, chunk_size: int | None = None):
+    """Streaming form of :func:`pairwise_sq_dists` over row chunks —
+    K-means assignment against a cold store without materializing the
+    ``[N, P]`` plane. Bitwise identical per row; returns a host ``[N, M]``
+    fp32 array."""
+    from repro.kernels.chunked import chunked_pairwise as _impl
+    return _impl(rows, centroids, chunk_size=chunk_size)
+
+
 def attention(q, k, v, *, causal: bool = True, window: int | None = None,
               use_pallas: bool | None = None):
     """GQA-aware attention. q: [B, S, H, D]; k, v: [B, S, K, D]."""
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    use_pallas = _resolve_use_pallas("attention", use_pallas)
     B, Sq, H, D = q.shape
     K = k.shape[2]
     if K != H:
@@ -107,7 +160,7 @@ def ssd(x, a, b, c, *, chunk: int = 256, n_groups: int = 1,
 
     Returns (y: [B, S, H, P], state: [B, H, P, N]).
     """
-    use_pallas = _on_tpu() if use_pallas is None else use_pallas
+    use_pallas = _resolve_use_pallas("ssd", use_pallas)
     B, S, H, P = x.shape
     N = b.shape[-1]
     repg = H // b.shape[2]

@@ -66,6 +66,7 @@ class KMeansRandomSelector(Strategy):
     traceable = True
     needs_rng = True
     needs_divergence = False
+    needs_clusters = True
 
     def select(self, ctx: SelectionContext) -> np.ndarray:
         return select_kmeans_random(ctx.rng,
@@ -89,6 +90,7 @@ class DivergenceSelector(Strategy):
     traceable = True
     needs_rng = False
     needs_divergence = True
+    needs_clusters = True
 
     def select(self, ctx: SelectionContext) -> np.ndarray:
         return select_divergence(ctx.divergences(),
@@ -101,7 +103,8 @@ class DivergenceSelector(Strategy):
     def select_traced(self, key, divergences, labels, arr, ctx: TracedContext):
         return select_divergence_traced(
             divergences, labels, num_clusters=ctx.num_clusters,
-            s=ctx.selected_per_cluster, num_devices=ctx.num_devices)
+            s=ctx.selected_per_cluster, num_devices=ctx.num_devices,
+            avail=arr.get("avail") if isinstance(arr, dict) else None)
 
 
 @SELECTORS.register("icas")

@@ -41,8 +41,15 @@ def _per_cluster_topk(scores, labels, num_clusters: int, s: int,
 
 
 def select_divergence_traced(divergences, labels, *, num_clusters: int,
-                             s: int, num_devices: int):
-    """Algorithm 4: top-s weight divergence per cluster (masked ``top_k``)."""
+                             s: int, num_devices: int, avail=None):
+    """Algorithm 4: top-s weight divergence per cluster (masked ``top_k``).
+
+    ``avail`` (optional churn mask, 1.0/0.0 — the async engine's
+    ``arr["avail"]``) sinks unavailable devices' scores to −inf, so they
+    can never win a cluster slot; ``None`` is a static no-op branch (the
+    traced program is unchanged — the dense bit-parity pins stay exact)."""
+    if avail is not None:
+        divergences = jnp.where(avail > 0.0, divergences, -jnp.inf)
     return _per_cluster_topk(divergences, labels, num_clusters, s, num_devices)
 
 
@@ -62,14 +69,23 @@ def select_random_traced(key, *, num_devices: int, S: int):
 
 def select_icas_traced(divergences, arr, *, bandwidth_mhz: float,
                        num_devices: int, S: int, beta: float):
-    """ICAS: importance × channel-rate geometric blend, deterministic top-S."""
+    """ICAS: importance × channel-rate geometric blend, deterministic top-S.
+
+    An ``arr["avail"]`` churn mask (1.0/0.0) sinks unavailable devices to
+    −inf score and unmasks only the available winners; absent, the
+    program (and its bit-parity with the host version) is unchanged."""
+    avail = arr.get("avail") if isinstance(arr, dict) else None
     arr = effective_arrays(arr)
     rates = rate_mbps(bandwidth_mhz / num_devices, arr["J"])
     u = divergences / jnp.maximum(jnp.max(divergences), 1e-12)
     r = rates / jnp.maximum(jnp.max(rates), 1e-12)
     score = jnp.power(u, beta) * jnp.power(r, 1.0 - beta)
-    _, idx = jax.lax.top_k(score, S)
-    return idx.astype(jnp.int32), jnp.ones((S,), bool)
+    if avail is None:
+        _, idx = jax.lax.top_k(score, S)
+        return idx.astype(jnp.int32), jnp.ones((S,), bool)
+    top, idx = jax.lax.top_k(jnp.where(avail > 0.0, score, -jnp.inf), S)
+    valid = jnp.isfinite(top)
+    return (jnp.where(valid, idx, num_devices).astype(jnp.int32), valid)
 
 
 def select_stochastic_sched_traced(key, arr, *, bandwidth_mhz: float,

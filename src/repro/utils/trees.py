@@ -103,6 +103,19 @@ def unflatten_rows(spec: StackFlattenSpec, rows: jnp.ndarray):
     return jax.tree_util.tree_unflatten(spec.treedef, out)
 
 
+def unflatten_rows_np(spec: StackFlattenSpec, rows: np.ndarray):
+    """Host-numpy twin of :func:`unflatten_rows` — the paged client store
+    unflattens assembled chunks without a device round-trip (views where
+    dtypes allow, so a ``[c, P]`` chunk costs no extra copy)."""
+    rows = np.asarray(rows)
+    out = []
+    for off, size, shape, dt in zip(spec.offsets, spec.sizes, spec.shapes,
+                                    spec.dtypes):
+        out.append(np.asarray(rows[:, off:off + size], dtype=dt)
+                   .reshape((rows.shape[0],) + shape))
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
 def unflatten_vector(spec: StackFlattenSpec, vec: jnp.ndarray):
     """One flat ``[P]`` row -> the model pytree (global params)."""
     out = []

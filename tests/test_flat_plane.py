@@ -6,6 +6,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# the explicit use_pallas=True calls below are deliberate interpret-mode
+# validation runs — the dispatch guard's off-TPU warning is expected noise
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:.*interpret mode.*:RuntimeWarning")
+
 from repro.api import ExperimentSpec, build_experiment
 from repro.core.clustering import extract_features, extract_features_flat
 from repro.core.divergence import weight_divergence, weight_divergence_flat

@@ -9,6 +9,13 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.pairwise_l2 import pairwise_l2
 from repro.kernels.ssd_scan import ssd_scan
 
+# the explicit use_pallas=True sweeps below are deliberate interpret-mode
+# validation runs — the dispatch guard's off-TPU warning is expected noise
+# (pytest.warns in the dispatch-policy tests still catches it: the warns
+# context forces "always" over module marks)
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:.*interpret mode.*:RuntimeWarning")
+
 
 def _tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
@@ -122,3 +129,110 @@ def test_ssd_matches_layer_decode():
     step = jnp.stack(outs, 1)
     np.testing.assert_allclose(np.asarray(step), np.asarray(full),
                                rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# dispatch policy: REPRO_FORCE_PALLAS escape hatch + off-TPU warning
+# ---------------------------------------------------------------------------
+
+
+_SMALL = (jax.random.normal(jax.random.PRNGKey(11), (6, 32)),
+          jnp.abs(jax.random.normal(jax.random.PRNGKey(12), (6,))) + 0.1)
+
+
+@pytest.mark.skipif(ops._on_tpu(), reason="dispatch warning is off-TPU only")
+def test_explicit_pallas_off_tpu_warns(monkeypatch):
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    flat, w = _SMALL
+    with pytest.warns(RuntimeWarning, match="REPRO_FORCE_PALLAS"):
+        got = ops.flat_aggregate(flat, w, use_pallas=True)
+    want = ops.flat_aggregate(flat, w, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.skipif(ops._on_tpu(), reason="dispatch warning is off-TPU only")
+@pytest.mark.parametrize("kwargs", [{}, {"use_pallas": None},
+                                    {"use_pallas": False}])
+def test_default_dispatch_off_tpu_is_silent(monkeypatch, kwargs, recwarn):
+    monkeypatch.delenv("REPRO_FORCE_PALLAS", raising=False)
+    flat, w = _SMALL
+    ops.flat_aggregate(flat, w, **kwargs)
+    ops.client_divergence(flat, flat[0])
+    assert not [x for x in recwarn if x.category is RuntimeWarning]
+
+
+@pytest.mark.skipif(ops._on_tpu(), reason="dispatch warning is off-TPU only")
+def test_force_env_silences_warning_and_flips_default(monkeypatch, recwarn):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", "1")
+    assert ops._force_pallas()
+    assert ops._resolve_use_pallas("flat_aggregate", None) is True
+    flat, w = _SMALL
+    got = ops.flat_aggregate(flat, w, use_pallas=True)   # no warning now
+    assert not [x for x in recwarn if x.category is RuntimeWarning]
+    want = ops.flat_aggregate(flat, w, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("val", ["", "0", "false", "no", "False", "NO"])
+def test_force_env_falsey_values(monkeypatch, val):
+    monkeypatch.setenv("REPRO_FORCE_PALLAS", val)
+    assert not ops._force_pallas()
+
+
+# ---------------------------------------------------------------------------
+# chunked streaming reductions == fused ops (bitwise: row-independent math)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,p,chunk", [(10, 64, 3), (7, 33, 7), (16, 128, 5),
+                                       (1, 8, 4), (33, 256, 32)])
+def test_chunked_divergence_bitwise(n, p, chunk):
+    kx, kg = jax.random.split(jax.random.PRNGKey(n + p))
+    rows = jax.random.normal(kx, (n, p))
+    gvec = jax.random.normal(kg, (p,))
+    want = np.asarray(ops.client_divergence(rows, gvec))
+    got = np.asarray(ops.chunked_client_divergence(rows, gvec,
+                                                   chunk_size=chunk))
+    assert np.array_equal(got, want)
+    # iterable-of-blocks input (the paged store's iter_chunks contract)
+    blocks = [rows[i:i + chunk] for i in range(0, n, chunk)]
+    got_it = np.asarray(ops.chunked_client_divergence(iter(blocks), gvec))
+    assert np.array_equal(got_it, want)
+
+
+@pytest.mark.parametrize("n,m,p,chunk", [(10, 3, 64, 3), (33, 5, 100, 8),
+                                         (8, 8, 32, 8), (5, 2, 16, 11)])
+def test_chunked_pairwise_bitwise(n, m, p, chunk):
+    kx, kc = jax.random.split(jax.random.PRNGKey(n * 10 + m))
+    rows = jax.random.normal(kx, (n, p))
+    cents = jax.random.normal(kc, (m, p))
+    # jitted reference: the chunked path runs each block under jit, and
+    # jit/eager fuse the ‖x‖²+‖c‖²−2x·c expansion differently
+    want = np.asarray(jax.jit(ops.pairwise_sq_dists)(rows, cents))
+    got = np.asarray(ops.chunked_pairwise(rows, cents, chunk_size=chunk))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    if chunk >= n:        # single block IS the jitted fused op: bitwise
+        assert np.array_equal(got, want)
+
+
+def test_streaming_weighted_mean_matches_aggregate():
+    from repro.kernels.chunked import streaming_weighted_mean
+    kx, kw = jax.random.split(jax.random.PRNGKey(5))
+    rows = jax.random.normal(kx, (12, 96))
+    w = jnp.abs(jax.random.normal(kw, (12,))) + 0.1
+    want = np.asarray(ops.flat_aggregate(rows, w))
+    blocks = ((rows[i:i + 5], w[i:i + 5]) for i in range(0, 12, 5))
+    got = np.asarray(streaming_weighted_mean(blocks, rows.shape[1]))
+    # summation order differs across waves: close, documented NOT bitwise
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_default_chunk_size_bounds():
+    from repro.kernels.chunked import DEFAULT_CHUNK_BYTES, default_chunk_size
+    assert default_chunk_size(1) == 8192               # hi clamp
+    assert default_chunk_size(1 << 20) == 64           # lo clamp (4 MB rows)
+    mid = default_chunk_size(65_536)                   # 256 KB rows
+    assert 64 <= mid <= 8192
+    assert abs(mid * 65_536 * 4 - DEFAULT_CHUNK_BYTES) <= 65_536 * 4
