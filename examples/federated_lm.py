@@ -1,117 +1,81 @@
-"""Beyond-paper example: the paper's selection technique on TRANSFORMER
-clients (federated language modeling).
+"""Federated language modeling on the flat parameter plane.
 
-20 clients hold token streams from different Markov "dialects" (the LM
-analogue of majority classes); each round the server computes weight
-divergences, clusters clients on the lm_head layer (the w_fc2 analogue,
-§IV-B), selects the top-divergence client per cluster, and FedAvg-aggregates
-— exactly Algorithms 2-4 but with a GQA transformer instead of the CNN.
+The paper's full pipeline — K-means clustering, weight-divergence selection,
+SAO spectrum allocation, FedAvg — on a TRANSFORMER workload: each client's
+trainable state is a LoRA adapter row over a frozen tinyllama-style base
+(``repro.models.lm``), clients hold token windows from non-iid Markov
+"dialects" (the LM analogue of majority image classes), and the whole run
+executes as the SAME single scanned program the CNN uses. Upload payloads
+are priced at P_adapter (the adapter row), never the frozen base.
 
 Run:  PYTHONPATH=src python examples/federated_lm.py [--rounds 8]
+      PYTHONPATH=src python examples/federated_lm.py --dry-run
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import get_smoke_config
-from repro.configs.base import TrainConfig
-from repro.core.clustering import kmeans_fit, clusters_from_labels, \
-    adjusted_rand_index
-from repro.core.divergence import weight_divergence
-from repro.core.selection import select_divergence, select_random
-from repro.data.synthetic import make_token_stream
-from repro.models import init_model
-from repro.train.train_step import make_train_step
-from repro.utils.trees import tree_weighted_mean_stacked
+from repro.api import ExperimentSpec, build_experiment
+from repro.core import adjusted_rand_index
+from repro.models.lm import adapter_num_params
 
 
-def make_dialect_streams(vocab, n_dialects, n_clients, tokens_per_client,
-                         seed=0):
-    """Each dialect = its own Markov chain; clients are assigned round-robin."""
-    streams, dialect = [], []
-    for n in range(n_clients):
-        d = n % n_dialects
-        streams.append(make_token_stream(vocab, tokens_per_client,
-                                         seed=seed * 1000 + d))
-        dialect.append(d)
-    return np.stack(streams), np.array(dialect)
+def build_spec(args) -> ExperimentSpec:
+    return ExperimentSpec(
+        model=args.model, clients=args.clients,
+        train_samples=args.clients * args.windows_per_client,
+        test_samples=args.test_windows,
+        samples_per_client=args.windows_per_client, sigma=0.8,
+        rounds=args.rounds, devices_per_round=args.dialects,
+        num_clusters=args.dialects, local_iters=args.local_steps,
+        learning_rate=args.lr, batch_size=args.batch,
+        selection="divergence", allocator="sao", seed=0)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--model", default="tinyllama",
+                    choices=["tinyllama", "mamba2-130m"])
+    ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--clients", type=int, default=12)
-    ap.add_argument("--dialects", type=int, default=4)
+    ap.add_argument("--dialects", type=int, default=4,
+                    help="clusters AND devices/round (1 per cluster)")
     ap.add_argument("--local-steps", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--windows-per-client", type=int, default=16)
+    ap.add_argument("--test-windows", type=int, default=64)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=0.5)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="1 tiny round: smoke the build + traced dispatch")
     args = ap.parse_args()
+    if args.dry_run:
+        args.rounds, args.clients, args.dialects = 1, 6, 2
+        args.local_steps, args.windows_per_client = 2, 8
+        args.test_windows, args.batch = 16, 4
 
-    cfg = get_smoke_config("tinyllama-1.1b")
-    tc = TrainConfig(learning_rate=1e-2, total_steps=1000, warmup_steps=1,
-                     optimizer="sgd", grad_clip=1.0)
-    streams, dialect = make_dialect_streams(
-        cfg.vocab_size, args.dialects, args.clients, 8000)
+    spec = build_spec(args)
+    exp = build_experiment(spec)
+    model_cfg = exp.model_cfg
+    p_adapter = adapter_num_params(model_cfg)
+    print(f"model={args.model}  P_adapter={p_adapter}  "
+          f"plane=[{args.clients}, {p_adapter}]  "
+          f"upload z={exp.fleet.z[0]:.4f} Mbit (= P_adapter*32/1e6)")
+    print(f"traceable bundle: {exp.traceable()} "
+          f"(one lax.scan program, {args.rounds} rounds)")
 
-    global_params = init_model(cfg, jax.random.PRNGKey(0))
-    opt_init, train_step = make_train_step(cfg, tc, q_chunk=32, kv_chunk=32)
-
-    def local_update(params, stream, key):
-        opt = opt_init(params)
-        # simple python loop (tiny scale) for clarity
-        for s in range(args.local_steps):
-            key, k = jax.random.split(key)
-            i = np.asarray(jax.random.randint(k, (args.batch,), 0,
-                                              stream.shape[0] - args.seq - 1))
-            toks = jnp.asarray(np.stack([np.asarray(stream)[j:j + args.seq]
-                                         for j in i]))
-            params, opt, m = jitted_step(params, opt, {"tokens": toks})
-        return params, float(m["loss"])
-
-    # NOTE: no donation — global_params is reused by every selected client
-    jitted_step = jax.jit(train_step)
-    client_params = jax.tree_util.tree_map(
-        lambda l: jnp.broadcast_to(l, (args.clients,) + l.shape).copy(),
-        global_params)
-    rng = np.random.default_rng(0)
-
-    print(f"{'round':>5s} {'policy':>10s} {'mean loss':>9s} {'ARI':>6s}")
-    for r in range(args.rounds):
-        # selection: round 0 = everyone (Alg. 2 protocol), then divergence
-        if r == 0:
-            idx = np.arange(args.clients)
-            clusters = None
-        else:
-            feats = client_params.get("lm_head",
-                                      client_params["embed"])
-            feats = feats.reshape(args.clients, -1)
-            _, labels, _ = kmeans_fit(jax.random.PRNGKey(r), feats,
-                                      args.dialects)
-            clusters = clusters_from_labels(np.asarray(labels),
-                                            args.dialects)
-            div = np.asarray(weight_divergence(client_params, global_params))
-            idx = select_divergence(div, clusters, s=1)
-        losses = []
-        updated = []
-        for n in idx:
-            key = jax.random.PRNGKey(1000 * r + int(n))
-            p_n, loss = local_update(global_params, jnp.asarray(streams[n]),
-                                     key)
-            updated.append(p_n)
-            losses.append(loss)
-        stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *updated)
-        client_params = jax.tree_util.tree_map(
-            lambda all_, new: all_.at[jnp.asarray(idx)].set(new),
-            client_params, stacked)
-        global_params = tree_weighted_mean_stacked(
-            stacked, np.ones(len(idx)))
-        ari = (adjusted_rand_index(np.asarray(labels), dialect)
-               if clusters is not None else float("nan"))
-        print(f"{r:5d} {'all' if r == 0 else 'divergence':>10s} "
-              f"{np.mean(losses):9.3f} {ari:6.3f}")
+    t0 = time.time()
+    hist = exp.run(rounds=args.rounds)
+    wall = time.time() - t0
+    ari = adjusted_rand_index(exp.cluster_labels,
+                              np.asarray(exp.fed.majority))
+    print(f"{'round':>5s} {'next-tok acc':>12s} {'T_k[s]':>8s} {'E_k[J]':>8s}")
+    for r, (a, T, E) in enumerate(zip(hist.accuracy, hist.T_k, hist.E_k)):
+        print(f"{r:5d} {a:12.4f} {T:8.3f} {E:8.3f}")
+    print(f"dialect-cluster ARI={ari:.3f}  total T={hist.total_T:.2f}s "
+          f"E={hist.total_E:.2f}J  wall={wall:.1f}s")
+    if args.dry_run:
+        print("dry-run ok")
 
 
 if __name__ == "__main__":

@@ -102,21 +102,31 @@ def build_experiment(spec: ExperimentSpec, *, cell: int = 0,
     from repro.data import (make_dataset, partition_bias,
                             partition_bias_lazy)
 
-    if spec.model != "auto":
-        raise ValueError(
-            f"model={spec.model!r}: non-CNN architectures run through "
-            "repro.launch.fl_round.lower_fl_round_from_spec, not "
-            "build_experiment")
-    cnn_cfg = CNN_CONFIGS[spec.dataset]
+    from repro.models.registry import model_def_for, workload_config
+
+    if spec.model in ("auto", "cnn"):
+        model_cfg = CNN_CONFIGS[spec.dataset]
+    else:
+        model_cfg = workload_config(spec.model)
+    mdef = model_def_for(model_cfg)
 
     fleet, channel = fleet_for_cell(spec, cell)
     n = fleet.num_devices
 
-    ds = make_dataset(spec.dataset, spec.train_samples,
-                      seed=spec.resolved_data_seed)
+    if mdef.make_dataset is not None:
+        # self-synthesizing workloads (the LoRA LMs) build their own
+        # datasets from the config; ``spec.dataset`` selects nothing
+        ds = mdef.make_dataset(model_cfg, spec.train_samples,
+                               seed=spec.resolved_data_seed)
+    else:
+        ds = make_dataset(spec.dataset, spec.train_samples,
+                          seed=spec.resolved_data_seed)
     if test_data is None:
-        test = make_dataset(spec.dataset, spec.test_samples,
-                            seed=spec.resolved_test_seed)
+        test = (mdef.make_dataset(model_cfg, spec.test_samples,
+                                  seed=spec.resolved_test_seed)
+                if mdef.make_dataset is not None
+                else make_dataset(spec.dataset, spec.test_samples,
+                                  seed=spec.resolved_test_seed))
         test_images, test_labels = test.images, test.labels
     else:
         test_images, test_labels = test_data
@@ -132,7 +142,7 @@ def build_experiment(spec: ExperimentSpec, *, cell: int = 0,
                     + CELL_SEED_STRIDE * cell)
 
     exp = FLExperiment(
-        cnn_cfg, fed, test_images, test_labels, fleet,
+        model_cfg, fed, test_images, test_labels, fleet,
         fl_config_from_spec(spec, num_devices=n),
         bandwidth_mhz=spec.bandwidth_mhz,
         selection=SELECTORS.resolve(spec.selection),
@@ -147,7 +157,9 @@ def build_experiment(spec: ExperimentSpec, *, cell: int = 0,
         store=spec.store,
         k_max=spec.k_max,
         chunk_size=spec.chunk_size,
-        div_refresh_every=spec.div_refresh_every)
+        div_refresh_every=spec.div_refresh_every,
+        cluster=spec.cluster,
+        p_shards=spec.p_shards)
     exp.spec = spec
     exp.cell = cell
     return exp

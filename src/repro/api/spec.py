@@ -44,8 +44,10 @@ class ExperimentSpec:
     sigma: Union[float, str] = 0.8         # non-iid bias; "H" = half-half
 
     # ---- model -------------------------------------------------------
-    model: str = "auto"                    # "auto" → paper CNN for dataset;
-                                           # else an arch id (sharded fl_round)
+    model: str = "auto"                    # "auto" | "cnn" → paper CNN for
+                                           # dataset; else a registered
+                                           # workload name ("tinyllama",
+                                           # "mamba2-130m": LoRA LM rows)
 
     # ---- wireless fleet / physical scenario --------------------------
     bandwidth_mhz: float = 20.0            # B (per cell — reused across cells)
@@ -79,6 +81,14 @@ class ExperimentSpec:
     div_refresh_every: int = 0             # paged divergence refresh cadence:
                                            # 1 = every selection (exact dense
                                            # signal), 0 = lazy (drift-bounded)
+    cluster: str = "full"                  # Alg.-2 K-means fit: "full" (one
+                                           # [N, F] matrix) or "minibatch"
+                                           # (streaming, O(chunk) memory)
+
+    # ---- flat-plane sharding (model axis) ----------------------------
+    p_shards: int = 0                      # >0: shard the [N, P] plane's P
+                                           # axis over min(p_shards, devices)
+                                           # (repro.sharding.specs); 0 = off
 
     # ---- client churn (buffered-asynchronous engine only) ------------
     churn_leave: float = 0.0               # per-tick P(available → gone)
@@ -114,6 +124,19 @@ class ExperimentSpec:
         if self.div_refresh_every < 0:
             raise ValueError("div_refresh_every must be >= 0; got "
                              f"{self.div_refresh_every}")
+        if self.cluster not in ("full", "minibatch"):
+            raise ValueError(f"cluster={self.cluster!r}: expected 'full' "
+                             "or 'minibatch'")
+        if self.p_shards < 0:
+            raise ValueError(f"p_shards must be >= 0; got {self.p_shards}")
+        if self.model not in ("auto", "cnn"):
+            # importing the registry imports repro.models, whose __init__
+            # registers the built-in LM workloads
+            from repro.models.registry import workload_names
+            if self.model not in workload_names():
+                raise ValueError(
+                    f"unknown model {self.model!r}; known: "
+                    f"{('auto', 'cnn') + workload_names()}")
         if self.fleet is not None and not isinstance(self.fleet, FleetSpec):
             object.__setattr__(self, "fleet", FleetSpec.from_dict(self.fleet))
         object.__setattr__(self, "selection",

@@ -15,19 +15,19 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.paper_cnn import CNNConfig
-from repro.models.cnn import cnn_loss
+from repro.models.registry import model_def_for
 from repro.utils.trees import tree_sub, tree_scale, tree_add
 
 
-def make_fedprox_local_update(cnn_cfg: CNNConfig, lr: float,
+def make_fedprox_local_update(model_cfg, lr: float,
                               local_iters: int, batch_size: int,
                               mu: float = 0.01):
     """FedProx client update: SGD on  f_n(w) + μ/2‖w − w_g‖²."""
+    loss_fn = model_def_for(model_cfg).loss
 
     def local_update(global_params, images, labels, key):
         def prox_loss(p, batch):
-            base = cnn_loss(p, batch, cnn_cfg)
+            base = loss_fn(p, batch, model_cfg)
             sq = sum(jnp.sum(jnp.square(a.astype(jnp.float32)
                                         - b.astype(jnp.float32)))
                      for a, b in zip(jax.tree_util.tree_leaves(p),

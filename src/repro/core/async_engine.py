@@ -42,7 +42,7 @@ from jax import lax
 
 from repro.api.protocols import AsyncState, TracedContext
 from repro.core.engine import (EngineConfig, RoundOutputs, TracedRunResult,
-                               _eval_fn, build_round_phases)
+                               build_round_phases, model_eval)
 from repro.core.wireless import completion_times, masked_max
 from repro.utils.trees import unflatten_vector
 
@@ -241,8 +241,8 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
         state = state._replace(params=new_gvec, opt_state=new_opt,
                                sched=sched)
 
-        acc, _ = _eval_fn(unflatten_vector(spec, state.params),
-                          test_images, test_labels, cnn_cfg=cfg.cnn_cfg)
+        acc, _ = model_eval(cfg.model_cfg)(unflatten_vector(spec, state.params),
+                                           test_images, test_labels)
         return state, RoundOutputs(
             accuracy=acc, T=T, E=E, selected=idx, mask=mask,
             participation=part, staleness=stale, active=active)

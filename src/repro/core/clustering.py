@@ -163,6 +163,68 @@ def kmeans_predict(centroids, x):
     return jnp.argmin(_pairwise_sq_dists(x.astype(jnp.float32), centroids), axis=1)
 
 
+@functools.partial(jax.jit, static_argnames=("c",))
+def _chunk_assign_stats(x, centroids, c: int):
+    """One chunk's Lloyd-pass statistics: (per-cluster feature sums [C, F],
+    per-cluster counts [C], chunk inertia)."""
+    d = _pairwise_sq_dists(x, centroids)
+    labels = jnp.argmin(d, axis=1)
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    return onehot.T @ x, jnp.sum(onehot, axis=0), jnp.sum(jnp.min(d, axis=1))
+
+
+def kmeans_fit_minibatch(key, chunks, c: int, iters: int = 50):
+    """Streaming Lloyd over an O(chunk)-memory feature stream.
+
+    ``chunks`` is a CALLABLE returning a fresh iterator of host ``[n_i, F]``
+    feature blocks (e.g. the paged store's ``iter_client_features``), so the
+    fit never materializes the ``[N, F]`` matrix: each Lloyd pass folds
+    per-chunk assignment statistics (sums/counts) into [C, F] accumulators
+    and updates the centroids once per pass — mathematically full-batch
+    Lloyd, evaluated chunk-at-a-time, hence deterministic for a fixed chunk
+    stream.
+
+    A SINGLE-chunk stream short-circuits to :func:`kmeans_fit` verbatim, so
+    small fleets stay bit-identical to the full fit (the parity pin).
+    Multi-chunk streams seed k-means++ on the first chunk only.
+
+    Returns ``(centroids, labels, inertia)`` with labels covering every
+    streamed row in stream order — the same contract as :func:`kmeans_fit`.
+    """
+    first = None
+    multi = False
+    for block in chunks():
+        if first is None:
+            first = jnp.asarray(block, jnp.float32)
+        else:
+            multi = True
+            break
+    if first is None:
+        raise ValueError("kmeans_fit_minibatch: empty feature stream")
+    if not multi:
+        return kmeans_fit(key, first, c, iters=iters)
+
+    centroids = kmeans_plus_plus_init(key, first, c)
+    for _ in range(iters):
+        sums = jnp.zeros_like(centroids)
+        counts = jnp.zeros((c,), jnp.float32)
+        for block in chunks():
+            s, n, _ = _chunk_assign_stats(jnp.asarray(block, jnp.float32),
+                                          centroids, c)
+            sums = sums + s
+            counts = counts + n
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        centroids = jnp.where((counts > 0)[:, None], new, centroids)
+
+    labels, inertia = [], 0.0
+    for block in chunks():
+        x = jnp.asarray(block, jnp.float32)
+        d = _pairwise_sq_dists(x, centroids)
+        labels.append(np.asarray(jnp.argmin(d, axis=1)))
+        inertia += float(jnp.sum(jnp.min(d, axis=1)))
+    return centroids, jnp.asarray(np.concatenate(labels)), inertia
+
+
 def clusters_from_labels(labels: np.ndarray, c: int):
     """Algorithm 2 output form: list of index arrays {N_1..N_c}."""
     labels = np.asarray(labels)

@@ -45,34 +45,41 @@ import numpy as np
 from jax import lax
 
 from repro.api.protocols import RoundState, TracedContext
-from repro.configs.paper_cnn import CNNConfig
 from repro.core.algorithms import make_fedprox_local_update
 from repro.kernels import ops
-from repro.models.cnn import cnn_forward, cnn_loss, init_cnn
+from repro.models.registry import model_def_for
 from repro.utils.trees import (StackFlattenSpec, flatten_stacked,
                                stack_flatten_spec, unflatten_vector)
 
 
 @functools.lru_cache(maxsize=64)
-def model_flat_spec(cnn_cfg: CNNConfig) -> StackFlattenSpec:
-    """The flat-parameter-plane layout of ``cnn_cfg``'s model — derived
-    from shapes only (``eval_shape``), cached per config so every engine,
-    driver, and traced program shares one spec object."""
-    template = jax.eval_shape(functools.partial(init_cnn, cnn_cfg),
+def model_flat_spec(model_cfg) -> StackFlattenSpec:
+    """The flat-parameter-plane layout of ``model_cfg``'s PER-CLIENT
+    trainable state — derived from shapes only (``eval_shape``), cached per
+    config so every engine, driver, and traced program shares one spec
+    object. ``model_cfg`` is any registered frozen model config
+    (``CNNConfig`` → the full CNN pytree; ``LMConfig`` → the LoRA adapter
+    tree only, so ``P = P_adapter`` across the whole plane)."""
+    mdef = model_def_for(model_cfg)
+    template = jax.eval_shape(functools.partial(mdef.init, model_cfg),
                               jax.ShapeDtypeStruct((2,), jnp.uint32))
     return stack_flatten_spec(template)
 
 
-def make_local_update(cnn_cfg: CNNConfig, lr: float, local_iters: int,
+def make_local_update(model_cfg, lr: float, local_iters: int,
                       batch_size: int):
     """One client's local training: L SGD steps on its own shard (Alg. 1
-    lines 6-10, with the paper-endorsed SGD variant of §III-A)."""
+    lines 6-10, with the paper-endorsed SGD variant of §III-A). The loss
+    comes from ``model_cfg``'s registered :class:`ModelDef` — for
+    ``CNNConfig`` it IS the original ``cnn_loss`` function object, so the
+    traced jaxpr is bit-identical to the pre-registry engine."""
+    loss_fn = model_def_for(model_cfg).loss
 
     def local_update(params, images, labels, key):
         def step(p, k):
             idx = jax.random.randint(k, (batch_size,), 0, images.shape[0])
             batch = {"images": images[idx], "labels": labels[idx]}
-            g = jax.grad(cnn_loss)(p, batch, cnn_cfg)
+            g = jax.grad(loss_fn)(p, batch, model_cfg)
             p = jax.tree_util.tree_map(lambda w, gw: w - lr * gw, p, g)
             return p, None
 
@@ -83,10 +90,22 @@ def make_local_update(cnn_cfg: CNNConfig, lr: float, local_iters: int,
     return local_update
 
 
+@functools.lru_cache(maxsize=64)
+def model_eval(model_cfg):
+    """``(params, test_x, test_y) -> (accuracy, per_class)`` for
+    ``model_cfg``'s workload (cached so every program traces one closure)."""
+    mdef = model_def_for(model_cfg)
+    return functools.partial(mdef.evaluate, cfg=model_cfg)
+
+
 @dataclass(frozen=True)
 class EngineConfig:
-    """The static (compile-time) hyper-parameters of the round compute."""
-    cnn_cfg: CNNConfig
+    """The static (compile-time) hyper-parameters of the round compute.
+
+    ``model_cfg`` is the hashable frozen config of ANY registered workload
+    (``CNNConfig``, ``LMConfig``, ...) — its value keys every compiled
+    program and shared engine."""
+    model_cfg: Any
     learning_rate: float
     local_iters: int
     batch_size: int
@@ -121,21 +140,20 @@ class RoundEngine:
         self.cfg = cfg
         if cfg.fedprox_mu > 0:
             local_update = make_fedprox_local_update(
-                cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters,
+                cfg.model_cfg, cfg.learning_rate, cfg.local_iters,
                 cfg.batch_size, mu=cfg.fedprox_mu)
         else:
             local_update = make_local_update(
-                cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters,
+                cfg.model_cfg, cfg.learning_rate, cfg.local_iters,
                 cfg.batch_size)
         self._vmapped_update = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
-        self.flat_spec = model_flat_spec(cfg.cnn_cfg)
+        self.flat_spec = model_flat_spec(cfg.model_cfg)
         # train_clients has no input/output buffer alias to donate (its
         # output rows are param-shaped, its inputs are data-shaped); the
         # donation that stops the legacy path double-buffering the client
         # stack lives on scatter_rows, the store half of the round trip.
         self.train_clients = jax.jit(self._vmapped_update)
-        self.evaluate = jax.jit(functools.partial(_eval_fn,
-                                                  cnn_cfg=cfg.cnn_cfg))
+        self.evaluate = jax.jit(model_eval(cfg.model_cfg))
         # donate the global params: the new global aliases them in place
         self.round_step = jax.jit(self._round_step, donate_argnums=(0,))
         # donated in-place row scatter into the [N, P] client-weight plane
@@ -165,7 +183,7 @@ class RoundEngine:
         return eng
 
     def init_params(self, key):
-        return init_cnn(self.cfg.cnn_cfg, key)
+        return model_def_for(self.cfg.model_cfg).init(self.cfg.model_cfg, key)
 
     # -- fused fast path -----------------------------------------------
     def _round_step(self, global_params, images, labels, keys, weights,
@@ -181,19 +199,9 @@ class RoundEngine:
         rows = flatten_stacked(stacked)
         new_global = unflatten_vector(self.flat_spec,
                                       ops.flat_aggregate(rows, weights))
-        acc, per_class = _eval_fn(new_global, test_images, test_labels,
-                                  cnn_cfg=self.cfg.cnn_cfg)
+        acc, per_class = model_eval(self.cfg.model_cfg)(
+            new_global, test_images, test_labels)
         return rows, new_global, acc, per_class
-
-
-def _eval_fn(params, test_images, test_labels, *, cnn_cfg: CNNConfig):
-    logits = cnn_forward(params, test_images, cnn_cfg)
-    pred = jnp.argmax(logits, axis=-1)
-    acc = jnp.mean((pred == test_labels).astype(jnp.float32))
-    onehot = jax.nn.one_hot(test_labels, cnn_cfg.num_classes)
-    correct = (pred == test_labels).astype(jnp.float32)[:, None] * onehot
-    per_class = jnp.sum(correct, 0) / jnp.maximum(jnp.sum(onehot, 0), 1.0)
-    return acc, per_class
 
 
 # ---------------------------------------------------------------------------
@@ -257,13 +265,14 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
 
     if cfg.fedprox_mu > 0:
         local_update = make_fedprox_local_update(
-            cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size,
+            cfg.model_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size,
             mu=cfg.fedprox_mu)
     else:
         local_update = make_local_update(
-            cfg.cnn_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size)
+            cfg.model_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size)
     vmapped_update = jax.vmap(local_update, in_axes=(None, 0, 0, 0))
-    spec = model_flat_spec(cfg.cnn_cfg)
+    spec = model_flat_spec(cfg.model_cfg)
+    eval_fn = model_eval(cfg.model_cfg)
     N, B = tctx.num_devices, tctx.bandwidth_mhz
     channel_rng = channel is not None and getattr(channel, "needs_rng", False)
     channel_stateful = (channel is not None
@@ -340,8 +349,8 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
         key, sub = jax.random.split(state.key)
         _, k_labels, _ = kmeans_fit(sub, feats, tctx.num_clusters)
         state = state._replace(key=key, labels=k_labels.astype(jnp.int32))
-        acc0, _ = _eval_fn(unflatten_vector(spec, state.params),
-                           test_images, test_labels, cnn_cfg=cfg.cnn_cfg)
+        acc0, _ = eval_fn(unflatten_vector(spec, state.params),
+                          test_images, test_labels)
         state, arr = step_channel(state, arr)
         if inr_round is not None:
             arr = dict(arr)
@@ -377,8 +386,8 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
             arr_sel["inr"] = arr_sel["inr"] + inr_round
         T, E, _, _ = allocator.allocate_traced(arr_sel, B, mask)
         state = train_aggregate(state, idx, mask, images, labels, sizes)
-        acc, _ = _eval_fn(unflatten_vector(spec, state.params),
-                          test_images, test_labels, cnn_cfg=cfg.cnn_cfg)
+        acc, _ = eval_fn(unflatten_vector(spec, state.params),
+                         test_images, test_labels)
         return state, RoundOutputs(
             accuracy=acc, T=T, E=E, selected=idx, mask=mask,
             inr=None if inr_round is None else inr_round[0])
@@ -421,9 +430,10 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
 
     Model weights travel on the FLAT PARAMETER PLANE: the carry holds the
     global model as one [P] row and all N client models as one [N, P]
-    buffer (layout = ``model_flat_spec(cfg.cnn_cfg)``). Local training
-    gathers the selected rows' data, unflattens the global row to the CNN
-    pytree for the vmapped SGD steps, then flattens the results back — so
+    buffer (layout = ``model_flat_spec(cfg.model_cfg)``). Local training
+    gathers the selected rows' data, unflattens the global row to the
+    workload's trainable pytree for the vmapped SGD steps, then flattens
+    the results back — so
     weight divergence is ONE fused row-norm reduction, eq.-(4) aggregation
     ONE masked weighted row-reduction (``ops.flat_aggregate``), K-means
     features a zero-copy column slice, and compression a per-row segment

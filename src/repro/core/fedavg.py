@@ -33,8 +33,8 @@ from repro.api.registry import (AGGREGATORS, ALLOCATORS, CHANNELS,
 import repro.api.scenario  # noqa: F401  (populate the channel registry)
 import repro.strategies  # noqa: F401  (populate the registries)
 from repro.configs.base import FLConfig
-from repro.configs.paper_cnn import CNNConfig
-from repro.core.clustering import (kmeans_fit, extract_features_flat,
+from repro.core.clustering import (kmeans_fit, kmeans_fit_minibatch,
+                                   extract_features_flat,
                                    clusters_from_labels,
                                    resolve_feature_columns)
 from repro.core.divergence import weight_divergence_flat
@@ -87,7 +87,7 @@ class FLExperiment:
     resolved through the ``repro.api`` registries.
     """
 
-    def __init__(self, cnn_cfg: CNNConfig, fed: FederatedData,
+    def __init__(self, model_cfg: Any, fed: FederatedData,
                  test_images: np.ndarray, test_labels: np.ndarray,
                  fleet: Fleet, fl: FLConfig, *, bandwidth_mhz: float = 20.0,
                  allocator: Any = "sao", seed: int = 0,
@@ -98,8 +98,10 @@ class FLExperiment:
                  churn: Any = None, store: str = "dense",
                  k_max: Optional[int] = None,
                  chunk_size: Optional[int] = None,
-                 div_refresh_every: int = 0):
-        self.cnn_cfg = cnn_cfg
+                 div_refresh_every: int = 0, cluster: str = "full",
+                 p_shards: int = 0):
+        self.model_cfg = model_cfg
+        self.p_shards = int(p_shards)
         self.fed = fed
         self.fleet = fleet
         self.fl = fl
@@ -147,9 +149,14 @@ class FLExperiment:
         # runs, so incremental run() calls continue the virtual clock
         self.sched = None
 
+        if cluster not in ("full", "minibatch"):
+            raise ValueError(
+                f"cluster must be 'full' or 'minibatch'; got {cluster!r}")
+        self.cluster_mode = cluster
+
         # -- compiled compute, shared across same-config experiments ---
         self.engine = RoundEngine.shared(EngineConfig(
-            cnn_cfg, fl.learning_rate, fl.local_iters, batch_size,
+            model_cfg, fl.learning_rate, fl.local_iters, batch_size,
             fedprox_mu=fedprox_mu))
 
         self.global_params = self.engine.init_params(self._next_key())
@@ -194,6 +201,12 @@ class FLExperiment:
         n_par = tree_num_params(self.global_params)
         n_leaves = len(jax.tree_util.tree_leaves(self.global_params))
         z = self.compressor.payload_mbit(n_par, n_leaves)
+        if z is None:
+            from repro.models.registry import model_def_for
+            if model_def_for(model_cfg).price_uploads:
+                # adapter workloads upload the TRAINABLE parameters only:
+                # price z from P (= P_adapter fp32 bits), never P_base
+                z = n_par * 32 / 1e6
         if z is not None:
             import dataclasses as _dc
             self.fleet = _dc.replace(fleet, z=np.full_like(fleet.z, z))
@@ -365,8 +378,16 @@ class FLExperiment:
             self.aggregate(new_params, idx)
         else:
             self._initial_round_waves(idx)
-        feats = self.client_features()
-        _, labels, _ = kmeans_fit(self._next_key(), feats, self.fl.num_clusters)
+        if self.cluster_mode == "minibatch":
+            # O(chunk)-memory streaming fit: feature blocks page straight
+            # from the store; a single-chunk stream IS the full fit
+            chunks = lambda: (blk for _, blk in self.iter_client_features())
+            _, labels, _ = kmeans_fit_minibatch(self._next_key(), chunks,
+                                                self.fl.num_clusters)
+        else:
+            feats = self.client_features()
+            _, labels, _ = kmeans_fit(self._next_key(), feats,
+                                      self.fl.num_clusters)
         self.cluster_labels = np.asarray(labels)
         self.clusters = clusters_from_labels(labels, self.fl.num_clusters)
         if self._store.kind == "paged":
@@ -740,7 +761,19 @@ class FLExperiment:
                         feature_layer=self.fl.feature_layer,
                         rounds=rounds, with_init=with_init,
                         channel=self.channel, churn=self.churn)
-        res = fn(self.traced_state(), self._images, self._labels,
+        state = self.traced_state()
+        if self.p_shards:
+            # P-axis GSPMD: lay the carry's P-sized dims out over a `model`
+            # mesh before dispatch — the scanned program's donated carry
+            # keeps the layout for the whole run. Composes with the cohort
+            # shard_map (which owns the lane axis, never P).
+            from repro.sharding.specs import plane_mesh, plane_shardings
+            mesh = plane_mesh(self.p_shards)
+            if mesh is not None:
+                state = jax.device_put(
+                    state, plane_shardings(state, mesh,
+                                           int(state.params.shape[0])))
+        res = fn(state, self._images, self._labels,
                  self._sizes, fleet_arrays(self.fleet), self.test_images,
                  self.test_labels)
         self.load_traced_state(res.state,

@@ -1,4 +1,5 @@
 from repro.data.synthetic import Dataset, make_dataset, make_token_stream
+from repro.data.lm_data import make_lm_dataset
 from repro.data.partition import (FederatedData, LazyFederatedData,
                                   partition_bias, partition_bias_lazy,
                                   partition_dirichlet)

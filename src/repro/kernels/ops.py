@@ -54,6 +54,17 @@ def _resolve_use_pallas(op: str, use_pallas: bool | None) -> bool:
     return use_pallas
 
 
+def kernel_dispatch(use_pallas: bool | None = None) -> bool:
+    """Would this call take the kernel route? The policy of
+    ``_resolve_use_pallas`` WITHOUT the off-TPU warning — for callers
+    (``models.transformer`` / ``models.layers``) that branch between an op
+    here and their own jnp path, then pass the raw ``use_pallas`` down so
+    the op's resolver still owns the single warning."""
+    if use_pallas is None:
+        return _force_pallas() or _on_tpu()
+    return use_pallas
+
+
 def pairwise_sq_dists(x, c, *, use_pallas: bool | None = None):
     """[N, F] × [M, F] -> [N, M] squared L2 (K-means / Fig. 4 hot spot).
 

@@ -6,3 +6,7 @@ from repro.models.transformer import (
     ENC_MEMORY_LEN,
 )
 from repro.models.cnn import init_cnn, cnn_forward, cnn_loss, cnn_accuracy
+from repro.models.registry import (ModelDef, model_def_for, register_model_def,
+                                   register_workload, workload_config,
+                                   workload_names)
+import repro.models.lm  # noqa: F401  (registers the LoRA LM workloads)

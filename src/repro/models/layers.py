@@ -536,10 +536,16 @@ def mamba2_split_dims(cfg: ModelConfig):
     return d_inner, n_heads, conv_ch
 
 
-def mamba2_apply(p, x, cfg: ModelConfig, initial_state=None, return_state=False):
+def mamba2_apply(p, x, cfg: ModelConfig, initial_state=None,
+                 return_state=False, use_pallas=None):
     """Mamba2 block over a full sequence (train / prefill).
 
     x: [B, S, D] -> [B, S, D].
+
+    ``use_pallas`` routes the inner SSD recurrence to the Pallas
+    ``ssd_scan`` kernel under the ``repro.kernels.ops`` dispatch policy
+    (fresh-state sequences only — a carried ``initial_state`` stays on the
+    chunked jnp path, which the kernel has no entry point for).
     """
     s = cfg.ssm
     d_inner, n_heads, conv_ch = mamba2_split_dims(cfg)
@@ -555,8 +561,15 @@ def mamba2_apply(p, x, cfg: ModelConfig, initial_state=None, return_state=False)
     A_raw = -jnp.exp(p["A_log"])                                       # [H]
     A_log_disc = dt * A_raw[None, None, :]
     Xdt = xs.astype(jnp.float32) * dt[..., None]
-    Y, h_final = ssd_chunked(Xdt, A_log_disc, Bm.astype(jnp.float32),
-                             Cm.astype(jnp.float32), s.chunk_size, initial_state)
+    from repro.kernels import ops
+    if initial_state is None and ops.kernel_dispatch(use_pallas):
+        Y, h_final = ops.ssd(Xdt, A_log_disc, Bm.astype(jnp.float32),
+                             Cm.astype(jnp.float32), chunk=s.chunk_size,
+                             n_groups=s.n_groups, use_pallas=use_pallas)
+    else:
+        Y, h_final = ssd_chunked(Xdt, A_log_disc, Bm.astype(jnp.float32),
+                                 Cm.astype(jnp.float32), s.chunk_size,
+                                 initial_state)
     Y = Y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
     Y = Y.reshape(B, S, d_inner).astype(x.dtype)
     Y = rmsnorm(Y * silu(z), p["norm"], cfg.norm_eps)

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.models import layers as L
 from repro.sharding.ctx import constrain
 
@@ -148,7 +149,8 @@ def init_model(cfg: ModelConfig, key, dtype=jnp.float32):
 def _block_apply(p, x, cfg: ModelConfig, *, mixer: str, mlp: str,
                  causal: bool = True, window=None, positions=None,
                  memory=None, moe_impl: str = "dense",
-                 q_chunk: int = 512, kv_chunk: int = 1024):
+                 q_chunk: int = 512, kv_chunk: int = 1024,
+                 use_pallas=None):
     """Full-sequence block application (train / prefill). Returns (x, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = L.rmsnorm(x, p["ln1"], cfg.norm_eps)
@@ -156,14 +158,21 @@ def _block_apply(p, x, cfg: ModelConfig, *, mixer: str, mlp: str,
         q, k, v = L.attention_qkv(p["attn"], h, cfg)
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
-        attn_out = L.blockwise_attention(
-            q, k, v, causal=causal, window=window,
-            q_positions=None, k_positions=None,
-            q_chunk=q_chunk, kv_chunk=kv_chunk)
+        if ops.kernel_dispatch(use_pallas):
+            # flash-attention kernel under the dispatch policy (TPU /
+            # REPRO_FORCE_PALLAS / explicit opt-in); ops.attention owns
+            # the off-TPU interpret-mode warning
+            attn_out = ops.attention(q, k, v, causal=causal, window=window,
+                                     use_pallas=use_pallas)
+        else:
+            attn_out = L.blockwise_attention(
+                q, k, v, causal=causal, window=window,
+                q_positions=None, k_positions=None,
+                q_chunk=q_chunk, kv_chunk=kv_chunk)
         B, S = x.shape[:2]
         x = x + attn_out.reshape(B, S, -1) @ p["attn"]["wo"]
     else:
-        x = x + L.mamba2_apply(p["mamba"], h, cfg)
+        x = x + L.mamba2_apply(p["mamba"], h, cfg, use_pallas=use_pallas)
     if memory is not None and "cross" in p:
         h = L.rmsnorm(x, p["ln_cross"], cfg.norm_eps)
         q, k, v = L.attention_qkv(p["cross"], h, cfg, kv_x=memory)
@@ -217,14 +226,17 @@ def _scan_stack(stacked, x, body, unroll: int = 1):
 
 def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
             moe_impl: str = "dense", q_chunk: int = 512, kv_chunk: int = 1024,
-            remat: bool = False, unroll: int = 1):
-    """Returns (logits [B, S, V], aux_loss scalar)."""
+            remat: bool = False, unroll: int = 1, use_pallas=None):
+    """Returns (logits [B, S, V], aux_loss scalar).
+
+    ``use_pallas`` selects the attention / SSD kernel route per the
+    ``repro.kernels.ops`` dispatch policy (None = follow the backend)."""
     window = cfg.sliding_window
 
     if cfg.is_encoder_decoder:
         return _forward_encdec(cfg, params, batch, moe_impl=moe_impl,
                                q_chunk=q_chunk, kv_chunk=kv_chunk, remat=remat,
-                               unroll=unroll)
+                               unroll=unroll, use_pallas=use_pallas)
 
     tokens = batch["tokens"]
     B, S = tokens.shape
@@ -240,7 +252,8 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
             x, aux = _block_apply(lp, x, cfg, mixer=mixer, mlp=mlp,
                                   causal=True, window=window,
                                   positions=positions, moe_impl=moe_impl,
-                                  q_chunk=q_chunk, kv_chunk=kv_chunk)
+                                  q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                  use_pallas=use_pallas)
             return constrain(x, "act"), aux
         if remat:
             return jax.checkpoint(body, prevent_cse=False)
@@ -269,7 +282,7 @@ def forward(cfg: ModelConfig, params, batch: Dict[str, Any], *,
 
 
 def _forward_encdec(cfg: ModelConfig, params, batch, *, moe_impl, q_chunk,
-                    kv_chunk, remat, unroll: int = 1):
+                    kv_chunk, remat, unroll: int = 1, use_pallas=None):
     mlp = "moe" if cfg.moe else "dense"
     # --- encoder ---
     if cfg.continuous_encoder_input:
@@ -283,7 +296,8 @@ def _forward_encdec(cfg: ModelConfig, params, batch, *, moe_impl, q_chunk,
     def enc_body(lp, x):
         x, aux = _block_apply(lp, x, cfg, mixer="attn", mlp=mlp, causal=False,
                               positions=enc_pos, moe_impl=moe_impl,
-                              q_chunk=q_chunk, kv_chunk=kv_chunk)
+                              q_chunk=q_chunk, kv_chunk=kv_chunk,
+                              use_pallas=use_pallas)
         return constrain(x, "act"), aux
 
     body = jax.checkpoint(enc_body, prevent_cse=False) if remat else enc_body
@@ -300,7 +314,7 @@ def _forward_encdec(cfg: ModelConfig, params, batch, *, moe_impl, q_chunk,
         x, aux = _block_apply(lp, x, cfg, mixer="attn", mlp=mlp, causal=True,
                               positions=dec_pos, memory=memory,
                               moe_impl=moe_impl, q_chunk=q_chunk,
-                              kv_chunk=kv_chunk)
+                              kv_chunk=kv_chunk, use_pallas=use_pallas)
         return constrain(x, "act"), aux
 
     body = jax.checkpoint(dec_body, prevent_cse=False) if remat else dec_body

@@ -199,3 +199,46 @@ def cache_shardings(cfg, cache_struct, mesh: Mesh, batch: int):
         return NamedSharding(mesh, P())
 
     return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# flat parameter plane (the federated [N, P] client buffer)
+# ---------------------------------------------------------------------------
+
+
+def plane_spec(leaf, mesh: Mesh, p: int) -> P:
+    """PartitionSpec for one flat-plane carry leaf.
+
+    Any dim equal to the plane width ``p`` shards over ``model`` when
+    divisible — rightmost match wins, so ``[N, P]`` shards its COLUMN axis
+    and the global ``[P]`` row shards directly; leaves with no P-sized dim
+    (labels, keys, scheduler state) and non-divisible planes replicate.
+    The client axis N is never sharded here: it belongs to the cohort
+    ``shard_map`` axis, which this composes with orthogonally.
+    """
+    m = _axis_size(mesh, MODEL_AXIS)
+    ndim = getattr(leaf, "ndim", 0)
+    spec = [None] * ndim
+    if m > 1 and p % m == 0:
+        for idx in reversed(range(ndim)):
+            if leaf.shape[idx] == p:
+                spec[idx] = MODEL_AXIS
+                break
+    return P(*spec)
+
+
+def plane_shardings(tree, mesh: Mesh, p: int):
+    """Tree of NamedShardings for a flat-plane carry (``RoundState``)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, plane_spec(leaf, mesh, p)), tree)
+
+
+def plane_mesh(p_shards: int) -> Optional[Mesh]:
+    """A 1-axis ``model`` mesh over ``min(p_shards, len(devices))`` devices
+    (``None`` when sharding is off). A single-device mesh is valid — the
+    shardings degenerate to replication, so the code path is exercisable
+    anywhere."""
+    if p_shards <= 0:
+        return None
+    devs = jax.devices()[:max(1, min(p_shards, len(jax.devices())))]
+    return Mesh(np.asarray(devs), (MODEL_AXIS,))
