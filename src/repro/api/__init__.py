@@ -12,8 +12,8 @@ from repro.api.registry import (AGGREGATORS, ALLOCATORS, CHANNELS,
                                 StrategyError, get_registry,
                                 register_channel)
 from repro.api.protocols import (Allocation, Aggregator, Allocator,
-                                 AsyncState, ChannelModel, Compressor,
-                                 RoundState, SelectionContext, Selector,
+                                 ChannelModel, Compressor, RoundState,
+                                 SelectionContext, Selector,
                                  TracedAllocator, TracedContext,
                                  TracedSelector)
 from repro.api.scenario import (CellSpec, FleetSpec, build_fleet,
@@ -27,7 +27,7 @@ __all__ = [
     "AGGREGATORS", "ALLOCATORS", "CHANNELS", "COMPRESSORS", "SELECTORS",
     "Registry", "Strategy", "StrategyError", "get_registry",
     "register_channel",
-    "Allocation", "Aggregator", "Allocator", "AsyncState", "ChannelModel",
+    "Allocation", "Aggregator", "Allocator", "ChannelModel",
     "Compressor", "RoundState", "SelectionContext", "Selector",
     "TracedAllocator", "TracedContext", "TracedSelector",
     "CellSpec", "FleetSpec", "build_fleet", "multicell_fleet_spec",

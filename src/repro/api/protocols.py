@@ -65,33 +65,6 @@ class Allocation(NamedTuple):
 # ---------------------------------------------------------------------------
 
 
-class AsyncState(NamedTuple):
-    """Per-client bookkeeping of the buffered-asynchronous tick loop
-    (``repro.core.async_engine``), riding in the ``RoundState.sched`` slot
-    of the ``lax.scan`` carry.
-
-    Virtual time is event-driven: a tick dispatches clients, prices their
-    completion with the allocator's delay model, and advances ``t_now`` to
-    the moment the aggregation buffer fires (the M-th earliest in-flight
-    completion). All leaves are dense ``[N]`` vectors so the whole
-    bookkeeping stays single fused row ops on the flat plane.
-
-    Leaves:
-      age    : [N] float32 — server updates folded since this client was
-               dispatched (its staleness if it fired right now); 0 when idle
-      t_done : [N] float32 — absolute completion time of the in-flight
-               update, +inf when the client is not in flight
-      avail  : [N] bool — churn availability mask; selectors never dispatch
-               unavailable clients, and a departure cancels the in-flight
-               update
-      t_now  : scalar float32 — the virtual clock (last buffer-fire time)
-    """
-    age: Any
-    t_done: Any
-    avail: Any
-    t_now: Any
-
-
 class RoundState(NamedTuple):
     """The carried pytree of the scanned round loop — everything one FL
     round reads and writes, device-resident.
@@ -120,11 +93,16 @@ class RoundState(NamedTuple):
                       Gauss-Markov complex fading amplitude; the model's
                       ``init_state`` defines it — ``None`` for memoryless
                       channels, populated INSIDE the traced program)
-      sched         : :class:`AsyncState` (per-client age / in-flight
-                      completion-time / availability vectors + the virtual
-                      clock) when the buffered-asynchronous tick loop is
-                      driving the scan (``repro.core.async_engine``);
-                      ``None`` for the synchronous round barrier
+      sched         : the per-client statistics table
+                      (``repro.core.store.ClientStats`` — age / in-flight
+                      completion-time / availability / divergence columns
+                      + the virtual clock, a pytree with device leaves)
+                      when the buffered-asynchronous tick loop is driving
+                      the scan (``repro.core.async_engine``); ``None``
+                      for the synchronous round barrier. The same table
+                      is the store's host-side source of truth — the scan
+                      carries a device copy and ``load_traced_state``
+                      folds it back.
     """
     params: Any
     client_params: Any

@@ -129,6 +129,11 @@ class ExperimentSpec:
                              "or 'minibatch'")
         if self.p_shards < 0:
             raise ValueError(f"p_shards must be >= 0; got {self.p_shards}")
+        for name in ("churn_leave", "churn_join"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} is a per-tick probability; "
+                                 f"expected 0 <= p <= 1, got {v}")
         if self.model not in ("auto", "cnn"):
             # importing the registry imports repro.models, whose __init__
             # registers the built-in LM workloads

@@ -40,10 +40,12 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.api.protocols import AsyncState, TracedContext
+from repro.api.protocols import TracedContext
 from repro.core.engine import (EngineConfig, RoundOutputs, TracedRunResult,
                                build_round_phases, model_eval)
+from repro.core.store import ClientStats
 from repro.core.wireless import completion_times, masked_max
+from repro.kernels import ops
 from repro.utils.trees import unflatten_vector
 
 
@@ -136,10 +138,16 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
     def init_sched(state):
         if state.sched is not None:      # continuing a previous run
             return state
-        return state._replace(sched=AsyncState(
+        # same values as ClientStats.create(N).device() — the cohort path
+        # builds the table inside the program, the host driver ships its
+        # store's table in through RoundState.sched instead
+        return state._replace(sched=ClientStats(
+            divergence=jnp.zeros((N,), jnp.float32),
+            drift=jnp.zeros((N,), jnp.float32),
             age=jnp.zeros((N,), jnp.float32),
             t_done=jnp.full((N,), jnp.inf, jnp.float32),
             avail=jnp.ones((N,), bool),
+            cell=jnp.zeros((N,), jnp.int32),
             t_now=jnp.zeros((), jnp.float32)))
 
     def churn_step(state):
@@ -215,8 +223,9 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
         w_cand = jnp.where(fired_cand, sizes[cand], 0.0)
         if alpha != 0.0:
             w_cand = w_cand * aggregator.staleness_weights(sched.age[cand])
+        cand_rows = state.client_params[cand]
         agg_vec, agg_opt = aggregator.aggregate_flat(
-            state.params, state.client_params[cand], w_cand, state.opt_state)
+            state.params, cand_rows, w_cand, state.opt_state)
         # EMPTY-FIRE GUARD: flat_aggregate normalizes by max(Σw, eps), so
         # an all-zero weight row yields a ZERO vector — an empty tick must
         # instead pass the old global (and optimizer state) through
@@ -232,11 +241,26 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
                  / jnp.maximum(part, 1.0))
         active = jnp.sum(sched.avail.astype(jnp.float32))
 
+        # -- stats-table maintenance: a fired update refreshes the
+        # client's divergence against the NEW global and resets its drift
+        # bound; everyone else's bound grows by this fold's global step
+        # ‖g_new − g_old‖ (exactly 0 on an empty fire) — the same
+        # invariant the paged sync loop keeps, so selectors reading
+        # ``sched.divergence`` see refresh-on-contribution semantics on
+        # either backend. Pure add-on columns: nothing here feeds the
+        # history numerics or the PRNG stream.
+        div_cand = ops.client_divergence(cand_rows, new_gvec)
+        new_div = sched.divergence.at[cand].set(
+            jnp.where(fired_cand, div_cand, sched.divergence[cand]))
+        g_delta = jnp.linalg.norm(new_gvec - state.params)
+        new_drift = jnp.where(fired, 0.0, sched.drift + g_delta)
+
         # -- age the survivors, clear the fired, advance the clock -------
-        sched = AsyncState(
+        sched = sched._replace(
+            divergence=new_div,
+            drift=new_drift,
             age=jnp.where(inflight & ~fired, sched.age + 1.0, 0.0),
             t_done=jnp.where(fired, jnp.inf, t_done),
-            avail=sched.avail,
             t_now=t_fire)
         state = state._replace(params=new_gvec, opt_state=new_opt,
                                sched=sched)
@@ -289,3 +313,152 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
                                init_T=T0, init_E=E0)
 
     return run
+
+
+@functools.lru_cache(maxsize=32)
+def _paged_async_step_program(cfg: EngineConfig, selector, allocator,
+                              agg_name: str, agg_params: tuple, compressor,
+                              tctx: TracedContext, feature_layer: str,
+                              channel=None, churn=(0.0, 0.0)):
+    """The jitted pieces of ONE buffered-asynchronous tick over a paged
+    ``ClientStore`` — the host driver composes them with store paging in
+    between (``FLExperiment._run_async_paged``).
+
+    Same math, same PRNG discipline, same op order as the dense
+    :func:`_traced_async_program` tick, but the traced carry holds only
+    the O(N) stats columns (``RoundState.sched``, a ``ClientStats``
+    pytree) + the [P] global row — never an [N, P] plane
+    (``build_round_phases(plane="stats")``). The dispatched cohort's rows
+    and data move O(K·P) per tick through the store's staging API, and
+    the fire folds the M candidate rows gathered back from staging:
+    device memory is O(k_max·P + M·P) at any fleet size. Pinned
+    bit-identical to the dense tick at small N (``tests/
+    test_async_paged.py``).
+
+    The split into four functions is deliberate: ``sched`` (churn →
+    select → in-flight post-filter) and ``plan`` (allocate → completion
+    pricing → fire plan) hold every O(N)/O(N log N) scheduler op, while
+    ``train`` (O(K·P) local SGD) and ``fire`` (O(M·P) fold + eval) scale
+    only with the cohort — so the N-scaling benchmark can gate the
+    rest-of-tick cost flat in N, exactly like the PR-7 paged sync gate.
+    """
+    from types import SimpleNamespace
+
+    from repro.api.registry import AGGREGATORS
+
+    aggregator = AGGREGATORS.resolve({"name": agg_name,
+                                      "params": dict(agg_params)})
+    M = int(aggregator.buffer_size)
+    alpha = float(aggregator.staleness_alpha)
+    p_leave, p_join = float(churn[0]), float(churn[1])
+    churn_on = p_leave > 0.0 or p_join > 0.0
+
+    ph = build_round_phases(cfg, aggregator, selector, allocator, compressor,
+                            tctx, feature_layer, channel, plane="stats")
+    N, spec = ph.N, ph.spec
+    eval_fn = model_eval(cfg.model_cfg)
+
+    def churn_step(state):
+        """Identical to the dense tick's churn: same splits, same masks —
+        the PRNG streams of the two backends stay in lockstep."""
+        sched = state.sched
+        key, kc = jax.random.split(state.key)
+        k_leave, k_join = jax.random.split(kc)
+        leave = jax.random.uniform(k_leave, (N,)) < p_leave
+        join = jax.random.uniform(k_join, (N,)) < p_join
+        avail = jnp.where(sched.avail, ~leave, join)
+        sched = sched._replace(
+            avail=avail,
+            t_done=jnp.where(avail, sched.t_done, jnp.inf),
+            age=jnp.where(avail, sched.age, 0.0))
+        return state._replace(key=key, sched=sched)
+
+    def sched_fn(state, arr):
+        """churn → select (divergence read from the stats carry) →
+        in-flight/availability post-filter. All the O(N) selection work."""
+        if churn_on:
+            state = churn_step(state)
+        sched = state.sched
+        arr_in = arr
+        if churn_on:
+            arr_in = dict(arr)
+            arr_in["avail"] = sched.avail.astype(jnp.float32)
+        state, arr_f, idx, mask = ph.select_phase(state, arr_in)
+        arr_f = dict(arr_f)
+        arr_f.pop("avail", None)
+        ok_client = sched.avail & ~jnp.isfinite(sched.t_done)
+        okpad = jnp.concatenate([ok_client, jnp.zeros((1,), bool)])
+        mask = mask & okpad[idx]
+        idx = jnp.where(mask, idx, N).astype(jnp.int32)
+        return state, arr_f, idx, mask
+
+    def plan_fn(state, arr_f, idx, mask, sizes):
+        """allocate → price completions → stamp ``t_done`` → fire plan.
+        Returns the tick's (T, E), the M buffer candidates (client-index
+        sorted, exactly the dense tick's summation order), their fired
+        mask and staleness-discounted weights, and the per-tick traces —
+        and advances age/t_done/t_now on the stats carry."""
+        sched = state.sched
+        arr_sel = {k: v[idx] for k, v in arr_f.items()}
+        T, E, b, f = allocator.allocate_traced(arr_sel, ph.B, mask)
+        d = completion_times(arr_sel, b, f, mask)        # +inf on padding
+        t_done = sched.t_done.at[idx].set(sched.t_now + d, mode="drop")
+        inflight = jnp.isfinite(t_done)
+        order = jnp.argsort(t_done)
+        rank = jnp.zeros((N,), jnp.int32).at[order].set(
+            jnp.arange(N, dtype=jnp.int32))
+        fired = inflight & (rank < M)
+        t_fire = jnp.maximum(sched.t_now,
+                             masked_max(t_done, fired, empty=sched.t_now))
+        cand = jnp.sort(order[:M])
+        # fired == cand[fired_cand]: fired ⊆ order[:M] by construction,
+        # and a candidate's pre-clear t_done is finite iff it fired — so
+        # the host learns which staged rows to release from the [M]
+        # transfer alone, never a [N] one
+        fired_cand = jnp.isfinite(t_done[cand])
+        w_cand = jnp.where(fired_cand, sizes[cand], 0.0)
+        if alpha != 0.0:
+            w_cand = w_cand * aggregator.staleness_weights(sched.age[cand])
+        # traces read the PRE-fold ages (the staleness actually applied)
+        part = jnp.sum(fired.astype(jnp.float32))
+        stale = (jnp.sum(jnp.where(fired, sched.age, 0.0))
+                 / jnp.maximum(part, 1.0))
+        active = jnp.sum(sched.avail.astype(jnp.float32))
+        sched = sched._replace(
+            age=jnp.where(inflight & ~fired, sched.age + 1.0, 0.0),
+            t_done=jnp.where(fired, jnp.inf, t_done),
+            t_now=t_fire)
+        state = state._replace(sched=sched)
+        return state, T, E, cand, fired_cand, w_cand, (part, stale, active)
+
+    def train_fn(state, images_sel, labels_sel):
+        """O(K·P) local SGD of the host-gathered cohort data — the same
+        ``train_gathered`` closure (and key split) as every other driver."""
+        return ph.train_gathered(state, images_sel, labels_sel)
+
+    def fire_fn(state, cand_rows, w_cand, fired_cand, test_images,
+                test_labels):
+        """Fold the M candidate rows (staged back from the store), guard
+        the empty fire, evaluate; returns the fired candidates' refreshed
+        divergence and the global step norm ‖g_new − g_old‖ (exactly 0 on
+        an empty fire) for the host's stats-table bookkeeping."""
+        agg_vec, agg_opt = aggregator.aggregate_flat(
+            state.params, cand_rows, w_cand, state.opt_state)
+        # EMPTY-FIRE GUARD — any(fired_cand) ≡ any(fired), see plan_fn
+        any_fired = jnp.any(fired_cand)
+        new_gvec = jnp.where(any_fired, agg_vec, state.params)
+        new_opt = jax.tree_util.tree_map(
+            lambda a, o: jnp.where(any_fired, a, o), agg_opt,
+            state.opt_state)
+        div_cand = ops.client_divergence(cand_rows, new_gvec)
+        g_delta = jnp.linalg.norm(new_gvec - state.params)
+        state = state._replace(params=new_gvec, opt_state=new_opt)
+        acc, _ = eval_fn(unflatten_vector(spec, new_gvec),
+                         test_images, test_labels)
+        return state, acc, div_cand, g_delta
+
+    return SimpleNamespace(
+        N=N, M=M, spec=spec, churn_on=churn_on,
+        init_channel=ph.init_channel,
+        sched=jax.jit(sched_fn), plan=jax.jit(plan_fn),
+        train=jax.jit(train_fn), fire=jax.jit(fire_fn))

@@ -152,9 +152,10 @@ class CohortRunner:
         if getattr(spec, "store", "dense") != "dense":
             raise ValueError(
                 "CohortRunner scans the dense [N, P] client plane as a "
-                "vmapped carry; store='paged' runs the host round loop — "
-                "drive seeds through build_experiment(spec) / "
-                "FLExperiment.run instead")
+                "vmapped carry; a paged ClientStore serves rows on demand "
+                "(store.gather / iter_client_trees) through the host "
+                "drivers instead — run the seeds one at a time via "
+                "build_experiment(spec) / FLExperiment.run")
         self.spec = spec
         self.experiments: List[FLExperiment] = []
 

@@ -240,7 +240,7 @@ class TracedRunResult(NamedTuple):
 
 def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
                        compressor, tctx: TracedContext, feature_layer: str,
-                       channel=None):
+                       channel=None, plane: str = "full"):
     """The per-round phase closures every scanned program is composed of.
 
     Both device-resident execution modes — the synchronous round barrier
@@ -250,19 +250,42 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
     the synchronous round body op for op, and the sync-degeneracy parity
     pin holds bit-identically by construction.
 
+    ``plane`` selects what client state the traced carry holds:
+
+    ``"full"``
+        ``RoundState.client_params`` is the dense ``[N, P]`` buffer (the
+        PR-5 layout — the dense backend degenerates to today's program,
+        bit-identical): divergence is the full-plane row reduction and
+        trained rows scatter into the carry.
+
+    ``"stats"``
+        The carry holds only the O(N) stats columns
+        (``RoundState.sched``, a ``ClientStats`` pytree) plus whatever
+        active ``[K, P]`` rows the caller gathers from its
+        ``ClientStore``: ``select_phase`` reads divergence straight from
+        ``sched.divergence`` (the store's refreshed table) and
+        ``train_aggregate`` skips the plane scatter — persisting rows is
+        the store's job at the host boundary. This is how the paged
+        backend runs the scanned closures without an ``[N, P]`` buffer.
+
     ``aggregator`` is the resolved (possibly stateful) instance; all other
     strategies are the frozen dataclasses the program caches key on.
     Returns a namespace of pure jnp closures over the ``RoundState``
     carry: ``init_channel``/``step_channel`` (channel-state lifecycle),
-    ``train_rows`` (local SGD of a padded index set → compressed flat
-    rows, sync-loop key discipline), ``train_aggregate`` (train + store +
-    eq.-(4) masked aggregation), ``select_phase`` (fade → divergence →
-    select) and ``init_round``/``finish_phase`` (the Alg.-2 initial round
-    and one cell's allocate → train → eval round tail).
+    ``train_gathered`` (local SGD of already-gathered ``[S_pad, ...]``
+    data → compressed flat rows — the store-agnostic core),
+    ``train_rows`` (index-set wrapper over ``train_gathered``, sync-loop
+    key discipline), ``train_aggregate`` (train + store + eq.-(4) masked
+    aggregation), ``select_phase`` (fade → divergence → select) and
+    ``init_round``/``finish_phase`` (the Alg.-2 initial round and one
+    cell's allocate → train → eval round tail).
     """
     from repro.core.clustering import extract_features_flat, kmeans_fit
     from repro.core.divergence import weight_divergence_flat
 
+    if plane not in ("full", "stats"):
+        raise ValueError(f"unknown carry plane {plane!r}; "
+                         "expected 'full' or 'stats'")
     if cfg.fedprox_mu > 0:
         local_update = make_fedprox_local_update(
             cfg.model_cfg, cfg.learning_rate, cfg.local_iters, cfg.batch_size,
@@ -302,25 +325,32 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
             return state._replace(channel=ch_state), arr
         return state, channel.apply_traced(k_ch, arr)
 
-    def train_rows(state, idx, images, labels):
-        """Local training of the padded index set ``idx`` from the current
-        global → compressed flat [S_pad, P] rows.
+    def train_gathered(state, images_sel, labels_sel):
+        """Local training of already-gathered ``[S_pad, ...]`` client data
+        from the current global → compressed flat [S_pad, P] rows. The
+        store-agnostic core: the dense path gathers by index on device
+        (``train_rows``), the paged path hands in host-paged slices —
+        identical PRNG consumption either way.
 
         Key discipline mirrors the host loop exactly: one split off the
         stream, then per-client subkeys — a traced run and the Python loop
         consume identical PRNG sequences.
         """
         key, sub = jax.random.split(state.key)
-        tkeys = jax.random.split(sub, idx.shape[0])
+        tkeys = jax.random.split(sub, images_sel.shape[0])
         # the one pytree excursion of the round: the CNN forward/backward
         # wants named leaves, so unflatten the global row for the vmapped
         # SGD steps and flatten the results straight back onto the plane
         params = unflatten_vector(spec, state.params)
-        # gathers clamp the out-of-bounds padding sentinel; masked below
-        stacked = vmapped_update(params, images[idx], labels[idx], tkeys)
+        stacked = vmapped_update(params, images_sel, labels_sel, tkeys)
         rows = flatten_stacked(stacked)                       # [S_pad, P]
         rows = compressor.apply_flat(rows, state.params, spec)
         return state._replace(key=key), rows
+
+    def train_rows(state, idx, images, labels):
+        """Local training of the padded index set ``idx`` — device-side
+        gathers clamp the out-of-bounds padding sentinel; masked later."""
+        return train_gathered(state, images[idx], labels[idx])
 
     def train_aggregate(state, idx, mask, images, labels, sizes):
         """Local training of ``idx`` + store + aggregate (masked weights)."""
@@ -330,9 +360,14 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
             w = jnp.where(mask, w, 0.0)
         new_gvec, opt_state = aggregator.aggregate_flat(
             state.params, rows, w, state.opt_state)
-        # ONE scatter into the [N, P] plane; sentinel rows are out of
-        # bounds -> dropped
-        new_client = state.client_params.at[idx].set(rows)
+        if plane == "full":
+            # ONE scatter into the [N, P] plane; sentinel rows are out of
+            # bounds -> dropped
+            new_client = state.client_params.at[idx].set(rows)
+        else:
+            # stats plane: the carry holds no [N, P] buffer — the caller
+            # persists rows through its ClientStore at the host boundary
+            new_client = state.client_params
         return state._replace(params=new_gvec, client_params=new_client,
                               opt_state=opt_state)
 
@@ -363,10 +398,14 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
         selection so channel-aware policies (icas, rra) see the round's
         actual gains; returns the faded ``arr`` for the allocation."""
         state, arr = step_channel(state, arr)
-        if selector.needs_divergence:
-            div = weight_divergence_flat(state.client_params, state.params)
-        else:
+        if not selector.needs_divergence:
             div = jnp.zeros((N,), jnp.float32)
+        elif plane == "stats":
+            # the store's refreshed per-client table rides the carry —
+            # O(N) read, no [N, P] plane to reduce
+            div = state.sched.divergence
+        else:
+            div = weight_divergence_flat(state.client_params, state.params)
         if selector.needs_rng:
             key, k_sel = jax.random.split(state.key)
             state = state._replace(key=key)
@@ -393,11 +432,11 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
             inr=None if inr_round is None else inr_round[0])
 
     return SimpleNamespace(
-        spec=spec, N=N, B=B, aggregator=aggregator,
+        spec=spec, N=N, B=B, aggregator=aggregator, plane=plane,
         init_channel=init_channel, step_channel=step_channel,
-        train_rows=train_rows, train_aggregate=train_aggregate,
-        init_round=init_round, select_phase=select_phase,
-        finish_phase=finish_phase)
+        train_gathered=train_gathered, train_rows=train_rows,
+        train_aggregate=train_aggregate, init_round=init_round,
+        select_phase=select_phase, finish_phase=finish_phase)
 
 
 @functools.lru_cache(maxsize=32)

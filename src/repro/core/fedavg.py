@@ -58,6 +58,11 @@ class FLHistory:
     E_k: List[float] = field(default_factory=list)
     selected: List[np.ndarray] = field(default_factory=list)
     rounds_to_target: Optional[int] = None
+    # buffered-asynchronous per-tick traces (empty on synchronous runs):
+    # updates folded per fire, their mean age at fold time, active fleet
+    participation: List[float] = field(default_factory=list)
+    staleness: List[float] = field(default_factory=list)
+    active: List[float] = field(default_factory=list)
 
     @property
     def total_T(self):
@@ -139,16 +144,6 @@ class FLExperiment:
                 "aggregator, e.g. aggregator='fedbuff:4') or the paged "
                 "client store (store='paged'), whose round loop flips the "
                 "stats table's availability mask")
-        if store == "paged" and getattr(self.aggregator, "async_capable",
-                                        False):
-            raise ValueError(
-                "store='paged' drives the host round loop; the buffered-"
-                "asynchronous engine exists only as a scanned program over "
-                "the dense plane — use store='dense' with fedbuff")
-        # buffered-async bookkeeping (AsyncState) carried between traced
-        # runs, so incremental run() calls continue the virtual clock
-        self.sched = None
-
         if cluster not in ("full", "minibatch"):
             raise ValueError(
                 f"cluster must be 'full' or 'minibatch'; got {cluster!r}")
@@ -171,8 +166,7 @@ class FLExperiment:
         self.k_max = int(k_max or min(fed.num_clients,
                                       max(fl.devices_per_round, 256)))
         self._store = build_store(store, gvec, fed.num_clients, self.engine,
-                                  self.chunk_size)
-        self.stats = ClientStats.create(fed.num_clients)
+                                  self.chunk_size, stage_rows=self.k_max)
         self._div_refresh_every = int(div_refresh_every)
         self._rounds_since_refresh = np.iinfo(np.int32).max  # force first
         self._gvec_host = (np.asarray(gvec) if store == "paged" else None)
@@ -224,28 +218,38 @@ class FLExperiment:
     # ------------------------------------------------------------------
     @property
     def store(self):
-        """The client parameter store (``DenseStore`` | ``PagedStore``)."""
+        """The client parameter store (``DenseStore`` | ``PagedStore``) —
+        the one ``ClientStore`` every driver consumes."""
         return self._store
+
+    @property
+    def stats(self) -> ClientStats:
+        """The O(N) per-client statistics table — owned by the store, the
+        SINGLE source of per-client truth (availability, age, in-flight
+        completion, divergence/drift, virtual clock) for the host loops
+        and the async scheduler alike."""
+        return self._store.stats
 
     @property
     def client_params(self) -> jnp.ndarray:
         """The dense [N, P] plane (donation-managed by the round loop).
 
-        A paged store keeps no materialized plane — page through
-        ``client_tree(chunk_size=...)`` / ``iter_client_trees`` instead,
-        or read the O(N) ``stats`` table."""
+        A paged store keeps no materialized plane — gather the rows you
+        need through the store contract instead."""
         if self._store.kind != "dense":
             raise AttributeError(
-                "store='paged' keeps no [N, P] client buffer; use "
-                "client_tree()/iter_client_trees()/iter_client_features() "
-                "to page through the cold store, or read exp.stats")
+                "store='paged' keeps no [N, P] client buffer; gather "
+                "active rows with exp.store.gather(idx), page the cold "
+                "store with iter_client_trees()/iter_client_features(), "
+                "or read the O(N) exp.stats table")
         return self._store.buffer
 
     @client_params.setter
     def client_params(self, value):
         if self._store.kind != "dense":
             raise AttributeError(
-                "store='paged' keeps no [N, P] client buffer to assign")
+                "store='paged' keeps no [N, P] client buffer to assign; "
+                "persist trained rows through exp.store.scatter(idx, rows)")
         self._store.buffer = value
 
     def _client_images(self, idx: np.ndarray) -> jnp.ndarray:
@@ -554,7 +558,7 @@ class FLExperiment:
             st.divergence[idx] = np.asarray(
                 self.engine.rows_divergence(rows, gvec_new))
             st.drift[idx] = 0.0
-        st.age += 1
+        st.age[:] += 1
         st.age[idx] = 0
         self._gvec_host = gvec_new_host
         if rows is None:
@@ -607,8 +611,8 @@ class FLExperiment:
         selector = (self.selector if method is None
                     else SELECTORS.resolve(method))
         if self._store.kind == "paged":
-            # population-scale path: host round loop over the paged store;
-            # the scanned program's [N, P] carry is exactly what this mode
+            # population-scale path: host loop over the paged store; the
+            # scanned program's [N, P] carry is exactly what this mode
             # exists to avoid
             if (getattr(self.channel, "needs_rng", False)
                     or getattr(self.channel, "stateful", False)):
@@ -616,6 +620,18 @@ class FLExperiment:
                     f"channel {self.channel.registry_name!r} redraws fading "
                     "inside the scanned program; store='paged' drives the "
                     "host loop — use the static channel (or store='dense')")
+            if getattr(self.aggregator, "async_capable", False):
+                # buffered-asynchronous ticks over the paged store: the
+                # jitted tick pieces carry only the [P] global + O(N)
+                # stats columns; rows move O(k_max·P) through the store's
+                # staging API between them
+                if not self.traceable(selector):
+                    raise ValueError(
+                        "the buffered-asynchronous engine needs a fully "
+                        "traceable strategy bundle (selector/allocator/"
+                        "compressor/channel)")
+                return self._run_async_paged(selector, rounds, target,
+                                             include_initial_round)
             return self._run_paged(selector, method, rounds, target,
                                    include_initial_round)
         if getattr(self.aggregator, "async_capable", False):
@@ -695,6 +711,119 @@ class FLExperiment:
                 break
         return hist
 
+    def _run_async_paged(self, selector, rounds: int, target: float,
+                         include_initial_round: bool) -> FLHistory:
+        """Buffered-asynchronous ticks over the paged store — the host
+        composition of ``async_engine._paged_async_step_program``'s jitted
+        pieces, with store paging in between.
+
+        Per tick: (host) refresh the stats table's divergence column per
+        the ``div_refresh_every`` cadence (1 = every tick = exactly the
+        dense select signal; 0 = never, staleness bounded by
+        ``stats.drift``) and push it into the carry → ``sched`` (churn →
+        select → in-flight filter) → (host) page the cohort's data in →
+        ``plan`` (allocate → completion pricing → fire plan) → ``train``
+        (O(K·P)) → (host) ``store.stage`` the trained rows and gather the
+        M candidate rows back → ``fire`` (O(M·P) fold + eval) → (host)
+        release fired staging, fold ‖g_new − g_old‖ into the drift
+        bounds. Device memory is O(k_max·P + M·P) at any N; the math, op
+        order and PRNG stream are the dense tick's, pinned bit-identical
+        in ``tests/test_async_paged.py``.
+
+        Unlike the dense scanned engine this is a host loop, so
+        ``target_accuracy`` early stopping IS supported here."""
+        from repro.core.async_engine import _paged_async_step_program
+        prog = _paged_async_step_program(
+            self.engine.cfg, selector, self.allocator,
+            self.aggregator.registry_name,
+            tuple(sorted(self.aggregator.params().items())),
+            self.compressor, self.traced_context(), self.fl.feature_layer,
+            self.channel, self.churn)
+        hist = FLHistory()
+        if include_initial_round or (self.clusters is None and
+                                     getattr(selector, "needs_clusters",
+                                             False)):
+            self.initial_round()
+            acc, _ = self.evaluate()
+            all_idx = np.arange(self.fed.num_clients)
+            T0, E0 = self.allocate(all_idx)
+            hist.accuracy.append(acc)
+            hist.T_k.append(float(T0))
+            hist.E_k.append(float(E0))
+            hist.selected.append(all_idx)
+        arr = dict(fleet_arrays(self.fleet))
+        arr.pop("xgain", None)           # single-cell: no cross gains
+        store, stats = self._store, self.stats
+        n = self.fed.num_clients
+        needs_div = getattr(selector, "needs_divergence", False)
+        state = self.traced_state()
+        state = prog.init_channel(state, arr)
+        for k in range(rounds):
+            if needs_div:
+                # serve selection from the refreshed stats table — the
+                # paged replacement for the dense full-plane reduction
+                div = self._paged_divergences()
+                state = state._replace(sched=state.sched._replace(
+                    divergence=jnp.asarray(div)))
+            state, arr_f, idx, mask = prog.sched(state, arr)
+            idx_h = np.asarray(idx)
+            mask_h = np.asarray(mask)
+            # the host-side mirror of the device gather's clamped OOB
+            # sentinel: padding lanes read client N-1's data, train, and
+            # are dropped by the mask — identical PRNG consumption
+            idx_c = np.minimum(idx_h, n - 1)
+            images_sel = self._client_images(idx_c)
+            labels_sel = self._labels[jnp.asarray(idx_c)]
+            state, T, E, cand, fired_cand, w_cand, traces = prog.plan(
+                state, arr_f, idx, mask, self._sizes)
+            state, rows = prog.train(state, images_sel, labels_sel)
+            live = idx_h[mask_h]
+            if live.size:
+                store.stage(live, rows[jnp.asarray(np.flatnonzero(mask_h))])
+            cand_h = np.asarray(cand)
+            cand_rows = store.gather_staged(cand_h)
+            state, acc, div_cand, g_delta = prog.fire(
+                state, cand_rows, w_cand, fired_cand,
+                self.test_images, self.test_labels)
+            fired_h = np.asarray(fired_cand)
+            fired_ids = cand_h[fired_h]
+            store.release_staged(fired_ids)
+            # stats-table upkeep, the per-tick version of the sync loop's
+            # _finish_paged_round: every stale bound grows by this fold's
+            # global step (exactly 0 on an empty fire); fired clients get
+            # their exact refreshed divergence back from the fold
+            stats.drift[store.touched] += float(g_delta)
+            if fired_ids.size:
+                stats.divergence[fired_ids] = np.asarray(div_cand)[fired_h]
+                stats.drift[fired_ids] = 0.0
+            self._gvec_host = np.asarray(state.params)
+            self._rounds_since_refresh = min(
+                self._rounds_since_refresh + 1, np.iinfo(np.int32).max - 1)
+            part, stale, active = traces
+            acc = float(acc)
+            hist.accuracy.append(acc)
+            hist.T_k.append(float(T))
+            hist.E_k.append(float(E))
+            hist.selected.append(live)
+            hist.participation.append(float(part))
+            hist.staleness.append(float(stale))
+            hist.active.append(float(active))
+            if (target and acc >= target
+                    and hist.rounds_to_target is None):
+                hist.rounds_to_target = k + 1
+                break
+        # fold the carry back into the host source of truth: params/key/
+        # opt state, plus the scheduler columns. divergence/drift stay
+        # host-maintained (the table already holds the refreshed values).
+        spec = self.engine.flat_spec
+        self.global_params = unflatten_vector(spec, state.params)
+        self.key = state.key
+        self.aggregator.load_flat_state(state.opt_state, spec)
+        sched = state.sched
+        for col in ("age", "t_done", "avail", "t_now"):
+            np.copyto(getattr(stats, col), np.asarray(getattr(sched, col)))
+        return hist
+
     # ------------------------------------------------------------------
     # device-resident path: the whole experiment as one lax.scan program
     # ------------------------------------------------------------------
@@ -731,10 +860,22 @@ class FLExperiment:
                   if self.cluster_labels is None
                   else jnp.asarray(self.cluster_labels, jnp.int32))
         gvec = tree_flatten_vector(self.global_params)
+        # the stats plane: async-capable programs carry the store's stats
+        # table (device copy) in the sched slot — incremental run() calls
+        # continue the virtual clock because load_traced_state folds it
+        # back. Synchronous programs carry None. A paged store has no
+        # [N, P] buffer; its programs run plane="stats" and never read
+        # client_params, so a zero-row placeholder rides the slot.
+        sched = (self.stats.device()
+                 if getattr(self.aggregator, "async_capable", False)
+                 else None)
+        client_plane = (self._store.buffer
+                        if self._store.kind == "dense"
+                        else jnp.zeros((0,), jnp.float32))
         return RoundState(
-            params=gvec, client_params=self.client_params,
+            params=gvec, client_params=client_plane,
             opt_state=self.aggregator.init_flat_state(gvec),
-            key=self.key, labels=labels, sched=self.sched)
+            key=self.key, labels=labels, sched=sched)
 
     def load_traced_state(self, state: RoundState, *,
                           clusters_valid: bool = True):
@@ -742,9 +883,14 @@ class FLExperiment:
         run can be inspected or continued by the Python loop."""
         spec = self.engine.flat_spec
         self.global_params = unflatten_vector(spec, state.params)
-        self.client_params = state.client_params
+        if self._store.kind == "dense":
+            self.client_params = state.client_params
         self.key = state.key
-        self.sched = getattr(state, "sched", None)
+        sched = getattr(state, "sched", None)
+        if sched is not None:
+            # fold the scheduler carry back into the store's stats table
+            # (the single source of per-client truth)
+            self.stats.load(sched)
         self.aggregator.load_flat_state(state.opt_state, spec)
         if clusters_valid:
             self.cluster_labels = np.asarray(state.labels)
@@ -799,4 +945,11 @@ class FLExperiment:
         hist.T_k.extend(float(t) for t in Ts)
         hist.E_k.extend(float(e) for e in Es)
         hist.selected.extend(sel[k][msk[k]] for k in range(sel.shape[0]))
+        if res.rounds.participation is not None:
+            hist.participation.extend(
+                float(x) for x in np.asarray(res.rounds.participation))
+            hist.staleness.extend(
+                float(x) for x in np.asarray(res.rounds.staleness))
+            hist.active.extend(
+                float(x) for x in np.asarray(res.rounds.active))
         return hist

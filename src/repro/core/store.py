@@ -1,5 +1,6 @@
 """The client parameter store — dense device plane or paged active/cold
-split — plus the per-client statistics table.
+split — behind one ``ClientStore`` contract, plus the per-client
+statistics table.
 
 The paper's regime is N ≫ K: "a large number of wireless mobile devices"
 of which only K≪N train per round. The PR-5 flat ``[N, P]`` plane makes
@@ -25,51 +26,133 @@ P≈1e5 that is a 400 GB buffer. This module splits the store:
 
 ``ClientStats``
     The compact ``[N]`` table (divergence, divergence-staleness drift
-    bound, age, availability, cell id) that is the ONLY O(N) state the
-    paged round loop keeps hot: selectors read it instead of reducing the
-    ``[N, P]`` plane (cf. Perazzone et al., arXiv 2201.07912, which
-    schedules million-device fleets from per-client scalars).
+    bound, age, in-flight completion time, availability, cell id, and the
+    scheduler's virtual clock) that is the ONLY O(N) state any driver
+    keeps hot: selectors read it instead of reducing the ``[N, P]`` plane
+    (cf. Perazzone et al., arXiv 2201.07912, which schedules
+    million-device fleets from per-client scalars). It is a NamedTuple —
+    hence a JAX pytree — so the same table serves as the host-side truth
+    (numpy leaves, mutated in place) and as the async engine's traced
+    scheduler carry (``RoundState.sched``, device leaves). There is no
+    second bookkeeping structure: the async tick loop and the paged host
+    loop read and write the same columns.
+
+Both stores expose the same contract (``ClientStore``): ``gather(idx)``
+returns the ``[K, P]`` active rows, ``scatter(idx, rows)`` persists
+trained rows (donated in-place on dense, host write-back on paged),
+``stats`` is the single source of per-client truth, and the staging API
+(``stage`` / ``gather_staged`` / ``release_staged``) keeps in-flight rows
+warm on device between an async dispatch and the buffered fire that
+consumes them.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from collections import OrderedDict
+from typing import Dict, Iterator, NamedTuple, Optional, Protocol
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["ClientStats", "DenseStore", "PagedStore", "build_store"]
+__all__ = ["ClientStats", "ClientStore", "DenseStore", "PagedStore",
+           "build_store"]
 
 
-@dataclass
-class ClientStats:
-    """Per-client scalar statistics — O(N) total, all host numpy.
+class ClientStats(NamedTuple):
+    """Per-client scalar statistics — O(N) total, one table for every
+    driver.
 
     ``divergence`` is ‖w_n − w_g‖ as of each client's last refresh;
     ``drift`` bounds its staleness: the accumulated ‖g_now − g_ref‖ since
     that refresh, so the true divergence lies within ``divergence ±
-    drift`` (triangle inequality). ``age`` counts rounds since the client
-    last trained; ``avail`` is the churn mask the paged loop flips and
-    selection filters on; ``cell`` records the serving cell.
+    drift`` (triangle inequality). ``age`` counts rounds (sync) or fire
+    events (async) since the client last contributed; ``t_done`` is the
+    virtual completion time of the client's in-flight update (+inf when
+    idle — finiteness IS the in-flight flag); ``avail`` is the churn mask
+    selection filters on; ``cell`` records the serving cell; ``t_now`` is
+    the scheduler's virtual clock (0-d scalar).
+
+    As a NamedTuple this is a JAX pytree: the async engine carries it
+    through ``lax.scan`` with device leaves, while the host drivers keep
+    a numpy-leaved instance and mutate columns in place
+    (``stats.avail[gone] = False``). ``device()`` / ``load()`` convert
+    between the two without ever rebinding fields.
     """
-    divergence: np.ndarray            # [N] f32
-    drift: np.ndarray                 # [N] f32 staleness bound on divergence
-    age: np.ndarray                   # [N] i32 rounds since participation
+    divergence: np.ndarray            # [N] f32  ‖w_n − w_g‖ at last refresh
+    drift: np.ndarray                 # [N] f32  staleness bound on divergence
+    age: np.ndarray                   # [N] f32  rounds/fires since contribution
+    t_done: np.ndarray                # [N] f32  in-flight completion (+inf idle)
     avail: np.ndarray                 # [N] bool churn/availability mask
-    cell: np.ndarray                  # [N] i32 serving cell id
+    cell: np.ndarray                  # [N] i32  serving cell id
+    t_now: np.ndarray                 # []  f32  scheduler virtual clock
 
     @classmethod
     def create(cls, num_clients: int, cell: int = 0) -> "ClientStats":
         return cls(divergence=np.zeros(num_clients, np.float32),
                    drift=np.zeros(num_clients, np.float32),
-                   age=np.zeros(num_clients, np.int32),
+                   age=np.zeros(num_clients, np.float32),
+                   t_done=np.full(num_clients, np.inf, np.float32),
                    avail=np.ones(num_clients, bool),
-                   cell=np.full(num_clients, cell, np.int32))
+                   cell=np.full(num_clients, cell, np.int32),
+                   t_now=np.zeros((), np.float32))
+
+    def device(self) -> "ClientStats":
+        """A device-leaved copy — the traced scheduler carry."""
+        return jax.tree_util.tree_map(jnp.asarray, self)
+
+    def load(self, other: "ClientStats") -> None:
+        """Copy ``other``'s columns into this table IN PLACE (no field
+        rebinding) — the end-of-scan carry folding back into the host
+        source of truth."""
+        for dst, src in zip(self, other):
+            np.copyto(dst, np.asarray(src))
 
     @property
     def nbytes(self) -> int:
-        return (self.divergence.nbytes + self.drift.nbytes + self.age.nbytes
-                + self.avail.nbytes + self.cell.nbytes)
+        return int(sum(np.asarray(leaf).nbytes for leaf in self))
+
+
+class ClientStore(Protocol):
+    """What every driver — host round loop, scanned cohort, async tick
+    engine — consumes. ``stats`` is the single source of per-client
+    truth; there is no driver-private copy of age/availability."""
+
+    kind: str
+    stats: ClientStats
+
+    @property
+    def num_clients(self) -> int: ...
+
+    @property
+    def row_size(self) -> int: ...
+
+    def gather(self, idx) -> jnp.ndarray:
+        """``[K, P]`` device rows for ``idx`` — the active plane."""
+        ...
+
+    def scatter(self, idx, rows) -> None:
+        """Persist trained rows (rows may be donated on dense)."""
+        ...
+
+    def iter_chunks(self, chunk_size: int) -> Iterator[np.ndarray]:
+        """Stream the (virtual) plane as host blocks."""
+        ...
+
+    # -- device staging for in-flight rows (async dispatch → fire) -----
+    def stage(self, idx, rows) -> None:
+        """Persist ``rows`` AND keep them warm on device until released."""
+        ...
+
+    def gather_staged(self, idx) -> jnp.ndarray:
+        """Like ``gather`` but serves staged rows from device."""
+        ...
+
+    def release_staged(self, idx) -> None:
+        """Drop the device copies of ``idx`` (their update fired)."""
+        ...
+
+    @property
+    def nbytes(self) -> int: ...
 
 
 class DenseStore:
@@ -77,12 +160,14 @@ class DenseStore:
 
     kind = "dense"
 
-    def __init__(self, base_row: jnp.ndarray, num_clients: int, engine):
+    def __init__(self, base_row: jnp.ndarray, num_clients: int, engine,
+                 cell: int = 0):
         self._engine = engine
         # identical construction to the pre-split driver: broadcast the
         # global row, one copy (bit-parity anchor for the tier-1 pins)
         self.buffer = jnp.broadcast_to(
             base_row, (num_clients, base_row.shape[0])).copy()
+        self.stats = ClientStats.create(num_clients, cell)
 
     @property
     def num_clients(self) -> int:
@@ -104,6 +189,17 @@ class DenseStore:
         for start in range(0, self.num_clients, chunk_size):
             yield np.asarray(self.buffer[start:start + chunk_size])
 
+    # the whole plane lives on device, so staging degenerates: every row
+    # is already "warm" and release is a no-op
+    def stage(self, idx, rows) -> None:
+        self.scatter(idx, rows)
+
+    def gather_staged(self, idx) -> jnp.ndarray:
+        return self.gather(idx)
+
+    def release_staged(self, idx) -> None:
+        pass
+
     @property
     def nbytes(self) -> int:
         return int(self.buffer.size) * 4
@@ -120,7 +216,8 @@ class PagedStore:
     PROMOTE_FRAC = 0.5
 
     def __init__(self, base_row: np.ndarray, num_clients: int,
-                 chunk_size: int):
+                 chunk_size: int, cell: int = 0,
+                 stage_rows: Optional[int] = None):
         self.base = np.ascontiguousarray(base_row, dtype=np.float32)
         self.n = int(num_clients)
         self.chunk = int(chunk_size)
@@ -129,6 +226,14 @@ class PagedStore:
         self._rows: Dict[int, np.ndarray] = {}        # sparse overlay
         self._blocks: Dict[int, np.ndarray] = {}      # chunk id -> [c, P]
         self.touched = np.zeros(self.n, bool)
+        self.stats = ClientStats.create(self.n, cell)
+        # device LRU of in-flight rows: async dispatch stages here so the
+        # buffered fire reads the EXACT device values back without a host
+        # round-trip (f32 round-trips are value-preserving, so a cache
+        # miss is a perf fallback, never a correctness change). Bounded at
+        # ``stage_rows`` rows — O(k_max·P) device memory.
+        self.stage_rows = int(stage_rows) if stage_rows else 0
+        self._staged: "OrderedDict[int, jnp.ndarray]" = OrderedDict()
 
     # -- geometry ------------------------------------------------------
     @property
@@ -229,6 +334,37 @@ class PagedStore:
                 block[i - b0] = r
         self._blocks[cid] = block
 
+    # -- device staging ------------------------------------------------
+    def stage(self, idx, rows) -> None:
+        """Write-through: persist to the cold store AND keep the device
+        rows warm (LRU, ≤ ``stage_rows``) so the fire that consumes them
+        skips the host round-trip."""
+        idx_h = np.asarray(idx, np.int64).ravel()
+        self.scatter(idx_h, rows)
+        if not self.stage_rows:
+            return
+        for j, i in enumerate(idx_h):
+            i = int(i)
+            self._staged.pop(i, None)
+            self._staged[i] = rows[j]
+        while len(self._staged) > self.stage_rows:
+            self._staged.popitem(last=False)
+
+    def gather_staged(self, idx) -> jnp.ndarray:
+        idx_h = np.asarray(idx, np.int64).ravel()
+        if not self._staged:
+            return self.gather(idx_h)
+        parts = [self._staged.get(int(i)) for i in idx_h]
+        if all(p is not None for p in parts):
+            return jnp.stack(parts)
+        cold = self.gather(idx_h)
+        return jnp.stack([cold[j] if p is None else p
+                          for j, p in enumerate(parts)])
+
+    def release_staged(self, idx) -> None:
+        for i in np.asarray(idx, np.int64).ravel():
+            self._staged.pop(int(i), None)
+
     # -- accounting ----------------------------------------------------
     @property
     def num_touched(self) -> int:
@@ -243,10 +379,12 @@ class PagedStore:
 
 
 def build_store(kind: str, base_row, num_clients: int, engine,
-                chunk_size: int):
+                chunk_size: int, cell: int = 0,
+                stage_rows: Optional[int] = None):
     if kind == "dense":
-        return DenseStore(base_row, num_clients, engine)
+        return DenseStore(base_row, num_clients, engine, cell)
     if kind == "paged":
-        return PagedStore(np.asarray(base_row), num_clients, chunk_size)
+        return PagedStore(np.asarray(base_row), num_clients, chunk_size,
+                          cell, stage_rows)
     raise ValueError(f"unknown client store {kind!r}; "
                      "expected 'dense' or 'paged'")

@@ -27,7 +27,10 @@ def run_spec(spec: ExperimentSpec):
     exp = build_experiment(spec)
     hist = exp.run(rounds=spec.rounds,
                    target_accuracy=spec.target_accuracy or None)
-    ari = adjusted_rand_index(exp.cluster_labels, exp.fed.majority)
+    # Cluster-free drivers (e.g. paged async with a divergence-ranked
+    # selector) never fit Alg. 2's K-means; there is no partition to score.
+    ari = (adjusted_rand_index(exp.cluster_labels, exp.fed.majority)
+           if exp.cluster_labels is not None else None)
     return exp, hist, ari
 
 
@@ -103,6 +106,12 @@ def spec_from_args(args) -> ExperimentSpec:
         from repro.core.async_engine import parse_churn
         leave, join = parse_churn(args.churn)
         extra["churn_leave"], extra["churn_join"] = leave, join
+    if getattr(args, "store", "dense") != "dense":
+        extra["store"] = args.store
+    if getattr(args, "k_max", 0):
+        extra["k_max"] = args.k_max
+    if getattr(args, "div_refresh_every", 0):
+        extra["div_refresh_every"] = args.div_refresh_every
     return ExperimentSpec(dataset=args.dataset, selection=args.selection,
                           allocator=_allocator_ref(args.allocator,
                                                    args.box_correct),
@@ -160,6 +169,18 @@ def main(argv=None):
     ap.add_argument("--churn", default=None, metavar="P_LEAVE[:P_JOIN]",
                     help="per-tick Bernoulli client churn probabilities "
                          "(needs --async-buffer), e.g. '0.05:0.1'")
+    ap.add_argument("--store", choices=["dense", "paged"], default="dense",
+                    help="client-state backend: 'dense' keeps the [N, P] "
+                         "plane on device; 'paged' pages cold rows to host "
+                         "(O(k_max*P) device memory; composes with "
+                         "--async-buffer and --churn)")
+    ap.add_argument("--k-max", type=int, default=0,
+                    help="paged store: active-plane rows kept on device "
+                         "(0 = auto: max(per-round, 256) capped at N)")
+    ap.add_argument("--div-refresh-every", type=int, default=0,
+                    help="paged store: refresh exact divergences every R "
+                         "selections/ticks (1 = exact dense signal every "
+                         "time; 0 = lazy drift-bounded staleness)")
     ap.add_argument("--dump-spec", action="store_true",
                     help="print the resolved ExperimentSpec JSON and exit")
     ap.add_argument("--out", default=None)

@@ -7,9 +7,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.api import (AGGREGATORS, SELECTORS, AsyncState, ExperimentSpec,
+from repro.api import (AGGREGATORS, SELECTORS, ExperimentSpec,
                        StrategyError, build_cohort, build_experiment)
 from repro.core.async_engine import parse_churn
+from repro.core.store import ClientStats
 from repro.core.wireless import completion_times, sample_fleet, fleet_arrays
 from repro.strategies.traced import select_stochastic_sched_traced
 from tests.hypothesis_compat import given, settings, st
@@ -130,15 +131,18 @@ def test_small_buffer_builds_staleness():
 
 @pytest.mark.slow
 def test_async_state_persists_across_runs():
-    """Incremental run() calls continue the virtual clock: the AsyncState
-    carry survives the host boundary via FLExperiment.sched."""
+    """Incremental run() calls continue the virtual clock: the scheduler
+    columns ride the store's ClientStats table (the single source of
+    per-client truth) across the host boundary."""
     exp = build_experiment(ExperimentSpec(**TINY, aggregator="fedbuff:2"))
-    assert exp.sched is None
+    assert isinstance(exp.stats, ClientStats)
+    assert exp.stats is exp.store.stats
+    assert float(exp.stats.t_now) == 0.0
     exp.run(rounds=1)
-    assert isinstance(exp.sched, AsyncState)
-    t1 = float(exp.sched.t_now)
+    t1 = float(exp.stats.t_now)
+    assert t1 > 0.0
     exp.run(rounds=1, include_initial_round=False)
-    assert float(exp.sched.t_now) >= t1
+    assert float(exp.stats.t_now) >= t1
 
 
 # ---------------------------------------------------------------------------
@@ -152,19 +156,17 @@ def test_churn_never_selects_unavailable_clients():
     unavailable (and in-flight) clients from the dispatched set. The churn
     step precedes selection inside the tick and availability does not
     change afterwards, so after each single-tick run the final
-    ``sched.avail`` IS the mask the selector saw."""
+    ``stats.avail`` IS the mask the selector saw."""
     exp = build_experiment(ExperimentSpec(
         **TINY, aggregator="fedbuff:2", selection="stochastic-sched",
         churn_leave=0.4, churn_join=0.4))
     hist = exp.run(rounds=1)
     for _ in range(4):
         h = exp.run(rounds=1, include_initial_round=False)
-        avail_idx = set(np.flatnonzero(np.asarray(exp.sched.avail)).tolist())
+        avail_idx = set(np.flatnonzero(exp.stats.avail).tolist())
         assert {int(i) for i in h.selected[-1]} <= avail_idx
         # in-flight bookkeeping never touches unavailable clients
-        t_done = np.asarray(exp.sched.t_done)
-        avail = np.asarray(exp.sched.avail)
-        assert np.isinf(t_done[~avail]).all()
+        assert np.isinf(exp.stats.t_done[~exp.stats.avail]).all()
     assert hist is not None
 
 

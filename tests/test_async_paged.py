@@ -1,0 +1,148 @@
+"""Backend parity for the buffered-asynchronous engine: the paged-store
+host composition (``FLExperiment._run_async_paged``) must be bit-identical
+to the dense scanned tick — same PRNG stream (churn → select → train),
+same dispatched sets, same fp32 summation order in the fire fold — plus
+paged-only churn regressions (in-flight cancellation, the stats table as
+the single source of availability truth).
+
+The parity pins use a NON-degenerate config (M=2 < pad=4): a full buffer
+with no churn would route the dense engine onto its sync-degeneracy
+static branch, which the paged composition deliberately does not mirror.
+The icas selector ranks on divergence, so the pins also verify that the
+paged per-tick divergence refresh (``div_refresh_every=1``) reproduces the
+dense full-plane reduction exactly — a single differing selection would
+cascade into every downstream trace.
+"""
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, build_experiment
+from repro.core.clustering import clusters_from_labels
+from repro.utils.trees import tree_flatten_vector
+
+TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
+            train_samples=160, test_samples=80, local_iters=2, batch_size=8,
+            rounds=3, devices_per_round=4, num_clusters=4,
+            learning_rate=0.05, selection="icas",
+            aggregator="fedbuff:2:0.5")
+
+PAGED = dict(store="paged", k_max=8, div_refresh_every=1)
+
+
+def _preset_clusters(exp):
+    """Pin the no-init entry point: the dense traced runner forces the
+    Alg.-2 initial round whenever clusters are unset, while the paged
+    async loop (cluster-free selectors) skips it — give both drivers the
+    same trivial partition so neither consumes the init round's keys."""
+    labels = np.zeros(exp.fed.num_clients, np.int32)
+    exp.cluster_labels = labels
+    exp.clusters = clusters_from_labels(labels, exp.fl.num_clusters)
+    return exp
+
+
+def _run_pair(**extra):
+    e_d = _preset_clusters(build_experiment(ExperimentSpec(**TINY, **extra)))
+    e_p = _preset_clusters(build_experiment(
+        ExperimentSpec(**TINY, **PAGED, **extra)))
+    h_d = e_d.run(rounds=TINY["rounds"], include_initial_round=False)
+    h_p = e_p.run(rounds=TINY["rounds"], include_initial_round=False)
+    return e_d, e_p, h_d, h_p
+
+
+def _assert_bit_identical(e_d, e_p, h_d, h_p):
+    assert h_d.accuracy == h_p.accuracy
+    assert h_d.T_k == h_p.T_k
+    assert h_d.E_k == h_p.E_k
+    assert h_d.participation == h_p.participation
+    assert h_d.staleness == h_p.staleness
+    assert h_d.active == h_p.active
+    assert len(h_d.selected) == len(h_p.selected)
+    for a, b in zip(h_d.selected, h_p.selected):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    # the global row itself, not just its eval summary
+    g_d = np.asarray(tree_flatten_vector(e_d.global_params))
+    g_p = np.asarray(tree_flatten_vector(e_p.global_params))
+    assert np.array_equal(g_d, g_p)
+    # scheduler columns fold back into both stats tables identically
+    for col in ("age", "t_done", "avail", "t_now"):
+        assert np.array_equal(getattr(e_d.stats, col),
+                              getattr(e_p.stats, col)), col
+
+
+# ---------------------------------------------------------------------------
+# dense ≡ paged bitwise parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_async_dense_paged_bit_identical():
+    """The tentpole pin: fedbuff:2 (in-flight stragglers every tick) over
+    dense vs paged stores — accuracy, T_k/E_k, dispatched sets, async
+    traces and the final global row all match bit for bit."""
+    _assert_bit_identical(*_run_pair())
+
+
+@pytest.mark.slow
+def test_async_dense_paged_bit_identical_with_churn():
+    """Churn composes: the Bernoulli availability flips consume the same
+    key split on both backends, departures cancel the same in-flight
+    dispatches, and the whole history stays bit-identical."""
+    e_d, e_p, h_d, h_p = _run_pair(churn_leave=0.3, churn_join=0.3)
+    _assert_bit_identical(e_d, e_p, h_d, h_p)
+    # churn actually did something in this config
+    assert min(h_p.active) < TINY["clients"]
+
+
+@pytest.mark.slow
+def test_async_paged_target_accuracy_early_stop():
+    """Host-loop dividend: unlike the dense scanned engine, the paged
+    composition supports target_accuracy early stopping."""
+    exp = _preset_clusters(build_experiment(
+        ExperimentSpec(**TINY, **PAGED)))
+    h = exp.run(rounds=TINY["rounds"], target_accuracy=0.01,
+                include_initial_round=False)
+    assert h.rounds_to_target is not None
+    assert len(h.accuracy) == h.rounds_to_target
+
+
+# ---------------------------------------------------------------------------
+# paged churn regressions: one availability truth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_paged_churn_cancels_in_flight():
+    """A departure cancels the client's in-flight dispatch on the spot:
+    after every tick, no unavailable client may hold a finite completion
+    time — the scheduler and ``ClientStats.avail`` can never disagree,
+    because both ARE the same table."""
+    exp = build_experiment(ExperimentSpec(
+        **{**TINY, "selection": "stochastic-sched"}, **PAGED,
+        churn_leave=0.4, churn_join=0.4))
+    assert exp.stats is exp.store.stats
+    exp.run(rounds=1)
+    for _ in range(4):
+        h = exp.run(rounds=1, include_initial_round=False)
+        avail_idx = set(np.flatnonzero(exp.stats.avail).tolist())
+        assert {int(i) for i in h.selected[-1]} <= avail_idx
+        assert np.isinf(exp.stats.t_done[~exp.stats.avail]).all()
+
+
+@pytest.mark.slow
+def test_paged_async_state_persists_across_runs():
+    """Incremental run() calls continue the virtual clock through the
+    store's stats table, and fired folds maintain the divergence/drift
+    columns (drift resets on fire, grows with the global step for
+    stragglers)."""
+    exp = build_experiment(ExperimentSpec(**TINY, **PAGED))
+    _preset_clusters(exp)
+    assert float(exp.stats.t_now) == 0.0
+    h1 = exp.run(rounds=2, include_initial_round=False)
+    t1 = float(exp.stats.t_now)
+    assert t1 > 0.0
+    assert sum(h1.participation) > 0          # something actually fired
+    assert exp.stats.divergence.max() > 0.0   # fired rows got refreshed
+    assert (exp.stats.drift >= 0.0).all()
+    assert (exp.stats.drift[~exp.store.touched] == 0.0).all()
+    exp.run(rounds=1, include_initial_round=False)
+    assert float(exp.stats.t_now) > t1

@@ -283,10 +283,13 @@ def test_paged_has_no_client_params(setup):
     assert isinstance(ClientStats.create(5).nbytes, int)
 
 
-def test_paged_rejects_async_aggregator(setup):
-    with pytest.raises(ValueError, match="fedbuff"):
-        FLExperiment(*_args(setup), seed=0, store="paged",
-                     aggregator="fedbuff:4")
+def test_paged_accepts_async_aggregator(setup):
+    # the once-rejected combination is now a first-class route: paged
+    # store + buffered-async ticks (parity pins in test_async_paged.py)
+    exp = FLExperiment(*_args(setup), seed=0, store="paged",
+                       aggregator="fedbuff:4")
+    assert exp.store.kind == "paged"
+    assert exp.stats is exp.store.stats
 
 
 def test_cohort_rejects_paged():
