@@ -159,7 +159,9 @@ def build_experiment(spec: ExperimentSpec, *, cell: int = 0,
         chunk_size=spec.chunk_size,
         div_refresh_every=spec.div_refresh_every,
         cluster=spec.cluster,
-        p_shards=spec.p_shards)
+        p_shards=spec.p_shards,
+        faults=spec.faults,
+        quarantine_after=spec.quarantine_after)
     exp.spec = spec
     exp.cell = cell
     return exp
@@ -169,5 +171,12 @@ def build_cohort(spec: ExperimentSpec):
     """A ``CohortRunner`` for ``spec`` — seeds ``seed..seed+cohort-1``
     (× the FleetSpec's cells) run as one vmapped, device-sharded program
     (``repro.core.cohort``)."""
+    if (spec.faults is not None and spec.faults.active) \
+            or spec.quarantine_after > 0:
+        raise ValueError(
+            "fault injection / quarantine is not wired into the vmapped "
+            "cohort program yet — run the spec through build_experiment "
+            "(single-lane) instead, or drop the faults/quarantine_after "
+            "fields")
     from repro.core.cohort import CohortRunner       # late: cycle
     return CohortRunner(spec)

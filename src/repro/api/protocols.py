@@ -253,7 +253,19 @@ class Aggregator(Protocol):
     configured aggregator is async-capable; ``aggregate_flat`` itself is
     unchanged — the engine hands it the fired buffer's rows and the
     discounted weights, so ``fedbuff:M:0`` with a full buffer degenerates
-    bit-identically to the synchronous ``fedavg`` round."""
+    bit-identically to the synchronous ``fedavg`` round.
+
+    FAULT contract: under fault injection (``ExperimentSpec.faults``) the
+    engine zeroes the weight of every failed lane but still hands the
+    full ``[S, P]`` slab to ``aggregate_flat`` — a zero-weight row may
+    carry ANY payload, including NaN (a corrupted upload), so an
+    aggregator must never let a zero-weight lane touch the fold
+    (``ops.flat_aggregate`` masks payloads, the trimmed mean sorts them
+    to +inf). An all-zero weight vector is handled by the DRIVER (the
+    round is an explicit no-op); ``aggregate_flat`` is never asked to
+    invent a fallback. Robust registry aggregators: ``trimmed:f``
+    (coordinate-wise trimmed mean, unweighted), ``clipnorm:c``
+    (delta-norm clipping, D_n weighting preserved)."""
 
     def aggregate(self, global_params: Any, stacked_params: Any,
                   weights: np.ndarray) -> Any: ...

@@ -94,6 +94,14 @@ class ExperimentSpec:
     churn_leave: float = 0.0               # per-tick P(available → gone)
     churn_join: float = 0.0                # per-tick P(gone → available)
 
+    # ---- fault injection / robustness (repro.core.faults) ------------
+    faults: Optional[Any] = None           # FaultSpec, its dict form, or the
+                                           # compact "outage:0.1,corrupt:0.01"
+                                           # string; None → fault-free
+    quarantine_after: int = 0              # strikes (non-finite uploads)
+                                           # before a client is excluded from
+                                           # selection like avail=False; 0=off
+
     # ---- cohort (vmapped multi-seed execution) -----------------------
     cohort: int = 1                        # seeds seed..seed+cohort-1 run as
                                            # ONE compiled program (CohortRunner)
@@ -144,6 +152,11 @@ class ExperimentSpec:
                     f"{('auto', 'cnn') + workload_names()}")
         if self.fleet is not None and not isinstance(self.fleet, FleetSpec):
             object.__setattr__(self, "fleet", FleetSpec.from_dict(self.fleet))
+        if self.quarantine_after < 0:
+            raise ValueError("quarantine_after must be >= 0; got "
+                             f"{self.quarantine_after}")
+        from repro.core.faults import FaultSpec
+        object.__setattr__(self, "faults", FaultSpec.normalize(self.faults))
         object.__setattr__(self, "selection",
                            _canonical("selector", self.selection))
         object.__setattr__(self, "allocator",

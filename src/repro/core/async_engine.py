@@ -38,6 +38,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.api.protocols import TracedContext
@@ -80,11 +81,54 @@ def parse_churn(churn):
     return p
 
 
+def _async_fault_plan(faults, state, sched, idx, mask, d):
+    """Dispatch-side fault plan, shared VERBATIM by the dense tick and the
+    paged ``plan_fn`` (same key split position, same draws — the
+    dense ≡ paged parity holds under faults by construction): one split
+    off the carry, the per-dispatch drop/corrupt Bernoullis, then the
+    deterministic channel-coupled and straggler-deadline drops. A failed
+    upload is priced ``+inf`` — it never completes, so it can never fire
+    and its row is never persisted; the event lands in the stats table's
+    ``faults`` column (and ``strikes`` for corrupt payloads, detected at
+    receipt). Returns ``(state, sched, d, good)`` with ``good`` the lanes
+    whose trained rows may be staged/persisted."""
+    from repro.core.faults import chan_outage_threshold, draw_fault_masks
+
+    key, kf = jax.random.split(state.key)
+    state = state._replace(key=key)
+    drop, corrupt = draw_fault_masks(kf, faults, idx.shape)
+    if faults.chan_outage > 0.0:
+        # unit-mean exponential fade power from the Gauss-Markov carry
+        gain = jnp.sum(jnp.square(state.channel), axis=-1)
+        drop = drop | (gain[idx] < chan_outage_threshold(faults.chan_outage))
+    if faults.deadline > 0.0:
+        drop = drop | (d > faults.deadline)
+    bad = (drop | corrupt) & mask
+    d = jnp.where(bad, jnp.inf, d)
+    sched = sched._replace(
+        faults=sched.faults.at[idx].add(bad.astype(jnp.float32),
+                                        mode="drop"),
+        strikes=sched.strikes.at[idx].add(
+            (corrupt & mask).astype(jnp.float32), mode="drop"))
+    return state, sched, d, mask & ~bad
+
+
+def _byz_transform(faults, byz_pad, idx, gvec, rows):
+    """The byzantine row transform ``g − byz_scale·(w − g)`` on the fixed
+    adversarial lanes — finite but extreme, so only robust aggregation
+    (not the non-finite guard) defends against it."""
+    return jnp.where(byz_pad[idx][:, None],
+                     gvec[None, :] - faults.byz_scale
+                     * (rows - gvec[None, :]),
+                     rows)
+
+
 @functools.lru_cache(maxsize=32)
 def _traced_async_program(cfg: EngineConfig, selector, allocator,
                           agg_name: str, agg_params: tuple, compressor,
                           tctx: TracedContext, feature_layer: str,
-                          channel=None, churn=(0.0, 0.0)):
+                          channel=None, churn=(0.0, 0.0), faults=None,
+                          quarantine_after: int = 0):
     """The pure (unjitted) buffered-asynchronous experiment fn.
 
     Same signature contract as ``engine._traced_round_program`` (all
@@ -124,10 +168,18 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
     alpha = float(aggregator.staleness_alpha)
     p_leave, p_join = float(churn[0]), float(churn[1])
     churn_on = p_leave > 0.0 or p_join > 0.0
+    faults_on = faults is not None and faults.active
+    track_faults = faults_on or quarantine_after > 0
 
     ph = build_round_phases(cfg, aggregator, selector, allocator, compressor,
-                            tctx, feature_layer, channel)
+                            tctx, feature_layer, channel, faults=faults,
+                            quarantine_after=quarantine_after)
     N, spec = ph.N, ph.spec
+    byz_pad = None
+    if faults_on and faults.byzantine > 0.0:
+        from repro.core.faults import byzantine_clients
+        byz_pad = jnp.asarray(np.concatenate(
+            [byzantine_clients(faults, N), np.zeros(1, bool)]))
     S_pad = selector.pad_size(tctx)
     # With the buffer at least the padded selection size and no churn, the
     # backlog is provably empty by induction (every dispatch fires whole),
@@ -141,14 +193,7 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
         # same values as ClientStats.create(N).device() — the cohort path
         # builds the table inside the program, the host driver ships its
         # store's table in through RoundState.sched instead
-        return state._replace(sched=ClientStats(
-            divergence=jnp.zeros((N,), jnp.float32),
-            drift=jnp.zeros((N,), jnp.float32),
-            age=jnp.zeros((N,), jnp.float32),
-            t_done=jnp.full((N,), jnp.inf, jnp.float32),
-            avail=jnp.ones((N,), bool),
-            cell=jnp.zeros((N,), jnp.int32),
-            t_now=jnp.zeros((), jnp.float32)))
+        return state._replace(sched=ClientStats.create_traced(N))
 
     def churn_step(state):
         """Flip the availability mask; departures cancel in-flight work."""
@@ -190,11 +235,19 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
         arr_sel = {k: v[idx] for k, v in arr_f.items()}
         T, E, b, f = allocator.allocate_traced(arr_sel, ph.B, mask)
         d = completion_times(arr_sel, b, f, mask)        # +inf on padding
+        good = mask
+        if faults_on:
+            state, sched, d, good = _async_fault_plan(faults, state, sched,
+                                                      idx, mask, d)
         t_done = sched.t_done.at[idx].set(sched.t_now + d, mode="drop")
         state, rows = ph.train_rows(state, idx, images, labels)
-        # sentinel rows are out of bounds -> dropped
+        if byz_pad is not None:
+            rows = _byz_transform(faults, byz_pad, idx, state.params, rows)
+        # sentinel rows are out of bounds -> dropped (failed uploads are
+        # re-pointed at the sentinel so a lost row never lands)
+        store_idx = idx if not faults_on else jnp.where(good, idx, N)
         state = state._replace(
-            client_params=state.client_params.at[idx].set(rows))
+            client_params=state.client_params.at[store_idx].set(rows))
 
         # -- fire: the M earliest in-flight completions ------------------
         inflight = jnp.isfinite(t_done)
@@ -224,12 +277,24 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
         if alpha != 0.0:
             w_cand = w_cand * aggregator.staleness_weights(sched.age[cand])
         cand_rows = state.client_params[cand]
+        ok_cand = fired_cand
+        if track_faults:
+            # receive-side non-finite guard: a NaN/Inf candidate row is
+            # zero-weighted out of the fold and strikes its sender
+            finite_c = jnp.all(jnp.isfinite(cand_rows), axis=1)
+            bad_c = fired_cand & ~finite_c
+            sched = sched._replace(
+                strikes=sched.strikes.at[cand].add(
+                    bad_c.astype(jnp.float32), mode="drop"))
+            w_cand = jnp.where(finite_c, w_cand, 0.0)
+            ok_cand = fired_cand & finite_c
         agg_vec, agg_opt = aggregator.aggregate_flat(
             state.params, cand_rows, w_cand, state.opt_state)
         # EMPTY-FIRE GUARD: flat_aggregate normalizes by max(Σw, eps), so
-        # an all-zero weight row yields a ZERO vector — an empty tick must
-        # instead pass the old global (and optimizer state) through
-        any_fired = jnp.any(fired)
+        # an all-zero weight row yields a ZERO vector — an empty (or
+        # all-failed) tick must instead pass the old global (and optimizer
+        # state) through
+        any_fired = jnp.any(w_cand > 0.0) if track_faults else jnp.any(fired)
         new_gvec = jnp.where(any_fired, agg_vec, state.params)
         new_opt = jax.tree_util.tree_map(
             lambda a, o: jnp.where(any_fired, a, o), agg_opt,
@@ -251,9 +316,15 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
         # history numerics or the PRNG stream.
         div_cand = ops.client_divergence(cand_rows, new_gvec)
         new_div = sched.divergence.at[cand].set(
-            jnp.where(fired_cand, div_cand, sched.divergence[cand]))
+            jnp.where(ok_cand, div_cand, sched.divergence[cand]))
         g_delta = jnp.linalg.norm(new_gvec - state.params)
-        new_drift = jnp.where(fired, 0.0, sched.drift + g_delta)
+        refreshed = fired
+        if track_faults:
+            # a fired-but-guarded (non-finite) row refreshed nothing: its
+            # client leaves flight but keeps accruing drift
+            bad_full = jnp.zeros((N,), bool).at[cand].set(bad_c, mode="drop")
+            refreshed = fired & ~bad_full
+        new_drift = jnp.where(refreshed, 0.0, sched.drift + g_delta)
 
         # -- age the survivors, clear the fired, advance the clock -------
         sched = sched._replace(
@@ -292,7 +363,7 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
         arr = dict(arr)
         arr.pop("xgain", None)           # single-cell: no cross gains
         state = ph.init_channel(state, arr)
-        if not degenerate:
+        if not degenerate or track_faults:
             state = init_sched(state)
 
         init_out = None
@@ -319,7 +390,8 @@ def _traced_async_program(cfg: EngineConfig, selector, allocator,
 def _paged_async_step_program(cfg: EngineConfig, selector, allocator,
                               agg_name: str, agg_params: tuple, compressor,
                               tctx: TracedContext, feature_layer: str,
-                              channel=None, churn=(0.0, 0.0)):
+                              channel=None, churn=(0.0, 0.0), faults=None,
+                              quarantine_after: int = 0):
     """The jitted pieces of ONE buffered-asynchronous tick over a paged
     ``ClientStore`` — the host driver composes them with store paging in
     between (``FLExperiment._run_async_paged``).
@@ -352,10 +424,19 @@ def _paged_async_step_program(cfg: EngineConfig, selector, allocator,
     alpha = float(aggregator.staleness_alpha)
     p_leave, p_join = float(churn[0]), float(churn[1])
     churn_on = p_leave > 0.0 or p_join > 0.0
+    faults_on = faults is not None and faults.active
+    track_faults = faults_on or quarantine_after > 0
 
     ph = build_round_phases(cfg, aggregator, selector, allocator, compressor,
-                            tctx, feature_layer, channel, plane="stats")
+                            tctx, feature_layer, channel, plane="stats",
+                            faults=faults,
+                            quarantine_after=quarantine_after)
     N, spec = ph.N, ph.spec
+    byz_pad = None
+    if faults_on and faults.byzantine > 0.0:
+        from repro.core.faults import byzantine_clients
+        byz_pad = jnp.asarray(np.concatenate(
+            [byzantine_clients(faults, N), np.zeros(1, bool)]))
     eval_fn = model_eval(cfg.model_cfg)
 
     def churn_step(state):
@@ -402,6 +483,10 @@ def _paged_async_step_program(cfg: EngineConfig, selector, allocator,
         arr_sel = {k: v[idx] for k, v in arr_f.items()}
         T, E, b, f = allocator.allocate_traced(arr_sel, ph.B, mask)
         d = completion_times(arr_sel, b, f, mask)        # +inf on padding
+        good = mask
+        if faults_on:
+            state, sched, d, good = _async_fault_plan(faults, state, sched,
+                                                      idx, mask, d)
         t_done = sched.t_done.at[idx].set(sched.t_now + d, mode="drop")
         inflight = jnp.isfinite(t_done)
         order = jnp.argsort(t_done)
@@ -429,23 +514,41 @@ def _paged_async_step_program(cfg: EngineConfig, selector, allocator,
             t_done=jnp.where(fired, jnp.inf, t_done),
             t_now=t_fire)
         state = state._replace(sched=sched)
-        return state, T, E, cand, fired_cand, w_cand, (part, stale, active)
+        return (state, T, E, cand, fired_cand, w_cand, good,
+                (part, stale, active))
 
-    def train_fn(state, images_sel, labels_sel):
+    def train_fn(state, idx, images_sel, labels_sel):
         """O(K·P) local SGD of the host-gathered cohort data — the same
-        ``train_gathered`` closure (and key split) as every other driver."""
-        return ph.train_gathered(state, images_sel, labels_sel)
+        ``train_gathered`` closure (and key split) as every other driver.
+        ``idx`` only feeds the byzantine row transform (same placement as
+        the dense tick: post-train, pre-staging)."""
+        state, rows = ph.train_gathered(state, images_sel, labels_sel)
+        if byz_pad is not None:
+            rows = _byz_transform(faults, byz_pad, idx, state.params, rows)
+        return state, rows
 
-    def fire_fn(state, cand_rows, w_cand, fired_cand, test_images,
+    def fire_fn(state, cand, cand_rows, w_cand, fired_cand, test_images,
                 test_labels):
         """Fold the M candidate rows (staged back from the store), guard
         the empty fire, evaluate; returns the fired candidates' refreshed
-        divergence and the global step norm ‖g_new − g_old‖ (exactly 0 on
-        an empty fire) for the host's stats-table bookkeeping."""
+        divergence, the global step norm ‖g_new − g_old‖ (exactly 0 on an
+        empty fire) for the host's stats-table bookkeeping, and the
+        ``ok_cand`` mask of candidates that actually refreshed (fired AND
+        finite — the non-finite guard strikes the rest)."""
+        ok_cand = fired_cand
+        if track_faults:
+            finite_c = jnp.all(jnp.isfinite(cand_rows), axis=1)
+            bad_c = fired_cand & ~finite_c
+            state = state._replace(sched=state.sched._replace(
+                strikes=state.sched.strikes.at[cand].add(
+                    bad_c.astype(jnp.float32), mode="drop")))
+            w_cand = jnp.where(finite_c, w_cand, 0.0)
+            ok_cand = fired_cand & finite_c
         agg_vec, agg_opt = aggregator.aggregate_flat(
             state.params, cand_rows, w_cand, state.opt_state)
         # EMPTY-FIRE GUARD — any(fired_cand) ≡ any(fired), see plan_fn
-        any_fired = jnp.any(fired_cand)
+        any_fired = (jnp.any(w_cand > 0.0) if track_faults
+                     else jnp.any(fired_cand))
         new_gvec = jnp.where(any_fired, agg_vec, state.params)
         new_opt = jax.tree_util.tree_map(
             lambda a, o: jnp.where(any_fired, a, o), agg_opt,
@@ -455,7 +558,7 @@ def _paged_async_step_program(cfg: EngineConfig, selector, allocator,
         state = state._replace(params=new_gvec, opt_state=new_opt)
         acc, _ = eval_fn(unflatten_vector(spec, new_gvec),
                          test_images, test_labels)
-        return state, acc, div_cand, g_delta
+        return state, acc, div_cand, g_delta, ok_cand
 
     return SimpleNamespace(
         N=N, M=M, spec=spec, churn_on=churn_on,

@@ -240,7 +240,8 @@ class TracedRunResult(NamedTuple):
 
 def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
                        compressor, tctx: TracedContext, feature_layer: str,
-                       channel=None, plane: str = "full"):
+                       channel=None, plane: str = "full", faults=None,
+                       quarantine_after: int = 0):
     """The per-round phase closures every scanned program is composed of.
 
     Both device-resident execution modes — the synchronous round barrier
@@ -279,9 +280,22 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
     aggregation), ``select_phase`` (fade → divergence → select) and
     ``init_round``/``finish_phase`` (the Alg.-2 initial round and one
     cell's allocate → train → eval round tail).
+
+    ``faults`` (a ``repro.core.faults.FaultSpec``) arms the traced
+    post-train fault phase: dispatched uploads are dropped (i.i.d.,
+    channel-coupled, or past the straggler deadline), corrupted to NaN,
+    or adversarially negated, with failed rows zero-weighted out of the
+    fold, kept out of the client plane, and counted in the stats table's
+    ``faults``/``strikes`` columns. ``quarantine_after > 0`` additionally
+    filters clients with that many strikes out of every selection, like
+    ``avail=False``. Either option requires the carry to hold a
+    ``ClientStats`` sched table.
     """
     from repro.core.clustering import extract_features_flat, kmeans_fit
     from repro.core.divergence import weight_divergence_flat
+    from repro.core.faults import (byzantine_clients, chan_outage_threshold,
+                                   draw_fault_masks)
+    from repro.core.wireless import completion_times
 
     if plane not in ("full", "stats"):
         raise ValueError(f"unknown carry plane {plane!r}; "
@@ -300,6 +314,19 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
     channel_rng = channel is not None and getattr(channel, "needs_rng", False)
     channel_stateful = (channel is not None
                         and getattr(channel, "stateful", False))
+    faults_on = faults is not None and faults.active
+    track_faults = faults_on or quarantine_after > 0
+    if faults_on and faults.chan_outage > 0.0 and not channel_stateful:
+        raise ValueError(
+            "chan_outage faults derive the drop probability from the fade "
+            "state riding the carry; configure a stateful channel "
+            "(e.g. 'gauss-markov')")
+    byz_pad = None
+    if faults_on and faults.byzantine > 0.0:
+        # the fixed adversarial subset, padded with one False sentinel lane
+        # so clamped out-of-bounds gathers stay honest
+        byz_pad = jnp.asarray(np.concatenate(
+            [byzantine_clients(faults, N), np.zeros(1, bool)]))
 
     def init_channel(state, arr):
         """Populate the carry's channel-state slot (one key split, only
@@ -352,18 +379,84 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
         gathers clamp the out-of-bounds padding sentinel; masked later."""
         return train_gathered(state, images[idx], labels[idx])
 
-    def train_aggregate(state, idx, mask, images, labels, sizes):
-        """Local training of ``idx`` + store + aggregate (masked weights)."""
+    def inject_faults(state, idx, mask, rows, w, d=None):
+        """The traced post-train fault phase: one key split, then the
+        per-dispatch drop/corrupt draws, the deterministic channel-coupled
+        and deadline drops, and the byzantine row transform. Returns the
+        (possibly corrupted) rows, the fold weights with lost uploads
+        zeroed, and ``keep`` — the lanes whose rows may persist to the
+        client plane (byzantine rows persist: the adversary's state is
+        real; lost and corrupted uploads never do)."""
+        key, kf = jax.random.split(state.key)
+        drop, corrupt = draw_fault_masks(kf, faults, idx.shape)
+        if faults.chan_outage > 0.0:
+            # unit-mean exponential fade power from the Gauss-Markov carry:
+            # the upload fails exactly when this round's fade is deep
+            gain = jnp.sum(jnp.square(state.channel), axis=-1)
+            drop = drop | (gain[idx]
+                           < chan_outage_threshold(faults.chan_outage))
+        if faults.deadline > 0.0 and d is not None:
+            drop = drop | (d > faults.deadline)
+        if byz_pad is not None:
+            g = state.params
+            rows = jnp.where(byz_pad[idx][:, None],
+                             g[None, :] - faults.byz_scale
+                             * (rows - g[None, :]),
+                             rows)
+        if faults.corrupt > 0.0:
+            rows = jnp.where(corrupt[:, None], jnp.nan, rows)
+        ev = (drop | corrupt) & mask
+        sched = state.sched._replace(
+            faults=state.sched.faults.at[idx].add(
+                ev.astype(jnp.float32), mode="drop"))
+        w = jnp.where(drop, 0.0, w)
+        keep = mask & ~drop & ~corrupt
+        return state._replace(key=key, sched=sched), rows, w, keep
+
+    def finite_guard(state, idx, rows, w):
+        """Receive-side non-finite guard: a NaN/Inf row is zero-weighted
+        out of the fold and counted as a STRIKE against its sender —
+        ``quarantine_after`` strikes exclude the client from selection."""
+        finite = jnp.all(jnp.isfinite(rows), axis=1)
+        bad = (~finite) & (w > 0.0)
+        sched = state.sched._replace(
+            strikes=state.sched.strikes.at[idx].add(
+                bad.astype(jnp.float32), mode="drop"))
+        return state._replace(sched=sched), jnp.where(finite, w, 0.0)
+
+    def train_aggregate(state, idx, mask, images, labels, sizes, d=None):
+        """Local training of ``idx`` + store + aggregate (masked weights).
+        ``mask is None`` marks the all-device initial round — fault
+        injection only arms on real (masked) selections."""
         state, rows = train_rows(state, idx, images, labels)
         w = sizes[idx]
         if mask is not None:
             w = jnp.where(mask, w, 0.0)
+        keep = mask
+        if faults_on and mask is not None:
+            state, rows, w, keep = inject_faults(state, idx, mask, rows, w,
+                                                 d)
+        if track_faults and mask is not None:
+            state, w = finite_guard(state, idx, rows, w)
         new_gvec, opt_state = aggregator.aggregate_flat(
             state.params, rows, w, state.opt_state)
+        if faults_on and mask is not None:
+            # all-failed degradation: when every upload of the round was
+            # lost the global row and optimizer state pass through
+            # unchanged instead of folding an empty (zeroed) cohort
+            any_ok = jnp.any(w > 0.0)
+            new_gvec = jnp.where(any_ok, new_gvec, state.params)
+            opt_state = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(any_ok, new, old),
+                opt_state, state.opt_state)
         if plane == "full":
             # ONE scatter into the [N, P] plane; sentinel rows are out of
-            # bounds -> dropped
-            new_client = state.client_params.at[idx].set(rows)
+            # bounds -> dropped (failed uploads are re-pointed at the
+            # sentinel so a lost/corrupted row never lands)
+            store_idx = idx
+            if faults_on and keep is not None:
+                store_idx = jnp.where(keep, idx, N)
+            new_client = state.client_params.at[store_idx].set(rows)
         else:
             # stats plane: the carry holds no [N, P] buffer — the caller
             # persists rows through its ClientStore at the host boundary
@@ -413,6 +506,15 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
             k_sel = None
         idx, mask = selector.select_traced(k_sel, div, state.labels, arr,
                                            tctx)
+        if quarantine_after > 0:
+            # quarantine: clients with >= quarantine_after strikes are
+            # filtered out of the selection exactly like avail=False
+            # (same okpad pattern as the async in-flight filter)
+            okpad = jnp.concatenate(
+                [state.sched.strikes < float(quarantine_after),
+                 jnp.zeros((1,), bool)])
+            mask = mask & okpad[idx]
+            idx = jnp.where(mask, idx, N).astype(idx.dtype)
         return state, arr, idx, mask
 
     def finish_phase(state, arr, idx, mask, inr_round, images, labels,
@@ -423,8 +525,13 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
         arr_sel = {k: v[idx] for k, v in arr.items()}
         if inr_round is not None:
             arr_sel["inr"] = arr_sel["inr"] + inr_round
-        T, E, _, _ = allocator.allocate_traced(arr_sel, B, mask)
-        state = train_aggregate(state, idx, mask, images, labels, sizes)
+        T, E, b_sel, f_sel = allocator.allocate_traced(arr_sel, B, mask)
+        d = None
+        if faults_on and faults.deadline > 0.0:
+            # the same eq.-(5)+(8) pricing the async engine fires on: an
+            # update past the deadline is a straggler the server abandons
+            d = completion_times(arr_sel, b_sel, f_sel, mask)
+        state = train_aggregate(state, idx, mask, images, labels, sizes, d)
         acc, _ = eval_fn(unflatten_vector(spec, state.params),
                          test_images, test_labels)
         return state, RoundOutputs(
@@ -443,7 +550,8 @@ def build_round_phases(cfg: EngineConfig, aggregator, selector, allocator,
 def _traced_round_program(cfg: EngineConfig, selector, allocator,
                           agg_name: str, agg_params: tuple, compressor,
                           tctx: TracedContext, feature_layer: str,
-                          channel=None, cells: int = 1):
+                          channel=None, cells: int = 1, faults=None,
+                          quarantine_after: int = 0):
     """The pure (unjitted) traced experiment fn for one strategy bundle.
 
     All arguments are hashable trace-time constants: ``selector`` /
@@ -483,8 +591,11 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
     aggregator = AGGREGATORS.resolve({"name": agg_name,
                                       "params": dict(agg_params)})
     ph = build_round_phases(cfg, aggregator, selector, allocator, compressor,
-                            tctx, feature_layer, channel)
+                            tctx, feature_layer, channel, faults=faults,
+                            quarantine_after=quarantine_after)
     N = ph.N
+    track_faults = ((faults is not None and faults.active)
+                    or quarantine_after > 0)
     init_channel, init_round = ph.init_channel, ph.init_round
     select_phase, finish_phase = ph.select_phase, ph.finish_phase
     dynamic = (cells > 1 and channel is not None
@@ -498,6 +609,11 @@ def _traced_round_program(cfg: EngineConfig, selector, allocator,
         if cells == 1:
             # ---- single-cell layout (the PR-2 scanned program) --------
             state = init_channel(state, arr)
+            if track_faults and state.sched is None:
+                # fault counters / quarantine need the stats table riding
+                # the carry; the cohort path has no host table to ship in
+                from repro.core.store import ClientStats
+                state = state._replace(sched=ClientStats.create_traced(N))
             init_out = None
             if with_init:
                 state, init_out = init_round(state, images, labels, sizes,
@@ -573,7 +689,8 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
                compressor, tctx: TracedContext, feature_layer: str,
                rounds: int, with_init: bool, cohort: bool = False,
                test_shared: bool = True, mesh=None, channel=None,
-               cells: int = 1, churn=None):
+               cells: int = 1, churn=None, faults=None,
+               quarantine_after: int = 0):
     """The compiled multi-round experiment fn for one strategy bundle.
 
     Returns a jitted callable
@@ -622,11 +739,17 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
         raise ValueError(
             "the buffered-asynchronous engine runs single-cell programs "
             "only; run multi-cell fleets with a synchronous aggregator")
+    track_faults = ((faults is not None and faults.active)
+                    or quarantine_after > 0)
+    if track_faults and cells > 1:
+        raise ValueError(
+            "fault injection / quarantine runs single-cell programs only")
     mesh_key = (None if mesh is None
                 else tuple(d.id for d in mesh.devices.flat))
     key = (cfg, selector, allocator, aggregator_cache_key(aggregator),
            compressor, tctx, feature_layer, rounds, with_init, cohort,
-           test_shared, mesh_key, channel, cells, churn_t)
+           test_shared, mesh_key, channel, cells, churn_t, faults,
+           quarantine_after)
     fn = _RUN_FN_CACHE.get(key)
     if fn is None:
         if is_async:
@@ -634,12 +757,14 @@ def run_rounds(cfg: EngineConfig, *, selector, allocator, aggregator,
             prog = _traced_async_program(
                 cfg, selector, allocator, aggregator.registry_name,
                 tuple(sorted(aggregator.params().items())), compressor,
-                tctx, feature_layer, channel, churn_t)
+                tctx, feature_layer, channel, churn_t, faults,
+                quarantine_after)
         else:
             prog = _traced_round_program(
                 cfg, selector, allocator, aggregator.registry_name,
                 tuple(sorted(aggregator.params().items())), compressor,
-                tctx, feature_layer, channel, cells)
+                tctx, feature_layer, channel, cells, faults,
+                quarantine_after)
         core = functools.partial(prog, rounds=rounds, with_init=with_init)
         if cohort:
             test_ax = None if test_shared else 0

@@ -1,0 +1,192 @@
+"""Fault injection for the FL runtime — the failure modes a wireless
+fleet actually exhibits, declared once and injected into every driver
+route (scanned/host × dense/paged).
+
+The paper's premise is unreliable links and constrained devices; churn
+(PR 6/9) models *absence*, this module models *failure*:
+
+``outage``
+    A dispatched client's upload is lost with probability ``outage``
+    (i.i.d. Bernoulli per dispatch). The client trained — energy was
+    spent, the completion was priced — but the server never receives the
+    row: it is masked out of the fold and never persisted to the store.
+
+``chan_outage``
+    The CHANNEL-GROUNDED outage mode: instead of an i.i.d. coin, the
+    upload fails exactly when the round's small-scale fade is deep.
+    The Gauss-Markov carry (``RoundState.channel``) holds the complex
+    amplitude h_t with unit-mean power gain ``|h_t|²`` ~ Exp(1), so
+    dropping whenever ``|h_t|² < −ln(1 − rate)`` yields the configured
+    MARGINAL outage rate while deep fades *cause* the drops — outages
+    arrive in bursts with the AR(1) fade coherence, not as white noise.
+    Requires a stateful channel (``gauss-markov`` / ``rayleigh-block``).
+
+``corrupt``
+    The upload arrives but the payload is garbage (radio bit-errors,
+    client-side numerical blow-up): the row is replaced by NaN. The
+    server's non-finite guard detects it at the receive/fold boundary,
+    zeroes its weight, counts a STRIKE against the client
+    (``ClientStats.strikes``), and never lets the row touch the store —
+    repeat offenders are quarantined (``quarantine_after``).
+
+``byzantine``
+    A FIXED subset of clients (fraction ``byzantine``, drawn once from
+    ``seed``) is adversarial: every update they send is the negated,
+    amplified update ``g − byz_scale·(w − g)`` — finite, so the
+    non-finite guard cannot see it; robust aggregation (``trimmed:f`` /
+    ``clipnorm:c``) is the defense.
+
+``deadline``
+    Straggler-deadline drops: a priced completion time (eqs. 5+8) above
+    ``deadline`` seconds means the server gave up waiting — the update
+    is dropped exactly like an outage. Principled via the same delay
+    model the async engine fires on (cf. Zhou et al., arXiv 2209.14900).
+
+All rates are per-dispatch probabilities in [0, 1]; ``FaultSpec`` is a
+frozen (hashable) dataclass so it keys the traced-program caches, and
+the compact CLI spelling ``"outage:0.1,corrupt:0.01"`` round-trips
+through ``from_string``/``to_dict``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["FaultSpec", "FAULT_KINDS", "byzantine_clients",
+           "draw_fault_masks", "chan_outage_threshold"]
+
+
+#: the fault-kind registry the CLI parser accepts (field name → doc)
+FAULT_KINDS: Dict[str, str] = {
+    "outage": "P(upload lost) per dispatch, i.i.d.",
+    "chan_outage": "marginal P(upload lost) derived from the fade state",
+    "corrupt": "P(payload arrives non-finite) per dispatch",
+    "byzantine": "fraction of clients sending adversarial updates",
+    "byz_scale": "amplification of the byzantine negated update",
+    "deadline": "drop updates whose priced completion exceeds this [s]",
+    "seed": "PRNG decorrelator for the byzantine subset",
+}
+
+_RATE_FIELDS = ("outage", "chan_outage", "corrupt", "byzantine")
+
+
+@dataclass(frozen=True)
+class FaultSpec:
+    """Declarative fault model — hashable, JSON-round-trippable."""
+
+    outage: float = 0.0
+    chan_outage: float = 0.0
+    corrupt: float = 0.0
+    byzantine: float = 0.0
+    byz_scale: float = 5.0
+    deadline: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        for name in _RATE_FIELDS:
+            v = float(getattr(self, name))
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(
+                    f"fault rate {name!r} must lie in [0, 1]; got {v}")
+            object.__setattr__(self, name, v)
+        if not (np.isfinite(self.byz_scale) and self.byz_scale >= 0.0):
+            raise ValueError(f"byz_scale must be finite and >= 0; got "
+                             f"{self.byz_scale}")
+        if self.deadline < 0.0:
+            raise ValueError(f"deadline must be >= 0 seconds; got "
+                             f"{self.deadline}")
+        object.__setattr__(self, "byz_scale", float(self.byz_scale))
+        object.__setattr__(self, "deadline", float(self.deadline))
+        object.__setattr__(self, "seed", int(self.seed))
+
+    @property
+    def active(self) -> bool:
+        return (self.outage > 0.0 or self.chan_outage > 0.0
+                or self.corrupt > 0.0 or self.byzantine > 0.0
+                or self.deadline > 0.0)
+
+    # ---- parsing / serialization -------------------------------------
+    @classmethod
+    def from_string(cls, s: str) -> "FaultSpec":
+        """``"outage:0.1,corrupt:0.01"`` → FaultSpec. Unknown kinds are
+        rejected naming the registry, mirroring the strategy registries'
+        error contract."""
+        kw: Dict[str, Any] = {}
+        for part in s.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            kind, sep, val = part.partition(":")
+            kind = kind.strip().replace("-", "_")
+            if kind not in FAULT_KINDS:
+                raise ValueError(
+                    f"unknown fault kind {kind!r}; registered kinds: "
+                    f"{sorted(FAULT_KINDS)}")
+            if not sep:
+                raise ValueError(
+                    f"fault kind {kind!r} needs a value: '{kind}:RATE'")
+            try:
+                kw[kind] = int(val) if kind == "seed" else float(val)
+            except ValueError:
+                raise ValueError(
+                    f"fault kind {kind!r}: expected a number, got "
+                    f"{val!r}") from None
+        return cls(**kw)
+
+    @classmethod
+    def normalize(cls, ref: Any) -> Optional["FaultSpec"]:
+        """None | FaultSpec | dict | compact string → FaultSpec | None."""
+        if ref is None or isinstance(ref, FaultSpec):
+            return ref
+        if isinstance(ref, str):
+            return cls.from_string(ref)
+        if isinstance(ref, dict):
+            unknown = set(ref) - set(FAULT_KINDS)
+            if unknown:
+                raise ValueError(
+                    f"unknown fault kinds {sorted(unknown)}; registered "
+                    f"kinds: {sorted(FAULT_KINDS)}")
+            return cls(**ref)
+        raise TypeError(f"cannot build a FaultSpec from {type(ref).__name__}")
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def byzantine_clients(spec: FaultSpec, num_clients: int) -> np.ndarray:
+    """The fixed adversarial subset as a host ``[N]`` bool mask —
+    a Bernoulli(byzantine) draw from ``spec.seed``, shared verbatim by
+    the traced programs (as a constant) and the host loops, so every
+    driver route agrees on who the adversaries are."""
+    if spec.byzantine <= 0.0:
+        return np.zeros(num_clients, bool)
+    key = jax.random.PRNGKey(spec.seed)
+    return np.asarray(jax.random.bernoulli(key, spec.byzantine,
+                                           (num_clients,)))
+
+
+def draw_fault_masks(key, spec: FaultSpec, shape):
+    """The per-dispatch stochastic fault draws: ``(drop, corrupt)`` bool
+    masks of ``shape`` (one lane per dispatched client). ONE fixed split
+    structure for any active spec, so every engine consumes the PRNG
+    stream identically — the dense≡paged async parity holds under faults
+    by construction. Channel-coupled and deadline drops are deterministic
+    (no key) and OR-ed in by the caller."""
+    k_out, k_cor = jax.random.split(key)
+    drop = (jax.random.bernoulli(k_out, spec.outage, shape)
+            if spec.outage > 0.0 else jnp.zeros(shape, bool))
+    corrupt = (jax.random.bernoulli(k_cor, spec.corrupt, shape)
+               if spec.corrupt > 0.0 else jnp.zeros(shape, bool))
+    return drop, corrupt
+
+
+def chan_outage_threshold(rate: float) -> float:
+    """The fade-power cut giving marginal outage probability ``rate``:
+    the Gauss-Markov gain ``|h_t|²`` is unit-mean exponential at every
+    lag, so ``P(gain < −ln(1 − rate)) = rate`` exactly."""
+    return float(-np.log1p(-min(rate, 1.0 - 1e-12)))

@@ -19,6 +19,7 @@ registries — construct experiments declaratively with
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Any, List, Optional, Union
 
@@ -40,8 +41,9 @@ from repro.core.clustering import (kmeans_fit, kmeans_fit_minibatch,
 from repro.core.divergence import weight_divergence_flat
 from repro.core.engine import (EngineConfig, RoundEngine, RoundResult,
                                TracedRunResult, make_local_update, run_rounds)
+from repro.core.faults import FaultSpec, byzantine_clients, draw_fault_masks
 from repro.core.store import ClientStats, build_store
-from repro.core.wireless import Fleet, fleet_arrays
+from repro.core.wireless import Fleet, completion_times, fleet_arrays
 from repro.data.partition import FederatedData
 from repro.kernels.chunked import default_chunk_size, streaming_weighted_mean
 from repro.utils.trees import (flatten_stacked, tree_flatten_vector,
@@ -82,6 +84,68 @@ class FLHistory:
         self.E_k.append(float(res.E_k))
         self.selected.append(np.asarray(res.selected))
 
+    def extend(self, other: "FLHistory") -> "FLHistory":
+        """Concatenate ``other``'s rounds onto this history (checkpoint
+        resume: the restored prefix continues with the new run's rounds)."""
+        for name in ("accuracy", "T_k", "E_k", "selected",
+                     "participation", "staleness", "active"):
+            getattr(self, name).extend(getattr(other, name))
+        if self.rounds_to_target is None:
+            self.rounds_to_target = other.rounds_to_target
+        return self
+
+    def to_dict(self) -> dict:
+        """JSON-serializable form (checkpoint manifests)."""
+        return {
+            "accuracy": [float(x) for x in self.accuracy],
+            "T_k": [float(x) for x in self.T_k],
+            "E_k": [float(x) for x in self.E_k],
+            "selected": [np.asarray(s).tolist() for s in self.selected],
+            "rounds_to_target": self.rounds_to_target,
+            "participation": [float(x) for x in self.participation],
+            "staleness": [float(x) for x in self.staleness],
+            "active": [float(x) for x in self.active],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FLHistory":
+        return cls(
+            accuracy=list(d["accuracy"]), T_k=list(d["T_k"]),
+            E_k=list(d["E_k"]),
+            selected=[np.asarray(s, np.int64) for s in d["selected"]],
+            rounds_to_target=d.get("rounds_to_target"),
+            participation=list(d.get("participation", [])),
+            staleness=list(d.get("staleness", [])),
+            active=list(d.get("active", [])))
+
+
+class _Checkpointer:
+    """Bundles the ``run()``-level checkpoint knobs for the host loops:
+    fires every ``every`` completed rounds, counting from ``offset`` so a
+    resumed run continues the original round numbering."""
+
+    def __init__(self, exp: "FLExperiment", directory: str, every: int,
+                 offset: int, spec_dict: Optional[dict]):
+        if every <= 0:
+            raise ValueError(f"checkpoint_every must be > 0; got {every}")
+        self.exp = exp
+        self.directory = directory
+        self.every = every
+        self.offset = offset
+        self.spec_dict = spec_dict
+
+    def due(self, k: int) -> bool:
+        return (self.offset + k + 1) % self.every == 0
+
+    def save(self, k: int, hist: FLHistory) -> str:
+        return self.exp.save_checkpoint(
+            self.directory, self.offset + k + 1, history=hist,
+            spec_dict=self.spec_dict)
+
+    def maybe(self, k: int, hist: FLHistory) -> None:
+        if self.due(k):
+            self.save(k, hist)
+
 
 class FLExperiment:
     """Host-side driver composing a shared ``RoundEngine`` with registered
@@ -104,7 +168,8 @@ class FLExperiment:
                  k_max: Optional[int] = None,
                  chunk_size: Optional[int] = None,
                  div_refresh_every: int = 0, cluster: str = "full",
-                 p_shards: int = 0):
+                 p_shards: int = 0, faults: Any = None,
+                 quarantine_after: int = 0):
         self.model_cfg = model_cfg
         self.p_shards = int(p_shards)
         self.fed = fed
@@ -148,6 +213,23 @@ class FLExperiment:
             raise ValueError(
                 f"cluster must be 'full' or 'minibatch'; got {cluster!r}")
         self.cluster_mode = cluster
+
+        # -- fault injection / quarantine (repro.core.faults) -----------
+        self.faults = FaultSpec.normalize(faults)
+        self.quarantine_after = int(quarantine_after)
+        if self.quarantine_after < 0:
+            raise ValueError("quarantine_after must be >= 0; got "
+                             f"{quarantine_after}")
+        if (self.faults is not None and self.faults.chan_outage > 0.0
+                and not getattr(self.channel, "stateful", False)):
+            raise ValueError(
+                "faults: chan_outage derives upload failures from the "
+                "Gauss-Markov fade state and needs a stateful channel "
+                "(e.g. channel='gauss-markov'); got "
+                f"{self.channel.registry_name!r}")
+        self._byz_mask = (byzantine_clients(self.faults, fed.num_clients)
+                          if self.faults is not None
+                          and self.faults.byzantine > 0.0 else None)
 
         # -- compiled compute, shared across same-config experiments ---
         self.engine = RoundEngine.shared(EngineConfig(
@@ -229,6 +311,14 @@ class FLExperiment:
         completion, divergence/drift, virtual clock) for the host loops
         and the async scheduler alike."""
         return self._store.stats
+
+    @property
+    def _faults_on(self) -> bool:
+        return self.faults is not None and self.faults.active
+
+    @property
+    def _track_faults(self) -> bool:
+        return self._faults_on or self.quarantine_after > 0
 
     @property
     def client_params(self) -> jnp.ndarray:
@@ -502,21 +592,25 @@ class FLExperiment:
         trained rows refresh the table's divergence/age entries — O(K·P)
         bookkeeping; the O(N·P) plane is never touched.
         """
-        idx = self.select(method)
+        idx = np.asarray(self.select(method))
         paged = self._store.kind == "paged"
+        faults_on = self._faults_on
         if paged:
-            idx = np.asarray(idx)
             idx = idx[self.stats.avail[idx]]
-            if idx.size == 0:           # everyone churned out: explicit
-                acc, per_class = self.evaluate()        # no-op round
-                return RoundResult(
-                    selected=idx, T_k=0.0, E_k=0.0, accuracy=acc,
-                    per_class=per_class,
-                    params=jax.tree_util.tree_map(jnp.copy,
-                                                  self.global_params))
+        if self.quarantine_after > 0:
+            idx = idx[self.stats.strikes[idx] < float(self.quarantine_after)]
+        if idx.size == 0:               # everyone churned/quarantined out:
+            acc, per_class = self.evaluate()    # explicit no-op round
+            return RoundResult(
+                selected=idx, T_k=0.0, E_k=0.0, accuracy=acc,
+                per_class=per_class,
+                params=jax.tree_util.tree_map(jnp.copy,
+                                              self.global_params))
         alloc = self.allocation(idx)
         fused = (getattr(self.aggregator, "fuses_with_engine", False)
-                 and getattr(self.compressor, "identity", False))
+                 and getattr(self.compressor, "identity", False)
+                 and not faults_on)
+        keep = None                     # faults: lanes persisted to store
         if fused:
             keys = jax.random.split(self._next_key(), len(idx))
             # round_step donates the global params (the new global reuses
@@ -531,11 +625,25 @@ class FLExperiment:
         else:
             stacked = self.train_clients(idx)
             rows = flatten_stacked(stacked)
-            self.store_clients(rows, idx)
-            self.aggregate(stacked, idx)
+            if faults_on:
+                rows, survive, keep = self._inject_faults_host(
+                    idx, rows, alloc)
+                ksel = np.flatnonzero(keep)
+                if ksel.size:
+                    self.store_clients(rows[jnp.asarray(ksel)], idx[ksel])
+                self._aggregate_flat_host(rows, survive, idx)
+            else:
+                self.store_clients(rows, idx)
+                self.aggregate(stacked, idx)
             acc, per_class = self.evaluate()
         if paged:
-            self._finish_paged_round(idx, rows)
+            if keep is None:
+                self._finish_paged_round(idx, rows)
+            elif keep.any():
+                ksel = np.flatnonzero(keep)
+                self._finish_paged_round(idx[ksel], rows[jnp.asarray(ksel)])
+            # all-failed round: nothing landed and the global row did not
+            # move, so there is no drift/divergence upkeep to do
         # params is COPIED: the next fused round donates self.global_params,
         # which would silently invalidate an earlier RoundResult's tree
         return RoundResult(selected=np.asarray(idx), T_k=alloc.T, E_k=alloc.E,
@@ -543,6 +651,75 @@ class FLExperiment:
                            params=jax.tree_util.tree_map(jnp.copy,
                                                          self.global_params),
                            stacked_params=rows)
+
+    def _inject_faults_host(self, idx: np.ndarray, rows, alloc: Allocation):
+        """Host twin of the traced post-train fault phase (``engine``'s
+        ``inject_faults`` + ``finite_guard``): ONE key split at the same
+        stream position as the traced program, the same Bernoulli draws,
+        the same semantics — host ≡ scanned under faults is pinned in
+        ``tests/test_faults.py``.
+
+        Returns ``(rows, survive, keep)``: the (byzantine-transformed,
+        corrupt-NaN'd) rows, the lanes whose weight survives the fold
+        (``~drop & finite``), and the lanes that persist to the store
+        (``~drop & ~corrupt`` — matching the traced sentinel scatter)."""
+        fs = self.faults
+        if fs.chan_outage > 0.0:
+            raise ValueError(
+                "faults: chan_outage needs the fade state the scanned "
+                "program carries; the host round loop has none — run a "
+                "traceable bundle with no target_accuracy (store='dense')")
+        drop_j, corrupt_j = draw_fault_masks(self._next_key(), fs,
+                                             (len(idx),))
+        drop = np.asarray(drop_j)
+        corrupt = np.asarray(corrupt_j)
+        if fs.deadline > 0.0:
+            d = np.asarray(completion_times(
+                fleet_arrays(self.fleet.select(idx)), alloc.b, alloc.f))
+            drop = drop | (d > fs.deadline)
+        if self._byz_mask is not None:
+            gvec = tree_flatten_vector(self.global_params)
+            byz = jnp.asarray(self._byz_mask[idx])
+            rows = jnp.where(byz[:, None],
+                             gvec[None, :]
+                             - fs.byz_scale * (rows - gvec[None, :]),
+                             rows)
+        if fs.corrupt > 0.0:
+            rows = jnp.where(jnp.asarray(corrupt)[:, None],
+                             jnp.full((), jnp.nan, rows.dtype), rows)
+        finite = np.asarray(jnp.all(jnp.isfinite(rows), axis=1))
+        st = self.stats
+        np.add.at(st.faults, idx[drop | corrupt], 1.0)
+        # strike = a non-finite payload that actually arrived (not lost)
+        np.add.at(st.strikes, idx[~finite & ~drop], 1.0)
+        return rows, ~drop & finite, ~drop & ~corrupt
+
+    def _aggregate_flat_host(self, rows, survive: np.ndarray,
+                             idx: np.ndarray):
+        """Eq.-(4) fold of a faulty round: aggregate ALL dispatched lanes
+        with the failed lanes' weights zeroed — ``ops.flat_aggregate``
+        zeroes a 0-weight lane's payload, so this matches the traced
+        program bitwise (and an all-failed round is an explicit no-op on
+        the global row, never a 0/0)."""
+        if not bool(np.any(survive)):
+            return
+        spec = self.engine.flat_spec
+        if not hasattr(self.aggregator, "aggregate_flat"):
+            # pre-flat custom aggregator: feed it the surviving subset
+            # (zero-weight lanes would change stacked-contract semantics)
+            sel = np.flatnonzero(survive)
+            self.global_params = self.aggregator.aggregate(
+                self.global_params, unflatten_rows(spec,
+                                                   rows[jnp.asarray(sel)]),
+                self._sizes[idx[sel]])
+            return
+        gvec = tree_flatten_vector(self.global_params)
+        w = jnp.where(jnp.asarray(survive),
+                      self._sizes[idx].astype(jnp.float32), 0.0)
+        new_gvec, new_opt = self.aggregator.aggregate_flat(
+            gvec, rows, w, self.aggregator.init_flat_state(gvec))
+        self.global_params = unflatten_vector(spec, new_gvec)
+        self.aggregator.load_flat_state(new_opt, spec)
 
     def _finish_paged_round(self, idx: np.ndarray, rows=None):
         """Post-round upkeep of the O(N) stats table (paged store only):
@@ -583,7 +760,12 @@ class FLExperiment:
 
     def run(self, method: Any = None, rounds: Optional[int] = None,
             target_accuracy: Optional[float] = None,
-            include_initial_round: bool = True) -> FLHistory:
+            include_initial_round: bool = True, *,
+            checkpoint_every: int = 0,
+            checkpoint_dir: Optional[str] = None,
+            checkpoint_offset: int = 0,
+            checkpoint_spec: Optional[dict] = None,
+            history: Optional[FLHistory] = None) -> FLHistory:
         """Run the experiment; identical results from two execution paths.
 
         When every configured strategy advertises ``traceable=True``, the
@@ -601,6 +783,13 @@ class FLExperiment:
         rounds = rounds or self.fl.max_rounds
         target = (self.fl.target_accuracy
                   if target_accuracy is None else target_accuracy)
+        ck = None
+        if checkpoint_every:
+            if not checkpoint_dir:
+                raise ValueError(
+                    "checkpoint_every > 0 needs a checkpoint_dir")
+            ck = _Checkpointer(self, checkpoint_dir, int(checkpoint_every),
+                               int(checkpoint_offset), checkpoint_spec)
         if (getattr(self.channel, "dynamic", False)
                 and self.fleet.num_cells > 1):
             raise ValueError(
@@ -631,9 +820,10 @@ class FLExperiment:
                         "traceable strategy bundle (selector/allocator/"
                         "compressor/channel)")
                 return self._run_async_paged(selector, rounds, target,
-                                             include_initial_round)
+                                             include_initial_round,
+                                             history, ck)
             return self._run_paged(selector, method, rounds, target,
-                                   include_initial_round)
+                                   include_initial_round, history, ck)
         if getattr(self.aggregator, "async_capable", False):
             # the buffered-asynchronous engine exists ONLY as a scanned
             # program — there is no host-loop equivalent to fall back to
@@ -641,22 +831,37 @@ class FLExperiment:
                 raise ValueError(
                     "the buffered-asynchronous engine runs as one scanned "
                     "program and cannot early-stop on target_accuracy")
+            if ck is not None:
+                raise ValueError(
+                    "the dense buffered-asynchronous engine runs as ONE "
+                    "scanned program with no host boundary to snapshot "
+                    "at; checkpoint with store='paged' (the host-composed "
+                    "async loop) or checkpoint_every=0")
             if not self.traceable(selector):
                 raise ValueError(
                     "the buffered-asynchronous engine needs a fully "
                     "traceable strategy bundle (selector/allocator/"
                     "compressor/channel)")
-            return self._run_traced(selector, rounds, include_initial_round)
+            out = self._run_traced(selector, rounds, include_initial_round)
+            return history.extend(out) if history is not None else out
         bit_parity = not getattr(selector, "needs_rng", True)
-        if not target and bit_parity and self.traceable(selector):
-            return self._run_traced(selector, rounds, include_initial_round)
+        if (not target and bit_parity and self.traceable(selector)
+                and ck is None):
+            out = self._run_traced(selector, rounds, include_initial_round)
+            return history.extend(out) if history is not None else out
         if getattr(self.channel, "needs_rng", False):
             raise ValueError(
                 f"channel {self.channel.registry_name!r} redraws fading "
                 "inside the scanned program and has no host-loop "
                 "equivalent; run it with a traceable strategy bundle and "
                 "no target_accuracy (or through CohortRunner)")
-        hist = FLHistory()
+        if ck is not None and getattr(self.channel, "stateful", False):
+            raise ValueError(
+                f"channel {self.channel.registry_name!r} carries fade "
+                "state only the scanned program steps; checkpointing "
+                "drives the host round loop — use the static channel or "
+                "checkpoint_every=0")
+        hist = history if history is not None else FLHistory()
         if include_initial_round or self.clusters is None:
             self.initial_round()
             acc, _ = self.evaluate()
@@ -669,13 +874,17 @@ class FLExperiment:
         for k in range(rounds):
             res = self.round(method)
             hist.append(res)
+            if ck is not None:
+                ck.maybe(k, hist)
             if target and res.accuracy >= target and hist.rounds_to_target is None:
                 hist.rounds_to_target = k + 1
                 break
         return hist
 
     def _run_paged(self, selector, method, rounds: int,
-                   target: float, include_initial_round: bool) -> FLHistory:
+                   target: float, include_initial_round: bool,
+                   history: Optional[FLHistory] = None,
+                   ck: Optional["_Checkpointer"] = None) -> FLHistory:
         """The population-scale host loop over the paged store.
 
         Differences from the dense host loop, both deliberate:
@@ -687,7 +896,7 @@ class FLExperiment:
         selection filtered against it. With ``include_initial_round=True``
         and ``div_refresh_every=1`` the loop is bit-identical to the dense
         host loop (pinned in ``tests/test_paged_store.py``)."""
-        hist = FLHistory()
+        hist = history if history is not None else FLHistory()
         if include_initial_round or (self.clusters is None and
                                      getattr(selector, "needs_clusters",
                                              False)):
@@ -705,6 +914,8 @@ class FLExperiment:
                 self._churn_step_host()
             res = self.round(method)
             hist.append(res)
+            if ck is not None:
+                ck.maybe(k, hist)
             if (target and res.accuracy >= target
                     and hist.rounds_to_target is None):
                 hist.rounds_to_target = k + 1
@@ -712,7 +923,9 @@ class FLExperiment:
         return hist
 
     def _run_async_paged(self, selector, rounds: int, target: float,
-                         include_initial_round: bool) -> FLHistory:
+                         include_initial_round: bool,
+                         history: Optional[FLHistory] = None,
+                         ck: Optional["_Checkpointer"] = None) -> FLHistory:
         """Buffered-asynchronous ticks over the paged store — the host
         composition of ``async_engine._paged_async_step_program``'s jitted
         pieces, with store paging in between.
@@ -738,8 +951,8 @@ class FLExperiment:
             self.aggregator.registry_name,
             tuple(sorted(self.aggregator.params().items())),
             self.compressor, self.traced_context(), self.fl.feature_layer,
-            self.channel, self.churn)
-        hist = FLHistory()
+            self.channel, self.churn, self.faults, self.quarantine_after)
+        hist = history if history is not None else FLHistory()
         if include_initial_round or (self.clusters is None and
                                      getattr(selector, "needs_clusters",
                                              False)):
@@ -774,16 +987,22 @@ class FLExperiment:
             idx_c = np.minimum(idx_h, n - 1)
             images_sel = self._client_images(idx_c)
             labels_sel = self._labels[jnp.asarray(idx_c)]
-            state, T, E, cand, fired_cand, w_cand, traces = prog.plan(
+            state, T, E, cand, fired_cand, w_cand, good, traces = prog.plan(
                 state, arr_f, idx, mask, self._sizes)
-            state, rows = prog.train(state, images_sel, labels_sel)
+            state, rows = prog.train(state, idx, images_sel, labels_sel)
             live = idx_h[mask_h]
-            if live.size:
-                store.stage(live, rows[jnp.asarray(np.flatnonzero(mask_h))])
+            # persist the GOOD lanes only (== mask when fault-free): a
+            # dropped/corrupted dispatch never reaches the store, exactly
+            # like the dense tick's sentinel scatter
+            good_h = np.asarray(good)
+            stored = idx_h[good_h]
+            if stored.size:
+                store.stage(stored,
+                            rows[jnp.asarray(np.flatnonzero(good_h))])
             cand_h = np.asarray(cand)
             cand_rows = store.gather_staged(cand_h)
-            state, acc, div_cand, g_delta = prog.fire(
-                state, cand_rows, w_cand, fired_cand,
+            state, acc, div_cand, g_delta, ok_cand = prog.fire(
+                state, cand, cand_rows, w_cand, fired_cand,
                 self.test_images, self.test_labels)
             fired_h = np.asarray(fired_cand)
             fired_ids = cand_h[fired_h]
@@ -791,11 +1010,15 @@ class FLExperiment:
             # stats-table upkeep, the per-tick version of the sync loop's
             # _finish_paged_round: every stale bound grows by this fold's
             # global step (exactly 0 on an empty fire); fired clients get
-            # their exact refreshed divergence back from the fold
+            # their exact refreshed divergence back from the fold —
+            # except lanes the non-finite guard rejected (ok_cand=False),
+            # whose divergence entry must not turn NaN
             stats.drift[store.touched] += float(g_delta)
-            if fired_ids.size:
-                stats.divergence[fired_ids] = np.asarray(div_cand)[fired_h]
-                stats.drift[fired_ids] = 0.0
+            ok_h = np.asarray(ok_cand)
+            ok_ids = cand_h[ok_h]
+            if ok_ids.size:
+                stats.divergence[ok_ids] = np.asarray(div_cand)[ok_h]
+                stats.drift[ok_ids] = 0.0
             self._gvec_host = np.asarray(state.params)
             self._rounds_since_refresh = min(
                 self._rounds_since_refresh + 1, np.iinfo(np.int32).max - 1)
@@ -808,21 +1031,185 @@ class FLExperiment:
             hist.participation.append(float(part))
             hist.staleness.append(float(stale))
             hist.active.append(float(active))
+            if ck is not None and ck.due(k):
+                # fold the carry into the host tables (read-only on the
+                # device state), snapshot, keep driving the same carry
+                self._fold_async_carry(state)
+                ck.save(k, hist)
             if (target and acc >= target
                     and hist.rounds_to_target is None):
                 hist.rounds_to_target = k + 1
                 break
-        # fold the carry back into the host source of truth: params/key/
-        # opt state, plus the scheduler columns. divergence/drift stay
-        # host-maintained (the table already holds the refreshed values).
+        self._fold_async_carry(state)
+        return hist
+
+    def _fold_async_carry(self, state: RoundState):
+        """Fold an async carry back into the host source of truth:
+        params/key/opt state, plus the scheduler columns. divergence/
+        drift stay host-maintained (the table already holds the refreshed
+        values). Read-only on ``state`` — callable mid-loop (checkpoint
+        snapshots) as well as at the end of the run."""
         spec = self.engine.flat_spec
         self.global_params = unflatten_vector(spec, state.params)
         self.key = state.key
         self.aggregator.load_flat_state(state.opt_state, spec)
         sched = state.sched
-        for col in ("age", "t_done", "avail", "t_now"):
+        stats = self.stats
+        for col in ("age", "t_done", "avail", "t_now", "faults", "strikes"):
             np.copyto(getattr(stats, col), np.asarray(getattr(sched, col)))
-        return hist
+
+    # ------------------------------------------------------------------
+    # checkpoint / resume (repro.train.checkpoint under the hood)
+    # ------------------------------------------------------------------
+    def save_checkpoint(self, directory: str, round_idx: int,
+                        history: Optional[FLHistory] = None,
+                        spec_dict: Optional[dict] = None,
+                        keep_last: int = 3) -> str:
+        """Atomic full-state snapshot → ``directory/round_%06d/``.
+
+        Contents: the flat global row, the JAX PRNG key, the aggregator's
+        flat optimizer state, cluster labels, the O(N) stats table
+        (``leaves.npz`` + ``manifest.json`` via ``repro.train.checkpoint``)
+        and the client store's rows as chunk-streamed ``store_*.npz``
+        blocks — O(chunk·P) peak host memory; a paged store writes only
+        its touched rows (the base row is rebuilt from the spec). The
+        numpy RNG state, the run history and the (optional) spec ride in
+        the manifest extras. The snapshot directory is written under a
+        temporary name and ``os.replace``d into place, then the
+        ``LATEST`` pointer flips — a killed writer can never leave a
+        half-readable snapshot behind. Returns the snapshot path.
+        """
+        from repro.train import checkpoint as ckpt
+        os.makedirs(directory, exist_ok=True)
+        final = os.path.join(directory, "round_%06d" % int(round_idx))
+        tmp = final + ".tmp"
+        import shutil
+        for stale in (tmp, final):
+            if os.path.isdir(stale):
+                shutil.rmtree(stale)
+        gvec = tree_flatten_vector(self.global_params)
+        opt = self.aggregator.init_flat_state(gvec)
+        tree = {
+            "gvec": np.asarray(gvec),
+            "key": np.asarray(self.key),
+            "labels": (np.zeros(self.fed.num_clients, np.int32)
+                       if self.cluster_labels is None
+                       else np.asarray(self.cluster_labels, np.int32)),
+            "opt": (np.zeros((0,), np.float32) if opt is None
+                    else np.asarray(opt)),
+            "stats": {k: np.asarray(v)
+                      for k, v in self.stats._asdict().items()},
+        }
+        extra = {
+            "round": int(round_idx),
+            "store_kind": self._store.kind,
+            "opt_none": opt is None,
+            "has_clusters": self.cluster_labels is not None,
+            "rounds_since_refresh": int(self._rounds_since_refresh),
+            "rng_state": self.rng.bit_generator.state,
+            "spec": spec_dict,
+            "history": None if history is None else history.to_dict(),
+        }
+        ckpt.save_checkpoint(tmp, tree, step=int(round_idx), extra=extra)
+        self._save_store_rows(tmp)
+        os.replace(tmp, final)
+        ckpt.write_latest(directory, os.path.basename(final))
+        if keep_last:
+            snaps = sorted(d for d in os.listdir(directory)
+                           if d.startswith("round_")
+                           and not d.endswith(".tmp"))
+            for name in snaps[:-keep_last]:
+                shutil.rmtree(os.path.join(directory, name),
+                              ignore_errors=True)
+        return final
+
+    def _save_store_rows(self, path: str) -> None:
+        """Stream the client store into ``store_*.npz`` blocks of
+        ``{idx, rows}`` pairs — O(chunk·P) peak beyond the store itself."""
+        store = self._store
+        if store.kind == "paged":
+            tidx = np.flatnonzero(store.touched)
+            for ci, s in enumerate(range(0, tidx.size, self.chunk_size)):
+                b = tidx[s:s + self.chunk_size]
+                np.savez(os.path.join(path, "store_%05d.npz" % ci),
+                         idx=b, rows=np.asarray(store.gather(b)))
+            return
+        start, ci = 0, 0
+        for block in store.iter_chunks(self.chunk_size):
+            c = block.shape[0]
+            np.savez(os.path.join(path, "store_%05d.npz" % ci),
+                     idx=np.arange(start, start + c), rows=np.asarray(block))
+            start += c
+            ci += 1
+
+    def load_checkpoint(self, directory: str,
+                        expected_spec: Optional[dict] = None):
+        """Restore a :meth:`save_checkpoint` snapshot into this FRESHLY
+        BUILT experiment (same spec — pass ``expected_spec`` to have the
+        manifest's recorded spec verified). ``directory`` may be the
+        snapshot itself or a parent holding ``round_*`` dirs + ``LATEST``.
+        Returns ``(round_idx, history)`` — feed them back into
+        :meth:`run` as ``checkpoint_offset``/``history`` with
+        ``include_initial_round=False`` for a bit-identical continuation.
+        """
+        from repro.train import checkpoint as ckpt
+        path = ckpt.latest_checkpoint(directory)
+        extra = ckpt.checkpoint_extra(path)
+        if extra.get("store_kind") != self._store.kind:
+            raise ValueError(
+                f"checkpoint was taken on store={extra.get('store_kind')!r}"
+                f" but this experiment runs store={self._store.kind!r}")
+        if (expected_spec is not None and extra.get("spec") is not None
+                and extra["spec"] != expected_spec):
+            diff = sorted(k for k in set(extra["spec"]) | set(expected_spec)
+                          if extra["spec"].get(k) != expected_spec.get(k))
+            raise ValueError(
+                "checkpoint spec does not match this experiment's spec "
+                f"(differing fields: {diff}); resume rebuilds from the "
+                "checkpoint's own spec")
+        gvec = tree_flatten_vector(self.global_params)
+        template = {
+            "gvec": np.asarray(gvec),
+            "key": np.asarray(self.key),
+            "labels": np.zeros(self.fed.num_clients, np.int32),
+            "opt": (np.zeros((0,), np.float32) if extra["opt_none"]
+                    else np.zeros(gvec.shape, np.float32)),
+            "stats": {k: np.asarray(v)
+                      for k, v in self.stats._asdict().items()},
+        }
+        tree = ckpt.load_checkpoint(path, template)
+        spec = self.engine.flat_spec
+        self.global_params = unflatten_vector(spec, jnp.asarray(tree["gvec"]))
+        self.key = jnp.asarray(tree["key"])
+        if extra["has_clusters"]:
+            self.cluster_labels = np.asarray(tree["labels"])
+            self.clusters = clusters_from_labels(self.cluster_labels,
+                                                 self.fl.num_clusters)
+        else:
+            self.cluster_labels = None
+            self.clusters = None
+        self.aggregator.reset()
+        if not extra["opt_none"]:
+            self.aggregator.load_flat_state(jnp.asarray(tree["opt"]), spec)
+        st = self.stats
+        for name, arr in tree["stats"].items():
+            np.copyto(getattr(st, name), arr)
+        self.rng.bit_generator.state = extra["rng_state"]
+        self._rounds_since_refresh = int(extra["rounds_since_refresh"])
+        self._load_store_rows(path)
+        if self._store.kind == "paged":
+            self._gvec_host = np.asarray(tree["gvec"], np.float32)
+        hist = (None if extra.get("history") is None
+                else FLHistory.from_dict(extra["history"]))
+        return int(extra["round"]), hist
+
+    def _load_store_rows(self, path: str) -> None:
+        import glob
+        for fn in sorted(glob.glob(os.path.join(path, "store_*.npz"))):
+            with np.load(fn) as data:
+                idx, rows = data["idx"], data["rows"]
+            if idx.size:
+                self._store.scatter(idx, jnp.asarray(rows))
 
     # ------------------------------------------------------------------
     # device-resident path: the whole experiment as one lax.scan program
@@ -863,11 +1250,14 @@ class FLExperiment:
         # the stats plane: async-capable programs carry the store's stats
         # table (device copy) in the sched slot — incremental run() calls
         # continue the virtual clock because load_traced_state folds it
-        # back. Synchronous programs carry None. A paged store has no
-        # [N, P] buffer; its programs run plane="stats" and never read
-        # client_params, so a zero-row placeholder rides the slot.
+        # back. Synchronous programs carry None, UNLESS fault tracking /
+        # quarantine needs the fault-counter columns in the carry. A
+        # paged store has no [N, P] buffer; its programs run
+        # plane="stats" and never read client_params, so a zero-row
+        # placeholder rides the slot.
         sched = (self.stats.device()
-                 if getattr(self.aggregator, "async_capable", False)
+                 if (getattr(self.aggregator, "async_capable", False)
+                     or self._track_faults)
                  else None)
         client_plane = (self._store.buffer
                         if self._store.kind == "dense"
@@ -906,7 +1296,9 @@ class FLExperiment:
                         tctx=self.traced_context(),
                         feature_layer=self.fl.feature_layer,
                         rounds=rounds, with_init=with_init,
-                        channel=self.channel, churn=self.churn)
+                        channel=self.channel, churn=self.churn,
+                        faults=self.faults,
+                        quarantine_after=self.quarantine_after)
         state = self.traced_state()
         if self.p_shards:
             # P-axis GSPMD: lay the carry's P-sized dims out over a `model`

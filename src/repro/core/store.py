@@ -69,8 +69,13 @@ class ClientStats(NamedTuple):
     events (async) since the client last contributed; ``t_done`` is the
     virtual completion time of the client's in-flight update (+inf when
     idle — finiteness IS the in-flight flag); ``avail`` is the churn mask
-    selection filters on; ``cell`` records the serving cell; ``t_now`` is
-    the scheduler's virtual clock (0-d scalar).
+    selection filters on; ``cell`` records the serving cell; ``faults``
+    counts fault events charged to the client (lost/corrupted/deadline-
+    dropped uploads — the O(N) fault-counter column); ``strikes`` counts
+    non-finite payloads detected at the fold — once it reaches
+    ``quarantine_after`` the client is excluded from selection exactly
+    like ``avail=False``; ``t_now`` is the scheduler's virtual clock
+    (0-d scalar).
 
     As a NamedTuple this is a JAX pytree: the async engine carries it
     through ``lax.scan`` with device leaves, while the host drivers keep
@@ -84,6 +89,8 @@ class ClientStats(NamedTuple):
     t_done: np.ndarray                # [N] f32  in-flight completion (+inf idle)
     avail: np.ndarray                 # [N] bool churn/availability mask
     cell: np.ndarray                  # [N] i32  serving cell id
+    faults: np.ndarray                # [N] f32  fault events charged
+    strikes: np.ndarray               # [N] f32  non-finite payloads caught
     t_now: np.ndarray                 # []  f32  scheduler virtual clock
 
     @classmethod
@@ -94,7 +101,23 @@ class ClientStats(NamedTuple):
                    t_done=np.full(num_clients, np.inf, np.float32),
                    avail=np.ones(num_clients, bool),
                    cell=np.full(num_clients, cell, np.int32),
+                   faults=np.zeros(num_clients, np.float32),
+                   strikes=np.zeros(num_clients, np.float32),
                    t_now=np.zeros((), np.float32))
+
+    @classmethod
+    def create_traced(cls, num_clients: int, cell: int = 0) -> "ClientStats":
+        """The same fresh table with device leaves — constructible inside
+        a traced program (the cohort path has no host table to ship in)."""
+        return cls(divergence=jnp.zeros(num_clients, jnp.float32),
+                   drift=jnp.zeros(num_clients, jnp.float32),
+                   age=jnp.zeros(num_clients, jnp.float32),
+                   t_done=jnp.full(num_clients, jnp.inf, jnp.float32),
+                   avail=jnp.ones(num_clients, bool),
+                   cell=jnp.full(num_clients, cell, jnp.int32),
+                   faults=jnp.zeros(num_clients, jnp.float32),
+                   strikes=jnp.zeros(num_clients, jnp.float32),
+                   t_now=jnp.zeros((), jnp.float32))
 
     def device(self) -> "ClientStats":
         """A device-leaved copy — the traced scheduler carry."""

@@ -12,6 +12,7 @@ Also provides a synthetic token stream for LM-scale FL experiments.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import Dict, Tuple
 
@@ -54,7 +55,9 @@ def make_dataset(name: str, num_samples: int, seed: int = 0,
     c = cfg.input_channels
     # templates define the CLASSES — they depend only on the dataset name so
     # train/test splits (different seeds) share the same class structure.
-    tmpl_rng = np.random.default_rng(abs(hash(name)) % (2**31))
+    # crc32, NOT hash(): str hashing is salted per process, and a
+    # checkpointed run must resume bit-identically in a fresh interpreter.
+    tmpl_rng = np.random.default_rng(zlib.crc32(name.encode()))
     templates = _class_templates(tmpl_rng, cfg.num_classes, h, w, c)
     rng = np.random.default_rng(seed)
     labels = rng.integers(0, cfg.num_classes, num_samples).astype(np.int32)

@@ -98,6 +98,12 @@ def flat_aggregate(flat, weights, *, mask=None, normalize: bool = True,
     w = weights.astype(jnp.float32)
     if mask is not None:
         w = jnp.where(mask, w, 0.0)
+    # Non-finite guard: a NaN/Inf row would poison the fold even at
+    # weight 0 (0·NaN = NaN in the weighted reduction), so zero the
+    # payload of every masked-out lane before either backend sees it.
+    # Bitwise no-op for finite inputs: a 0-weight finite row contributed
+    # exactly 0.0 to each partial sum already.
+    flat = jnp.where((w > 0.0)[:, None], flat, jnp.zeros((), flat.dtype))
     if normalize:
         # the max() guard only bites when every lane is masked out (sum=0):
         # an empty round then aggregates to zeros instead of poisoning the

@@ -22,13 +22,54 @@ from repro.api import (ExperimentSpec, FleetSpec, build_cohort,
 from repro.core import adjusted_rand_index
 
 
-def run_spec(spec: ExperimentSpec):
+def run_spec(spec: ExperimentSpec, *, checkpoint_every: int = 0,
+             checkpoint_dir: str = None):
     """Build + run one experiment; returns (exp, history, clustering ARI)."""
     exp = build_experiment(spec)
     hist = exp.run(rounds=spec.rounds,
-                   target_accuracy=spec.target_accuracy or None)
+                   target_accuracy=spec.target_accuracy or None,
+                   checkpoint_every=checkpoint_every,
+                   checkpoint_dir=checkpoint_dir,
+                   checkpoint_spec=(spec.to_dict() if checkpoint_every
+                                    else None))
     # Cluster-free drivers (e.g. paged async with a divergence-ranked
     # selector) never fit Alg. 2's K-means; there is no partition to score.
+    ari = (adjusted_rand_index(exp.cluster_labels, exp.fed.majority)
+           if exp.cluster_labels is not None else None)
+    return exp, hist, ari
+
+
+def resume_spec(directory: str):
+    """The (authoritative) spec a checkpoint directory was taken under,
+    plus its completed-round count."""
+    from repro.train import checkpoint as ckpt
+    path = ckpt.latest_checkpoint(directory)
+    extra = ckpt.checkpoint_extra(path)
+    if not extra.get("spec"):
+        raise SystemExit(
+            f"checkpoint {path!r} carries no ExperimentSpec (it was saved "
+            "by FLExperiment.save_checkpoint without spec_dict); rebuild "
+            "the experiment yourself and call exp.load_checkpoint")
+    return ExperimentSpec.from_dict(extra["spec"]), int(extra["round"])
+
+
+def run_resume(directory: str, *, rounds: int = 0,
+               checkpoint_every: int = 0):
+    """Rebuild from a checkpoint's own recorded spec, restore, and run the
+    remaining rounds as a bit-identical continuation of the killed run."""
+    spec, done = resume_spec(directory)
+    total = rounds or spec.rounds
+    exp = build_experiment(spec)
+    rnd, hist = exp.load_checkpoint(directory, expected_spec=spec.to_dict())
+    remaining = max(total - rnd, 0)
+    if remaining:
+        hist = exp.run(rounds=remaining, include_initial_round=False,
+                       target_accuracy=spec.target_accuracy or None,
+                       checkpoint_every=checkpoint_every,
+                       checkpoint_dir=directory if checkpoint_every else None,
+                       checkpoint_offset=rnd,
+                       checkpoint_spec=spec.to_dict(),
+                       history=hist)
     ari = (adjusted_rand_index(exp.cluster_labels, exp.fed.majority)
            if exp.cluster_labels is not None else None)
     return exp, hist, ari
@@ -97,7 +138,12 @@ def spec_from_args(args) -> ExperimentSpec:
             return ExperimentSpec.from_json(f.read())
     sigma = args.sigma if args.sigma == "H" else float(args.sigma)
     extra = {}
+    if getattr(args, "aggregator", None):
+        extra["aggregator"] = args.aggregator
     if getattr(args, "async_buffer", 0):
+        if extra.get("aggregator"):
+            raise SystemExit("--async-buffer selects the fedbuff aggregator "
+                             "itself; it conflicts with --aggregator")
         # --async-buffer M routes the run onto the buffered-asynchronous
         # tick engine via the fedbuff:M[:alpha] aggregator
         extra["aggregator"] = (
@@ -112,6 +158,10 @@ def spec_from_args(args) -> ExperimentSpec:
         extra["k_max"] = args.k_max
     if getattr(args, "div_refresh_every", 0):
         extra["div_refresh_every"] = args.div_refresh_every
+    if getattr(args, "faults", None):
+        extra["faults"] = args.faults
+    if getattr(args, "quarantine_after", 0):
+        extra["quarantine_after"] = args.quarantine_after
     return ExperimentSpec(dataset=args.dataset, selection=args.selection,
                           allocator=_allocator_ref(args.allocator,
                                                    args.box_correct),
@@ -135,6 +185,10 @@ def main(argv=None):
                     help=f"one of {SELECTORS.names()} (':arg' allowed)")
     ap.add_argument("--allocator", default="sao",
                     help=f"one of {ALLOCATORS.names()} (e.g. 'fedl:2.0')")
+    ap.add_argument("--aggregator", default=None,
+                    help="aggregation strategy (':arg' allowed), e.g. "
+                         "'fedavgm:0.9', or the robust folds 'trimmed:0.1' "
+                         "/ 'clipnorm:1.0'; default fedavg")
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--clients", type=int, default=40)
     ap.add_argument("--per-round", type=int, default=10)
@@ -181,10 +235,64 @@ def main(argv=None):
                     help="paged store: refresh exact divergences every R "
                          "selections/ticks (1 = exact dense signal every "
                          "time; 0 = lazy drift-bounded staleness)")
+    ap.add_argument("--faults", default=None, metavar="KIND:RATE[,...]",
+                    help="fault-injection spec, e.g. 'outage:0.1,"
+                         "corrupt:0.05' — kinds: outage, chan_outage "
+                         "(needs a stateful --channel, e.g. gauss-markov), "
+                         "corrupt, byzantine[+byz_scale:S], deadline:T_s; "
+                         "rates in [0,1]")
+    ap.add_argument("--quarantine-after", type=int, default=0, metavar="K",
+                    help="quarantine a client after K non-finite uploads "
+                         "(0 = never); pairs with robust aggregators "
+                         "--aggregator trimmed:f / clipnorm:c")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
+                    help="snapshot the full run state (global row, opt "
+                         "state, stats, RNG, store rows) every K rounds "
+                         "(atomic; needs --checkpoint-dir)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="directory for round_* snapshots + LATEST pointer")
+    ap.add_argument("--resume", default=None, metavar="DIR",
+                    help="resume from the latest complete snapshot under "
+                         "DIR; the checkpoint's own recorded spec is "
+                         "authoritative (other experiment flags ignored). "
+                         "Continuation is bit-identical to the unkilled run")
     ap.add_argument("--dump-spec", action="store_true",
                     help="print the resolved ExperimentSpec JSON and exit")
     ap.add_argument("--out", default=None)
     args = ap.parse_args(argv)
+
+    if args.checkpoint_every < 0:
+        raise SystemExit("--checkpoint-every must be >= 0")
+    if args.checkpoint_every and not (args.checkpoint_dir or args.resume):
+        raise SystemExit("--checkpoint-every needs --checkpoint-dir "
+                         "(or --resume, which keeps snapshotting in place)")
+
+    if args.resume:
+        if args.spec or args.cohort > 1 or args.cells:
+            raise SystemExit("--resume restores the checkpoint's own spec; "
+                             "it conflicts with --spec/--cohort/--cells")
+        if args.checkpoint_dir and args.checkpoint_dir != args.resume:
+            raise SystemExit("--resume continues snapshotting into the "
+                             "resumed directory; drop --checkpoint-dir")
+        exp, hist, ari = run_resume(args.resume,
+                                    checkpoint_every=args.checkpoint_every)
+        spec = exp.spec
+        result = {
+            "spec": spec.to_dict(),
+            "resumed_from": args.resume,
+            "final_accuracy": hist.accuracy[-1],
+            "accuracy": hist.accuracy,
+            "total_T_s": hist.total_T, "total_E_J": hist.total_E,
+            "rounds_to_target": hist.rounds_to_target,
+            "clustering_ari": ari,
+        }
+        print(json.dumps({k: v for k, v in result.items()
+                          if k not in ("accuracy", "spec")}, indent=1))
+        print("accuracy curve:", np.round(hist.accuracy, 3).tolist())
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(result) + "\n")
+        return
 
     spec = spec_from_args(args)
     if args.dump_spec:
@@ -192,6 +300,11 @@ def main(argv=None):
         return
 
     if spec.cohort > 1 or spec.num_cells > 1:
+        if args.checkpoint_every:
+            raise SystemExit("--checkpoint-every is a single-lane feature; "
+                             "the vmapped cohort program has no host "
+                             "boundary to snapshot at (drop --cohort/"
+                             "--cells or the checkpoint flags)")
         if spec.target_accuracy:
             print(f"warning: --cohort runs all {spec.rounds} rounds as one "
                   "compiled program; target_accuracy early stopping is "
@@ -218,7 +331,8 @@ def main(argv=None):
                 f.write(json.dumps(result) + "\n")
         return
 
-    exp, hist, ari = run_spec(spec)
+    exp, hist, ari = run_spec(spec, checkpoint_every=args.checkpoint_every,
+                              checkpoint_dir=args.checkpoint_dir)
     result = {
         "spec": spec.to_dict(),
         "final_accuracy": hist.accuracy[-1],

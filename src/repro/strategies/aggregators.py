@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.api.registry import AGGREGATORS, Strategy, StrategyError
 from repro.core.algorithms import ServerMomentum
 from repro.kernels import ops
-from repro.utils.trees import (tree_flatten_vector,
+from repro.utils.trees import (flatten_stacked, tree_flatten_vector,
+                               tree_unflatten_vector,
                                tree_weighted_mean_stacked, unflatten_vector)
 
 
@@ -169,3 +170,94 @@ class FedAvgMAggregator(Strategy):
 
     def load_flat_state(self, opt_state, spec):
         self._opt.v = unflatten_vector(spec, opt_state)
+
+
+class _FlatRobustMixin:
+    """Shared host plumbing of the robust aggregators: the stacked-pytree
+    ``aggregate`` contract is served by routing through the FLAT fold, so
+    the host loop and the scanned program share one implementation."""
+
+    def reset(self):
+        pass
+
+    def init_flat_state(self, global_vec):
+        return None
+
+    def load_flat_state(self, opt_state, spec):
+        pass
+
+    def aggregate(self, global_params, stacked_params, weights):
+        rows = flatten_stacked(stacked_params)
+        gvec = tree_flatten_vector(global_params)
+        vec, _ = self.aggregate_flat(
+            gvec, rows, jnp.asarray(weights, jnp.float32), None)
+        return tree_unflatten_vector(global_params, vec)
+
+
+@AGGREGATORS.register("trimmed")
+@dataclass
+class TrimmedMeanAggregator(_FlatRobustMixin, Strategy):
+    """Coordinate-wise trimmed mean (Yin et al. 2018): per coordinate,
+    sort the participating updates, drop the ``⌊f·k⌋`` smallest and
+    largest, average the rest UNWEIGHTED. Spelled ``trimmed:f`` with the
+    trim fraction ``f ∈ [0, 0.5)`` — the defense holds while the
+    adversarial fraction stays below ``f``; a byzantine update that
+    negates-and-amplifies (``repro.core.faults``) lands in the trimmed
+    tails coordinate by coordinate and never touches the fold.
+
+    Zero-weight lanes (padding, dropped/failed uploads) are excluded by
+    sorting them to ``+inf`` above every real value; ``f = 0``
+    degenerates to the unweighted mean of the participants (NOT eq. (4):
+    trimming is rank-based, so D_n-weighting does not compose with it).
+    """
+
+    f: float = 0.1
+
+    fuses_with_engine = False
+    traceable = True
+
+    def __post_init__(self):
+        if not 0.0 <= self.f < 0.5:
+            raise StrategyError(
+                f"trimmed-mean fraction must lie in [0, 0.5); got {self.f}")
+
+    def aggregate_flat(self, global_vec, rows, weights, opt_state):
+        valid = weights.astype(jnp.float32) > 0.0
+        k = jnp.sum(valid.astype(jnp.int32))
+        t = jnp.floor(self.f * k.astype(jnp.float32)).astype(jnp.int32)
+        # invalid lanes sort above every real coordinate, so ranks
+        # [0, k) are exactly the participants
+        srt = jnp.sort(jnp.where(valid[:, None], rows, jnp.inf), axis=0)
+        ranks = jnp.arange(rows.shape[0], dtype=jnp.int32)[:, None]
+        keep = (ranks >= t) & (ranks < k - t)
+        total = jnp.sum(jnp.where(keep, srt, 0.0), axis=0)
+        denom = jnp.maximum(k - 2 * t, 1).astype(jnp.float32)
+        return total / denom, opt_state
+
+
+@AGGREGATORS.register("clipnorm")
+@dataclass
+class ClipNormAggregator(_FlatRobustMixin, Strategy):
+    """Eq. (4) with per-client update-norm clipping: each row's delta
+    from the global is rescaled to ``‖w_n − g‖ ≤ c`` before the weighted
+    mean. Spelled ``clipnorm:c`` (``c > 0``, in flat-plane L2 units).
+    Bounds any single client's pull on the global row — the
+    magnitude-attack complement to ``trimmed:f``'s rank defense, and it
+    PRESERVES the D_n weighting the trimmed mean must give up."""
+
+    c: float = 1.0
+
+    fuses_with_engine = False
+    traceable = True
+
+    def __post_init__(self):
+        if not self.c > 0.0:
+            raise StrategyError(
+                f"clipnorm radius must be > 0; got {self.c}")
+
+    def aggregate_flat(self, global_vec, rows, weights, opt_state):
+        delta = rows - global_vec[None, :]
+        nrm = jnp.sqrt(jnp.sum(jnp.square(delta), axis=1, keepdims=True))
+        scale = jnp.minimum(1.0, self.c / jnp.maximum(nrm, 1e-12))
+        clipped = global_vec[None, :] + delta * scale
+        return ops.flat_aggregate(clipped, weights), opt_state

@@ -1,5 +1,14 @@
 """Dependency-free pytree checkpointing: one .npz of leaves + a JSON
-manifest holding the key paths (restores exact tree structure and dtypes)."""
+manifest holding the key paths (restores exact tree structure and dtypes).
+
+Writes are ATOMIC: every file lands under a temporary name and is
+``os.replace``d into place, and the manifest is written LAST — readers
+treat its presence as the commit marker, so a writer killed mid-snapshot
+leaves either the previous complete checkpoint or no manifest at all,
+never a torn one. ``write_latest``/``latest_checkpoint`` maintain the
+``LATEST`` pointer a directory of ``round_*`` snapshots resolves through
+(with a newest-complete-snapshot fallback when the pointer itself is
+stale)."""
 from __future__ import annotations
 
 import json
@@ -25,10 +34,27 @@ def _flatten_with_names(tree):
     return out
 
 
+def _atomic_savez(path: str, **arrays) -> None:
+    """``np.savez`` through a temp file + ``os.replace`` (same dir, so the
+    rename is atomic on POSIX). A bare temp NAME would grow ``.npz`` under
+    savez's suffix logic — hand it an open file object instead."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+
+
+def _atomic_json(path: str, obj) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1)
+    os.replace(tmp, path)
+
+
 def save_checkpoint(path: str, tree: Any, step: int = 0, extra: dict = None):
     os.makedirs(path, exist_ok=True)
     leaves = _flatten_with_names(tree)
-    np.savez(os.path.join(path, "leaves.npz"), **leaves)
+    _atomic_savez(os.path.join(path, "leaves.npz"), **leaves)
     manifest = {
         "step": step,
         "keys": sorted(leaves.keys()),
@@ -36,8 +62,8 @@ def save_checkpoint(path: str, tree: Any, step: int = 0, extra: dict = None):
         "shapes": {k: list(v.shape) for k, v in leaves.items()},
         "extra": extra or {},
     }
-    with open(os.path.join(path, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
+    # the manifest commits the checkpoint — written last, atomically
+    _atomic_json(os.path.join(path, "manifest.json"), manifest)
 
 
 def load_checkpoint(path: str, template: Any):
@@ -58,3 +84,45 @@ def load_checkpoint(path: str, template: Any):
 def checkpoint_step(path: str) -> int:
     with open(os.path.join(path, "manifest.json")) as f:
         return json.load(f)["step"]
+
+
+def checkpoint_extra(path: str) -> dict:
+    """The ``extra`` dict a snapshot's manifest carries."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("extra", {})
+
+
+def is_checkpoint(path: str) -> bool:
+    """A directory is a complete snapshot iff its manifest committed."""
+    return os.path.isfile(os.path.join(path, "manifest.json"))
+
+
+def write_latest(directory: str, name: str) -> None:
+    """Atomically flip ``directory/LATEST`` to point at snapshot ``name``."""
+    tmp = os.path.join(directory, "LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(name + "\n")
+    os.replace(tmp, os.path.join(directory, "LATEST"))
+
+
+def latest_checkpoint(directory: str) -> str:
+    """Resolve a checkpoint reference: ``directory`` may be a snapshot
+    itself, or a parent of ``round_*`` snapshots — resolved through its
+    ``LATEST`` pointer, falling back to the newest COMPLETE snapshot (one
+    whose manifest committed) when the pointer is missing or stale."""
+    if is_checkpoint(directory):
+        return directory
+    pointer = os.path.join(directory, "LATEST")
+    if os.path.isfile(pointer):
+        with open(pointer) as f:
+            cand = os.path.join(directory, f.read().strip())
+        if is_checkpoint(cand):
+            return cand
+    if os.path.isdir(directory):
+        for name in sorted(os.listdir(directory), reverse=True):
+            if name.startswith("round_") and not name.endswith(".tmp"):
+                cand = os.path.join(directory, name)
+                if is_checkpoint(cand):
+                    return cand
+    raise FileNotFoundError(
+        f"no complete checkpoint found under {directory!r}")

@@ -1,0 +1,381 @@
+"""Fault-tolerant runtime: channel-grounded fault injection, quarantine +
+robust aggregation, and checkpoint/resume.
+
+The parity pins are the contract that makes fault injection trustworthy:
+the SAME faults must hit the SAME clients on every driver route (traced
+scan ≡ host loop, dense async ≡ paged async), because the masks are drawn
+from the engine's own PRNG stream right after the train split. Checkpoint
+/resume is pinned bit-identical — a resumed run and the uninterrupted run
+must be indistinguishable, which is also why ``make_dataset`` may not
+depend on the per-process ``hash()`` salt (regression below).
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import ExperimentSpec, FleetSpec, build_cohort, build_experiment
+from repro.core.faults import FaultSpec, draw_fault_masks
+from repro.kernels import ops
+from repro.utils.trees import tree_flatten_vector
+
+TINY = dict(dataset="fashion", clients=8, samples_per_client=16,
+            train_samples=160, test_samples=80, local_iters=2, batch_size=8,
+            rounds=3, devices_per_round=4, num_clusters=4,
+            learning_rate=0.05, selection="divergence")
+
+PAGED = dict(store="paged", k_max=8, div_refresh_every=1)
+
+
+def _gvec(exp):
+    return np.asarray(tree_flatten_vector(exp.global_params))
+
+
+# ---------------------------------------------------------------------------
+# satellite (a): the 0·NaN guard in the flat fold
+# ---------------------------------------------------------------------------
+
+
+def test_flat_aggregate_zero_weight_nan_guard():
+    """A zero-weight lane carrying NaN/Inf must not poison the fold —
+    0 * NaN is NaN in IEEE, so the kernel has to mask the payload, not
+    just the weight."""
+    rows = jnp.asarray([[1.0, 2.0], [jnp.nan, jnp.inf], [3.0, 6.0]])
+    w = jnp.asarray([1.0, 0.0, 3.0])
+    out = np.asarray(ops.flat_aggregate(rows, w))
+    ref = np.asarray(ops.flat_aggregate(rows[::2], w[::2]))
+    assert np.all(np.isfinite(out))
+    assert np.array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# FaultSpec parsing / validation
+# ---------------------------------------------------------------------------
+
+
+def test_fault_spec_parse_roundtrip():
+    fs = FaultSpec.from_string("outage:0.1,corrupt:0.05,byzantine:0.2,"
+                               "byz_scale:3,deadline:0.4")
+    assert fs.outage == 0.1 and fs.corrupt == 0.05
+    assert fs.byzantine == 0.2 and fs.byz_scale == 3.0
+    assert fs.deadline == 0.4
+    assert fs.active
+    assert FaultSpec.normalize(fs.to_dict()) == fs
+    assert FaultSpec.normalize(None) is None
+    assert not FaultSpec().active
+
+
+@pytest.mark.parametrize("bad", ["nonsense:0.5", "outage:1.5", "outage:-0.1",
+                                 "byz_scale:-1", "deadline:-2", "outage"])
+def test_fault_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        FaultSpec.from_string(bad)
+
+
+def test_fault_masks_shapes_and_rates():
+    import jax
+    fs = FaultSpec.from_string("outage:1.0,corrupt:0.0")
+    drop, corrupt = draw_fault_masks(jax.random.PRNGKey(0), fs, (32,))
+    assert bool(jnp.all(drop)) and not bool(jnp.any(corrupt))
+
+
+def test_chan_outage_needs_stateful_channel():
+    spec = ExperimentSpec(**TINY, faults="chan_outage:0.2")
+    with pytest.raises(ValueError, match="stateful"):
+        build_experiment(spec)
+    # a fading channel grounds the outage in its own gain state
+    ok = ExperimentSpec(**TINY, faults="chan_outage:0.2",
+                        fleet=FleetSpec(channel="gauss-markov"))
+    exp = build_experiment(ok)
+    exp.run(rounds=2)
+    assert np.all(exp.stats.faults >= 0)
+
+
+def test_build_cohort_rejects_faults():
+    spec = ExperimentSpec(**TINY, cohort=2, faults="outage:0.1")
+    with pytest.raises(ValueError, match="cohort"):
+        build_cohort(spec)
+
+
+# ---------------------------------------------------------------------------
+# robust aggregators
+# ---------------------------------------------------------------------------
+
+
+def test_robust_aggregator_parsing_and_validation():
+    from repro.api.registry import AGGREGATORS, StrategyError
+    tm = AGGREGATORS.resolve("trimmed:0.2")
+    assert tm.f == 0.2 and tm.traceable and not tm.fuses_with_engine
+    cn = AGGREGATORS.resolve("clipnorm:1.5")
+    assert cn.c == 1.5
+    with pytest.raises(StrategyError):
+        AGGREGATORS.resolve("trimmed:0.5")
+    with pytest.raises(StrategyError):
+        AGGREGATORS.resolve("clipnorm:0")
+
+
+def test_trimmed_mean_drops_outlier_lanes():
+    from repro.api.registry import AGGREGATORS
+    tm = AGGREGATORS.resolve("trimmed:0.25")
+    g = jnp.zeros(3)
+    rows = jnp.asarray([[1.0, 1.0, 1.0], [2.0, 2.0, 2.0],
+                        [3.0, 3.0, 3.0], [1e6, -1e6, 1e6],
+                        [np.nan, np.nan, np.nan]])    # padding lane
+    w = jnp.asarray([1.0, 1.0, 1.0, 1.0, 0.0])
+    out, _ = tm.aggregate_flat(g, rows, w, None)
+    # k=4, t=1, COORDINATE-wise: the 1e6 outlier tops columns 0/2 and
+    # bottoms column 1, so the survivors are (2,3) / (1,2) / (2,3)
+    assert np.allclose(np.asarray(out), [2.5, 1.5, 2.5])
+
+
+def test_clipnorm_degenerates_to_fedavg():
+    from repro.api.registry import AGGREGATORS
+    cn = AGGREGATORS.resolve("clipnorm:1e9")
+    g = jnp.asarray([1.0, -1.0, 0.5])
+    rows = jnp.asarray([[2.0, 0.0, 1.0], [0.0, -2.0, 0.0]])
+    w = jnp.asarray([1.0, 3.0])
+    out, _ = cn.aggregate_flat(g, rows, w, None)
+    assert np.array_equal(np.asarray(out),
+                          np.asarray(ops.flat_aggregate(rows, w)))
+
+
+def test_clipnorm_bounds_single_client_pull():
+    from repro.api.registry import AGGREGATORS
+    cn = AGGREGATORS.resolve("clipnorm:1.0")
+    g = jnp.zeros(4)
+    rows = jnp.asarray([[1e4, 0.0, 0.0, 0.0]])
+    out, _ = cn.aggregate_flat(g, rows, jnp.ones(1), None)
+    assert np.linalg.norm(np.asarray(out)) <= 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# route parity under faults
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_traced_host_parity_under_faults():
+    """Traced scan and host loop draw the SAME fault masks: one key split
+    after the train split, both routes. Accuracy and the O(N) fault
+    counters must agree bitwise."""
+    kw = dict(TINY, faults="outage:0.3,corrupt:0.2", quarantine_after=2)
+    e_t = build_experiment(ExperimentSpec(**kw))
+    e_h = build_experiment(ExperimentSpec(**kw))
+    h_t = e_t.run(rounds=TINY["rounds"])
+    # an unreachable target routes run() onto the legacy host loop
+    h_h = e_h.run(rounds=TINY["rounds"], target_accuracy=2.0)
+    assert h_t.accuracy == h_h.accuracy
+    assert np.array_equal(e_t.stats.faults, e_h.stats.faults)
+    assert np.array_equal(e_t.stats.strikes, e_h.stats.strikes)
+    assert np.array_equal(_gvec(e_t), _gvec(e_h))
+
+
+@pytest.mark.slow
+def test_async_dense_paged_parity_under_faults_and_churn():
+    """The hardest route pin: fedbuff + churn + outages + corruption on
+    the dense scanned tick vs the paged host composition."""
+    kw = dict(TINY, aggregator="fedbuff:2:0.5",
+              faults="outage:0.2,corrupt:0.1", quarantine_after=2,
+              churn_leave=0.05, churn_join=0.1)
+    e_d = build_experiment(ExperimentSpec(**kw))
+    e_p = build_experiment(ExperimentSpec(**kw, **PAGED))
+    h_d = e_d.run(rounds=TINY["rounds"])
+    h_p = e_p.run(rounds=TINY["rounds"])
+    assert h_d.accuracy == h_p.accuracy
+    assert np.array_equal(_gvec(e_d), _gvec(e_p))
+    for col in ("faults", "strikes", "t_done", "avail"):
+        assert np.array_equal(getattr(e_d.stats, col),
+                              getattr(e_p.stats, col)), col
+
+
+def test_all_failed_round_is_a_noop():
+    """outage:1.0 — every upload lost, every round. The global row must
+    stay frozen and finite (the explicit empty-fire degradation), never
+    divide by zero."""
+    from repro.core.clustering import clusters_from_labels
+    exp = build_experiment(ExperimentSpec(**TINY, faults="outage:1.0"))
+    # preset a trivial partition so the driver never forces the Alg.-2
+    # initial round (which trains all clients fault-free by design)
+    labels = np.zeros(exp.fed.num_clients, np.int32)
+    exp.cluster_labels = labels
+    exp.clusters = clusters_from_labels(labels, exp.fl.num_clusters)
+    g0 = _gvec(exp)
+    hist = exp.run(rounds=2, include_initial_round=False,
+                   target_accuracy=2.0)
+    assert np.array_equal(_gvec(exp), g0)
+    assert np.all(np.isfinite(np.asarray(hist.accuracy)))
+
+
+@pytest.mark.slow
+def test_quarantine_excludes_repeat_offenders():
+    """Non-finite uploads accumulate strikes; once a client crosses
+    ``quarantine_after`` it must vanish from selection."""
+    kw = dict(TINY, faults="corrupt:0.6", quarantine_after=2)
+    exp = build_experiment(ExperimentSpec(**kw))
+    exp.run(rounds=6, target_accuracy=2.0)
+    quarantined = np.flatnonzero(exp.stats.strikes >= 2)
+    assert quarantined.size                   # 0.6 corruption: certain
+    hist = exp.run(rounds=3, include_initial_round=False,
+                   target_accuracy=2.0)
+    for sel in hist.selected:
+        assert not np.intersect1d(np.asarray(sel), quarantined).size
+
+
+@pytest.mark.slow
+def test_byzantine_bounded_by_trimmed_mean():
+    """A negate-and-amplify byzantine cohort wrecks the plain eq. (4)
+    fold but lands in the trimmed tails: the robust global row must stay
+    far closer to the fault-free trajectory."""
+    clean = build_experiment(ExperimentSpec(**TINY))
+    plain = build_experiment(ExperimentSpec(
+        **TINY, faults="byzantine:0.25,byz_scale:50"))
+    robust = build_experiment(ExperimentSpec(
+        **TINY, faults="byzantine:0.25,byz_scale:50", aggregator="trimmed:0.3"))
+    clean.run(rounds=TINY["rounds"])
+    plain.run(rounds=TINY["rounds"])
+    robust.run(rounds=TINY["rounds"])
+    d_plain = np.linalg.norm(_gvec(plain) - _gvec(clean))
+    d_robust = np.linalg.norm(_gvec(robust) - _gvec(clean))
+    assert np.isfinite(d_robust)
+    assert d_robust < d_plain / 10.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+def _resume_pair(tmp_path, kw, rounds=4, cut=2):
+    """Run ``rounds`` uninterrupted; run ``cut`` + checkpoint; rebuild a
+    FRESH experiment, restore, run the rest. Returns both (exp, hist)."""
+    spec = ExperimentSpec(**kw)
+    full = build_experiment(spec)
+    h_full = full.run(rounds=rounds)
+
+    part = build_experiment(spec)
+    part.run(rounds=cut, checkpoint_every=cut, checkpoint_dir=str(tmp_path),
+             checkpoint_spec=spec.to_dict())
+
+    res = build_experiment(spec)
+    rnd, hist = res.load_checkpoint(str(tmp_path),
+                                    expected_spec=spec.to_dict())
+    assert rnd == cut
+    h_res = res.run(rounds=rounds - cut, include_initial_round=False,
+                    checkpoint_offset=rnd, history=hist)
+    return (full, h_full), (res, h_res)
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_bit_identical_paged_async(tmp_path):
+    """Kill-and-resume on the hardest route (paged + fedbuff + churn +
+    faults + quarantine) reproduces the uninterrupted run bit for bit —
+    global row, history, and every stats column including the fault and
+    strike counters."""
+    kw = dict(TINY, **PAGED, aggregator="fedbuff:2:0.5",
+              faults="outage:0.2,corrupt:0.3", quarantine_after=2,
+              churn_leave=0.05, churn_join=0.1)
+    (full, h_full), (res, h_res) = _resume_pair(tmp_path, kw)
+    assert h_full.accuracy == h_res.accuracy
+    assert h_full.T_k == h_res.T_k and h_full.E_k == h_res.E_k
+    assert np.array_equal(_gvec(full), _gvec(res))
+    for col in ("divergence", "drift", "age", "t_done", "avail", "faults",
+                "strikes", "t_now"):
+        assert np.array_equal(getattr(full.stats, col),
+                              getattr(res.stats, col)), col
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_dense_sync(tmp_path):
+    kw = dict(TINY, faults="outage:0.3", quarantine_after=1)
+    (full, h_full), (res, h_res) = _resume_pair(tmp_path, kw)
+    assert h_full.accuracy == h_res.accuracy
+    assert np.array_equal(_gvec(full), _gvec(res))
+    assert np.array_equal(full.stats.strikes, res.stats.strikes)
+
+
+def test_checkpoint_rejects_spec_mismatch(tmp_path):
+    spec = ExperimentSpec(**TINY)
+    exp = build_experiment(spec)
+    exp.run(rounds=2, checkpoint_every=2, checkpoint_dir=str(tmp_path),
+            checkpoint_spec=spec.to_dict())
+    other = ExperimentSpec(**dict(TINY, learning_rate=0.01))
+    fresh = build_experiment(other)
+    with pytest.raises(ValueError, match="learning_rate"):
+        fresh.load_checkpoint(str(tmp_path), expected_spec=other.to_dict())
+
+
+def test_dense_async_checkpoint_unsupported():
+    exp = build_experiment(ExperimentSpec(**TINY, aggregator="fedbuff:2"))
+    with pytest.raises(ValueError, match="paged"):
+        exp.run(rounds=2, checkpoint_every=1, checkpoint_dir="/tmp/nope")
+
+
+# ---------------------------------------------------------------------------
+# satellite (b): train/checkpoint.py hardening
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_bf16_roundtrip(tmp_path):
+    from repro.train import checkpoint as ckpt
+    tree = {"w": jnp.arange(7, dtype=jnp.bfloat16) / 3,
+            "b": np.arange(4, dtype=np.float32)}
+    path = str(tmp_path / "snap")
+    ckpt.save_checkpoint(path, tree, step=5)
+    out = ckpt.load_checkpoint(path, tree)
+    assert out["w"].dtype == jnp.bfloat16
+    # bf16 -> f32 widening is lossless, so the round trip is bitwise
+    assert np.array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert np.array_equal(out["b"], tree["b"])
+    assert ckpt.checkpoint_step(path) == 5
+
+
+def test_checkpoint_manifest_commits_last(tmp_path):
+    """A snapshot without a manifest is torn, not committed — readers
+    must skip it and fall back to the newest complete one."""
+    from repro.train import checkpoint as ckpt
+    good = str(tmp_path / "round_000002")
+    ckpt.save_checkpoint(good, {"x": np.ones(3)}, step=2)
+    torn = str(tmp_path / "round_000004")
+    os.makedirs(torn)
+    np.savez(os.path.join(torn, "leaves.npz"), x=np.zeros(3))
+    assert ckpt.is_checkpoint(good) and not ckpt.is_checkpoint(torn)
+    # a stale LATEST pointer at the torn snapshot is also skipped
+    ckpt.write_latest(str(tmp_path), "round_000004")
+    assert ckpt.latest_checkpoint(str(tmp_path)) == good
+    with pytest.raises(FileNotFoundError):
+        ckpt.latest_checkpoint(str(tmp_path / "empty"))
+
+
+def test_checkpoint_no_tmp_litter(tmp_path):
+    from repro.train import checkpoint as ckpt
+    path = str(tmp_path / "snap")
+    ckpt.save_checkpoint(path, {"x": np.ones(2)}, step=1)
+    assert not [f for f in os.listdir(path) if f.endswith(".tmp")]
+
+
+# ---------------------------------------------------------------------------
+# cross-process determinism regression
+# ---------------------------------------------------------------------------
+
+
+def test_dataset_deterministic_across_hash_seeds():
+    """make_dataset's class templates were seeded from ``hash(name)``,
+    which is salted per interpreter — a resumed run in a fresh process
+    trained on DIFFERENT data, breaking bit-identical --resume. Pin the
+    stable digest by drawing the dataset under two hash salts."""
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = ("import sys; sys.path.insert(0, 'src'); "
+            "from repro.data import make_dataset; "
+            "d = make_dataset('mnist', 8, seed=3); "
+            "print(repr((d.images.tobytes().hex()[:64], "
+            "int(d.labels.sum()))))")
+    outs = set()
+    for salt in ("0", "1234"):
+        r = subprocess.run([sys.executable, "-c", code], cwd=root,
+                           env={**os.environ, "PYTHONHASHSEED": salt},
+                           capture_output=True, text=True, check=True)
+        outs.add(r.stdout.strip())
+    assert len(outs) == 1, "dataset differs across interpreter hash salts"
